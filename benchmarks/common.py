@@ -1,0 +1,97 @@
+"""Shared benchmark utilities: resnet training loop + CSV output."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.microai_resnet import DATASETS, build_resnet
+from repro.core.policy import QuantPolicy
+from repro.data.synthetic import make_classification_dataset
+from repro.nn.module import Context, eval_context
+from repro.optim import multistep_lr, sgd
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def write_csv(name: str, header: str, rows) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    lines = [header] + [",".join(str(x) for x in r) for r in rows]
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"\n# {name}")
+    print("\n".join(lines))
+    return path
+
+
+_DATA_CACHE: Dict[Tuple, Tuple] = {}
+
+
+def dataset(name: str, n_train=1024, n_test=384, seed=0, extra_noise=0.0):
+    key = (name, n_train, n_test, seed, extra_noise)
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = make_classification_dataset(
+            name, n_train=n_train, n_test=n_test, seed=seed,
+            extra_noise=extra_noise)
+    return _DATA_CACHE[key]
+
+
+def train_resnet(dataset_name: str, filters: int, *, iters: int = 400,
+                 policy: Optional[QuantPolicy] = None, lr: float = 0.02,
+                 seed: int = 0, init_params=None, batch: int = 64,
+                 extra_noise: float = 0.0):
+    """Train the paper's ResNetv1-6 (float or QAT) on a synthetic dataset."""
+    x_tr, y_tr, x_te, y_te = dataset(dataset_name, extra_noise=extra_noise)
+    model = build_resnet(dataset_name, filters=filters)
+    params = init_params or model.init(jax.random.PRNGKey(seed))
+    opt = sgd(momentum=0.9, weight_decay=5e-4)
+    opt_state = opt.init(params)
+    sched = multistep_lr(lr, milestones=(iters * 2 // 3, iters * 5 // 6),
+                         gamma=0.13)
+    policy = policy or QuantPolicy.float32()
+
+    @jax.jit
+    def step(params, opt_state, xb, yb, lr):
+        def loss_fn(p):
+            ctx = Context(policy=policy, train=True)
+            logits = model.apply(p, xb, ctx)
+            oh = jax.nn.one_hot(yb, logits.shape[-1])
+            return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    for it in range(iters):
+        idx = rng.integers(0, x_tr.shape[0], batch)
+        params, opt_state, _ = step(params, opt_state, x_tr[idx], y_tr[idx],
+                                    sched(it))
+    return model, params, (x_te, y_te)
+
+
+def accuracy(model, params, test, policy: Optional[QuantPolicy] = None,
+             qstate=None) -> float:
+    x, y = test
+    ctx = eval_context(policy or QuantPolicy.float32(), qstate=qstate)
+    logits = model.apply(params, x, ctx)
+    if hasattr(logits, "dequantize"):
+        logits = logits.dequantize()
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def timeit(fn, *args, warmup=2, reps=10) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,59 @@
+"""Paper Tables A4/A6: the Appendix-E integer-ALU cycle model vs the paper's
+measured on-device inference times (MicroAI int8/int16, both boards).
+
+The cycle model is exact arithmetic (Table A6 op counts × cycle weights);
+the validation (claim C6) is that it reproduces the *shape* of Table A4 —
+Pearson r against the measured milliseconds across the filter sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import (inference_energy_uwh, inference_seconds,
+                                   resnet6_ops)
+
+from .common import write_csv
+
+# Paper Table A4, MicroAI int8 rows (ms per inference), filters 16..80.
+PAPER_A4 = {
+    ("nucleo-l452re-p", "int8"): [43.003, 107.705, 180.830, 272.986, 383.761,
+                                  659.996, 1034.033],
+    ("sparkfun-edge", "int8"): [39.417, 101.704, 172.551, 259.830, 375.840,
+                                658.441, 1003.365],
+    ("nucleo-l452re-p", "int16"): [44.915, 120.308, 205.499, 318.310, 459.880,
+                                   796.310, 1223.513],
+}
+FILTERS = [16, 24, 32, 40, 48, 64, 80]
+# UCI-HAR input: 128 samples x 9 channels (paper Sec. 6.1.1)
+SAMPLES, CHANNELS = 128, 9
+
+
+def run():
+    rows = []
+    model_ms = []
+    for f in FILTERS:
+        ops = resnet6_ops(f, SAMPLES, CHANNELS)
+        sec = inference_seconds(ops, "nucleo-l452re-p")
+        model_ms.append(sec * 1e3)
+        rows.append((f, ops.macc, ops.add, ops.shift, ops.maxsat, ops.cycles,
+                     round(sec * 1e3, 2)))
+    write_csv("cycle_model.csv",
+              "filters,macc,add,shift,maxsat,cycles,model_ms_nucleo", rows)
+
+    corr_rows = []
+    for (board, dtype), meas in PAPER_A4.items():
+        r = float(np.corrcoef(model_ms, meas)[0, 1])
+        scale = float(np.mean(np.array(meas) / np.array(model_ms)))
+        corr_rows.append((board, dtype, round(r, 5), round(scale, 3)))
+    write_csv("cycle_model_validation.csv",
+              "board,dtype,pearson_r_vs_paper_A4,mean_measured_over_model",
+              corr_rows)
+    return corr_rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table A5: energy per inference (µWh) = I·V·t on both boards.
+
+Reproduces the paper's headline efficiency ordering: the SparkFun Edge is
+~6x more power-efficient at equal work (subthreshold operation), and int8/16
+beat float by the inference-time ratio.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import (BOARDS, inference_energy_uwh,
+                                   inference_seconds, resnet6_ops)
+
+from .common import write_csv
+
+FILTERS = [16, 24, 32, 40, 48, 64, 80]
+
+
+def run():
+    rows = []
+    for f in FILTERS:
+        ops = resnet6_ops(f, 128, 9)
+        for board in BOARDS:
+            sec = inference_seconds(ops, board)
+            uwh = inference_energy_uwh(sec, board)
+            rows.append((f, board, round(sec * 1e3, 2), round(uwh, 4)))
+    write_csv("energy_model.csv", "filters,board,model_ms,model_uwh", rows)
+
+    # headline ratio check (paper: SparkFun ≈ 6x more efficient at same time)
+    e_n = inference_energy_uwh(1.0, "nucleo-l452re-p")
+    e_s = inference_energy_uwh(1.0, "sparkfun-edge")
+    print(f"# power ratio nucleo/sparkfun at equal runtime: {e_n/e_s:.2f}x")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

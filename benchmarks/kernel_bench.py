@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: integer vs float GEMM paths (paper Sec. 2/7 —
+"integer operations require much less computation", SMLAD/MXU argument).
+
+On this CPU container the jnp reference paths are timed (the Pallas kernels
+target TPU and run here only under interpret=True, which measures Python,
+not hardware).  Reported: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qformat
+from repro.kernels import ref
+
+from .common import timeit, write_csv
+
+
+def run():
+    m = k = n = 512
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    xf = jax.random.normal(kx, (m, k), jnp.float32)
+    wf = jax.random.normal(kw, (k, n), jnp.float32)
+    x8 = qformat.quantize(xf, jnp.int32(5), 8)
+    w8 = qformat.quantize(wf, jnp.int32(5), 8)
+    w16 = qformat.quantize(wf, jnp.int32(9), 16)
+    x16 = qformat.quantize(xf, jnp.int32(9), 16)
+    scale = jnp.exp2(-jnp.float32(5))
+
+    fns = {
+        "matmul_f32": jax.jit(lambda a, b: a @ b),
+        "qmm_int8_acc32": jax.jit(ref.qmm_ref),
+        "qmm_int16_acc32": jax.jit(ref.qmm_ref),
+        "qmm_requant_int8": jax.jit(
+            lambda a, b: ref.qmm_requant_ref(a, b, jnp.int32(5), width=8)),
+        "wq_matmul_int8w": jax.jit(
+            lambda a, b: ref.wq_matmul_ref(a, b, scale)),
+        "fake_quant_fwd": jax.jit(
+            lambda a: ref.fake_quant_ref(a, jnp.int32(5), width=8)),
+    }
+    args = {
+        "matmul_f32": (xf, wf),
+        "qmm_int8_acc32": (x8, w8),
+        "qmm_int16_acc32": (x16, w16),
+        "qmm_requant_int8": (x8, w8),
+        "wq_matmul_int8w": (xf, w8),
+        "fake_quant_fwd": (xf,),
+    }
+    base = None
+    rows = []
+    for name, fn in fns.items():
+        us = timeit(fn, *args[name])
+        if name == "matmul_f32":
+            base = us
+        rows.append((name, round(us, 1),
+                     f"{base/us:.2f}x_vs_f32" if base else ""))
+    write_csv("kernel_bench.csv", "name,us_per_call,derived", rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

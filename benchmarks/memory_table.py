@@ -1,0 +1,48 @@
+"""Paper Table A3: model ROM footprint vs filters per data type.
+
+ROM = parameters at logical width + inference-code overhead (cost_model).
+Validates claim C3 (÷2 at int16, ÷4 at int8).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.microai_resnet import build_resnet
+from repro.core import integerize
+from repro.core.cost_model import rom_bytes
+from repro.core.policy import QMode, QuantPolicy
+
+from .common import write_csv
+
+
+def run():
+    rows = []
+    for f in (16, 24, 32, 40, 48, 64, 80):
+        model = build_resnet("uci-har", filters=f)
+        params = jax.eval_shape(
+            lambda m=model: m.init(jax.random.PRNGKey(0)))
+        n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+        r32 = rom_bytes(n, 32)
+        r16 = rom_bytes(n, 16)
+        r8 = rom_bytes(n, 8)
+        rows.append((f, n, r32, r16, r8, round(r32 / r16, 2),
+                     round(r32 / r8, 2)))
+    write_csv("memory_table.csv",
+              "filters,params,rom_f32,rom_i16,rom_i8,ratio_16,ratio_8", rows)
+
+    # cross-check against a real integerized tree (not just n*width/8)
+    model = build_resnet("uci-har", filters=16)
+    params = model.init(jax.random.PRNGKey(0))
+    pol8 = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8)
+    i8 = integerize.integerize(params, pol8)
+    print(f"# integerized-tree check (f=16): f32={integerize.model_rom_bytes(params)}"
+          f" int8={integerize.model_rom_bytes(i8)}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Figs. 5-10 + Appendix B: accuracy vs filters for float32 / int16-PTQ
+/ int8-QAT / int9-PTQ, plus the TFLite-style affine-PTQ baseline the paper
+compares against (Sec. 7).
+
+Synthetic datasets stand in for UCI-HAR/SMNIST/GTSRB (offline container);
+the claim validated is the *relative* ordering (C1, C2, C4), not absolute
+accuracies — see EXPERIMENTS.md §Paper-claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.policy import Granularity, QMode, QuantPolicy
+
+from .common import accuracy, train_resnet, write_csv
+
+AFFINE_PTQ = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8,
+                         symmetric=False, power_of_two=False)
+
+
+def run(quick: bool = True):
+    datasets = ["uci-har", "smnist"] if quick else ["uci-har", "smnist",
+                                                    "gtsrb"]
+    filter_sweep = [8, 16, 24] if quick else [8, 16, 24, 32, 48]
+    # "hard" rows push the float model off the accuracy ceiling so the
+    # int8/int16 separation (paper C2/C4) is measurable, not saturated
+    difficulties = [("easy", 0.0), ("hard", 2.2)]
+    iters = 350 if quick else 700
+    rows = []
+    for ds in datasets:
+        for diff_name, noise in difficulties:
+            for f in filter_sweep:
+                model, params, test = train_resnet(ds, f, iters=iters,
+                                                   extra_noise=noise)
+                acc_f32 = accuracy(model, params, test)
+                acc_i16 = accuracy(model, params, test,
+                                   QuantPolicy.int16_ptq())
+                acc_i9 = accuracy(model, params, test, QuantPolicy.int9_ptq())
+                acc_i8ptq = accuracy(model, params, test, QuantPolicy(
+                    mode=QMode.EVAL, weight_bits=8, act_bits=8))
+                acc_aff = accuracy(model, params, test, AFFINE_PTQ)
+                # QAT fine-tune from the float model (paper Sec. 4.3)
+                _, qat_params, _ = train_resnet(
+                    ds, f, iters=iters // 2, policy=QuantPolicy.int8_qat(),
+                    lr=0.01, init_params=params, extra_noise=noise)
+                acc_i8qat = accuracy(model, qat_params, test,
+                                     QuantPolicy(mode=QMode.EVAL,
+                                                 weight_bits=8, act_bits=8))
+                n_params = sum(p.size for p in
+                               __import__("jax").tree_util.tree_leaves(params))
+                rows.append((ds, diff_name, f, n_params,
+                             round(acc_f32, 4), round(acc_i16, 4),
+                             round(acc_i8qat, 4), round(acc_i9, 4),
+                             round(acc_i8ptq, 4), round(acc_aff, 4)))
+    write_csv("quant_accuracy.csv",
+              "dataset,difficulty,filters,params,float32,int16_ptq,int8_qat,"
+              "int9_ptq,int8_ptq,int8_affine_ptq", rows)
+    return rows
+
+
+def main():
+    run(quick=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure + the roofline reader.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Each bench prints its CSV to stdout and writes benchmarks/out/<name>.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full filter sweeps / all datasets (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (cycle_model, energy_model, engine_compare,
+                            kernel_bench, memory_table, quant_accuracy,
+                            roofline)
+
+    benches = [
+        ("memory_table (Table A3)", memory_table.run, {}),
+        ("cycle_model (Tables A4/A6)", cycle_model.run, {}),
+        ("energy_model (Table A5)", energy_model.run, {}),
+        ("kernel_bench (Sec 2/7)", kernel_bench.run, {}),
+        ("engine_compare (Sec 6.2)", engine_compare.run, {}),
+        ("quant_accuracy (Figs 5-10, App B)", quant_accuracy.run,
+         {"quick": not args.full}),
+        ("roofline (deliverable g)", roofline.run, {}),
+    ]
+    failures = []
+    for name, fn, kw in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        t0 = time.time()
+        try:
+            fn(**kw)
+            print(f"== done in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        raise SystemExit(1)
+    print("\nall benches ok")
+
+
+if __name__ == "__main__":
+    main()

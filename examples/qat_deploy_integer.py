@@ -1,0 +1,83 @@
+"""End-to-end MicroAI flow (the paper's Fig. 3): general float training →
+int8 quantization-aware fine-tuning (Sec. 4.3) → activation calibration →
+full-integer deployment (Sec. 5.8) → on-"target" evaluation + the Appendix-E
+cycle/energy cost model for the MCU target.
+
+    PYTHONPATH=src python examples/qat_deploy_integer.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import integerize, ptq
+from repro.core.cost_model import (inference_energy_uwh, inference_seconds,
+                                   resnet6_ops)
+from repro.core.policy import QMode, QuantPolicy
+from repro.nn.module import Context
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import accuracy, dataset, train_resnet  # noqa: E402
+
+FILTERS = 16
+
+
+def main():
+    # 1. general float training (paper: "training" step)
+    print("[1/5] float32 training...")
+    model, params, test = train_resnet("uci-har", filters=FILTERS, iters=400)
+    print(f"      float32 accuracy: {accuracy(model, params, test):.4f}")
+
+    # 2. QAT fine-tune at int8 (paper: post-processing QuantizationAwareTraining)
+    print("[2/5] int8 QAT fine-tune...")
+    policy = QuantPolicy.int8_qat()
+    _, qat_params, _ = train_resnet("uci-har", filters=FILTERS, iters=200,
+                                    policy=policy, lr=0.01,
+                                    init_params=params)
+    eval_pol = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8)
+    print(f"      int8 QAT accuracy (fake-quant): "
+          f"{accuracy(model, qat_params, test, eval_pol):.4f}")
+
+    # 3. activation-range calibration (scale factors frozen, Sec. 4.1.4)
+    print("[3/5] calibrating activation ranges...")
+    x_te, _ = test
+    calib = eval_pol.with_mode(QMode.CALIB)
+
+    @jax.jit
+    def calib_step(p, xb):
+        ctx = Context(policy=calib, train=False)
+        model.apply(p, xb, ctx)
+        return ctx.stats
+
+    stats = {}
+    for i in range(4):
+        st = calib_step(qat_params, x_te[i * 32:(i + 1) * 32])
+        for k, v in st.items():
+            stats[k] = jnp.maximum(stats[k], v) if k in stats else v
+    qstate = ptq.ranges_to_qstate(stats, eval_pol)
+
+    # 4. integerize: the KerasCNN2C deployment step (float -> int8 + exponents)
+    print("[4/5] integerizing (deployment conversion)...")
+    iparams = integerize.integerize(qat_params, eval_pol, qstate)
+    rom = integerize.model_rom_bytes(iparams)
+    print(f"      deployed ROM: {rom} bytes "
+          f"(float32 was {integerize.model_rom_bytes(qat_params)})")
+
+    # 5. full-integer inference — int8 operands, int32 accumulators, shifts
+    print("[5/5] integer-engine inference...")
+    xq = integerize.quantize_input(x_te, qstate, "resnet6/conv1/in", 8)
+    ctx = Context(policy=eval_pol.with_mode(QMode.INTEGER), train=False,
+                  qstate=qstate)
+    out = model.apply(iparams, xq, ctx)
+    acc_int = float(jnp.mean(jnp.argmax(out, -1) == test[1]))
+    print(f"      INTEGER-engine accuracy: {acc_int:.4f}")
+
+    ops = resnet6_ops(FILTERS, 128, 9)
+    for board in ("nucleo-l452re-p", "sparkfun-edge"):
+        t = inference_seconds(ops, board)
+        e = inference_energy_uwh(t, board)
+        print(f"      {board}: {t*1e3:.1f} ms/inference, {e:.4f} uWh "
+              f"(Appendix-E cycle model)")
+
+
+if __name__ == "__main__":
+    main()

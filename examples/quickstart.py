@@ -1,0 +1,43 @@
+"""Quickstart: the paper's pipeline in one page.
+
+Train the paper's ResNetv1-6 in float32 on a (synthetic) UCI-HAR workload,
+then post-training-quantize to int16 (paper's Q7.9) and int8, and compare
+accuracy + model ROM — reproducing the paper's headline trade-off.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import integerize
+from repro.core.policy import QMode, QuantPolicy
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import accuracy, train_resnet  # noqa: E402
+
+
+def main():
+    print("training float32 ResNetv1-6 (filters=16) on synthetic UCI-HAR...")
+    model, params, test = train_resnet("uci-har", filters=16, iters=400)
+
+    acc_f32 = accuracy(model, params, test)
+    acc_i16 = accuracy(model, params, test, QuantPolicy.int16_ptq())
+    acc_i8 = accuracy(model, params, test,
+                      QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8))
+
+    rom_f32 = integerize.model_rom_bytes(params)
+    i16 = integerize.integerize(params, QuantPolicy.int16_ptq())
+    i8 = integerize.integerize(
+        params, QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8))
+
+    print(f"\n{'':>10} {'accuracy':>9} {'ROM bytes':>10} {'vs f32':>7}")
+    print(f"{'float32':>10} {acc_f32:9.4f} {rom_f32:10d} {'1.00x':>7}")
+    print(f"{'int16 PTQ':>10} {acc_i16:9.4f} {integerize.model_rom_bytes(i16):10d}"
+          f" {rom_f32/integerize.model_rom_bytes(i16):6.2f}x")
+    print(f"{'int8 PTQ':>10} {acc_i8:9.4f} {integerize.model_rom_bytes(i8):10d}"
+          f" {rom_f32/integerize.model_rom_bytes(i8):6.2f}x")
+    print("\npaper claims: int16 ≈ float32 (C1); ROM ÷2 / ÷4 (C3)")
+
+
+if __name__ == "__main__":
+    main()

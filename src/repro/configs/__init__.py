@@ -1,0 +1,1 @@
+from repro.configs.base import LONG_CONTEXT_FAMILIES, SHAPES, ArchConfig, ShapeSpec  # noqa: F401

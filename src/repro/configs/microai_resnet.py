@@ -1,0 +1,33 @@
+"""The paper's own evaluation network: ResNetv1-6 (Fig. 4) over the three
+dataset shapes (UCI-HAR / SMNIST / GTSRB).  Not part of the 40-cell LM matrix;
+used by the paper-claims benchmarks and the engine-compare study."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.nn.resnet import ResNetV1_6
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroAIDataset:
+    name: str
+    in_shape: Tuple[int, ...]     # per-sample (samples, channels) / (H, W, C)
+    classes: int
+    ndim: int
+
+
+DATASETS = {
+    "uci-har": MicroAIDataset("uci-har", (128, 9), 6, 1),
+    "smnist": MicroAIDataset("smnist", (39, 13), 10, 1),
+    "gtsrb": MicroAIDataset("gtsrb", (32, 32, 3), 43, 2),
+}
+
+
+def build_resnet(dataset: str = "uci-har", filters: int = 16,
+                 dtype=jnp.float32) -> ResNetV1_6:
+    ds = DATASETS[dataset]
+    return ResNetV1_6(in_channels=ds.in_shape[-1], filters=filters,
+                      classes=ds.classes, ndim=ds.ndim, dtype=dtype)

@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution: Qm.n power-of-two fixed-point
+quantization (PTQ + QAT, Sec. 4) and the integer inference-engine semantics
+(Sec. 5.8), plus the MCU cost model (Appendix E)."""
+from repro.core.policy import Granularity, QMode, QuantPolicy  # noqa: F401
+from repro.core.qformat import (  # noqa: F401
+    QTensor,
+    dequantize,
+    frac_bits_for,
+    integer_bits,
+    quantize,
+    quantize_dequantize,
+    quantize_tensor,
+    requantize,
+)
+from repro.core.quantizers import (  # noqa: F401
+    fake_quant,
+    fake_quant_affine,
+    quantize_activation,
+    quantize_weight,
+)

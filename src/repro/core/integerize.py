@@ -1,0 +1,207 @@
+"""Conversion of a trained float param tree to deployed integer form.
+
+This is the framework's "KerasCNN2C" step (paper Sec. 5.8): after training
+(and optional QAT) the float weights are converted to int8/int16 storage with
+power-of-two exponents; calibrated activation exponents are baked next to each
+layer as ``n_out`` so the engine can requantize with a single shift.
+
+Two flavours:
+
+* :func:`integerize` — the full integer engine (paper-faithful): kernels,
+  biases and activation exponents all integerized; activations then flow as
+  :class:`QTensor` (see ``nn/layers.py`` integer paths).
+* :func:`integerize_weights_only` — TPU serving mode: matmul/conv/embed
+  weights to int8 (+ per-channel exponents), everything else untouched;
+  activations stay bf16/f32 (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qformat
+from repro.core.policy import Granularity, QuantPolicy
+from repro.core.qformat import QTensor
+
+# Param leaf names that carry GEMM/conv weights (quantized), vs passthrough.
+_WEIGHT_LEAVES = ("kernel", "table")
+_BIAS_LEAVES = ("bias",)
+# Leaves that must stay float (norms, router, ssm internals).
+_SKIP_SUBSTR = ("ln", "rms", "norm", "router", "ssm", "bn", "a_log", "dt_", "decay")
+
+
+def _is_skipped(path: str, policy: QuantPolicy) -> bool:
+    parts = path.lower().split("/")
+    return any(any(s in seg for s in _SKIP_SUBSTR) for seg in parts[:-1]) or any(
+        k in parts for k in policy.skip_kinds
+    )
+
+
+def integerize(
+    params,
+    policy: QuantPolicy,
+    qstate: Optional[Dict[str, jnp.ndarray]] = None,
+    *,
+    param_path_to_site: Optional[Dict[str, str]] = None,
+) -> Dict:
+    """Full integer conversion (paper's deployment, Sec. 5.8).
+
+    ``qstate`` maps quant-site paths -> frozen output exponents.  Layer dicts
+    containing a quantized kernel get an ``n_out`` entry; lookup is by the
+    layer's param path with an optional explicit ``param_path_to_site`` remap.
+    """
+    wb, ab = policy.weight_bits, policy.act_bits
+    n_net = policy.network_frac_bits if policy.granularity is Granularity.PER_NETWORK else None
+    per_ch = policy.granularity is Granularity.PER_CHANNEL
+    qstate = qstate or {}
+
+    def site_for(layer_path: str) -> Optional[jnp.ndarray]:
+        key = f"{layer_path}/out" if layer_path else "out"
+        if param_path_to_site and layer_path in param_path_to_site:
+            key = param_path_to_site[layer_path]
+        if key in qstate:
+            return jnp.asarray(qstate[key], jnp.int32)
+        # fall back: match by suffix (scan-stacked / re-scoped layers)
+        for k, v in qstate.items():
+            if k.endswith(key):
+                return jnp.asarray(v, jnp.int32)
+        return None
+
+    def rec(node, path):
+        if isinstance(node, (list, tuple)):  # scanned-stack param lists
+            out = [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(out) if isinstance(node, tuple) else out
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        has_weight = any(k in node for k in _WEIGHT_LEAVES)
+        for k, v in node.items():
+            child_path = f"{path}/{k}" if path else k
+            if isinstance(v, (dict, list, tuple)):
+                out[k] = rec(v, child_path)
+            elif k in _WEIGHT_LEAVES and not _is_skipped(child_path, policy):
+                ca = (v.ndim - 1) if per_ch else None
+                out[k] = qformat.quantize_tensor(
+                    jnp.asarray(v), wb, channel_axis=ca,
+                    n_override=None if n_net is None else jnp.int32(n_net))
+            elif k in _BIAS_LEAVES and has_weight and not _is_skipped(child_path, policy):
+                # Bias at operand width with its own exponent; aligned into the
+                # int32 accumulator at run time (paper Sec. 5.8).
+                out[k] = qformat.quantize_tensor(
+                    jnp.asarray(v), wb,
+                    n_override=None if n_net is None else jnp.int32(n_net))
+            else:
+                out[k] = v
+        if has_weight and any(isinstance(x, QTensor) for x in out.values()):
+            n_out = jnp.int32(n_net) if n_net is not None else site_for(path)
+            if n_out is not None:
+                out["n_out"] = jnp.asarray(n_out, jnp.int32)
+        return out
+
+    return rec(params, "")
+
+
+def integerize_weights_only(params, *, bits: int = 8, per_channel: bool = True) -> Dict:
+    """Weight-only int conversion for TPU serving (embeddings included)."""
+
+    def rec(node, path):
+        if isinstance(node, (list, tuple)):  # scanned-stack param lists
+            out = [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(out) if isinstance(node, tuple) else out
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            child_path = f"{path}/{k}" if path else k
+            if isinstance(v, (dict, list, tuple)):
+                out[k] = rec(v, child_path)
+            elif k in _WEIGHT_LEAVES and not _is_skipped(child_path, QuantPolicy.serve_int8()) \
+                    and hasattr(v, "ndim") and v.ndim >= 2:
+                if per_channel:
+                    # per-out-channel; stacked leaves (scan layers / experts)
+                    # additionally keep every leading dim distinct, so each
+                    # layer/expert gets its own Qm.n grid (paper's per-layer
+                    # scales survive the stacking)
+                    ca = (tuple(range(v.ndim - 2)) + (v.ndim - 1,)
+                          if v.ndim > 2 else v.ndim - 1)
+                else:
+                    ca = None
+                out[k] = qformat.quantize_tensor(jnp.asarray(v), bits, channel_axis=ca)
+            else:
+                out[k] = v
+        return out
+
+    return rec(params, "")
+
+
+def fake_int8_weights(params, *, mesh=None, rules=None) -> Dict:
+    """int8-gather training: pass every GEMM/embed weight through
+    :func:`repro.core.quantizers.ste_int8_weight` (materialized int8 +
+    dequant, STE backward).  Same leaf selection as
+    :func:`integerize_weights_only`; master params stay float (exact
+    optimizer accumulation), the int8 copy exists only inside the step.
+
+    With (mesh, rules) given, the int8 tensor is pinned to the master's
+    FSDP sharding so the partitioner's gather-to-use transition crosses the
+    s8 edge (wire ÷4 vs f32) rather than the dequantized f32 edge."""
+    from repro.core.quantizers import ste_int8_weight
+
+    constrain = None
+    if mesh is not None and rules is not None:
+        from repro.dist.sharding import _spec_for_path
+        from jax.sharding import NamedSharding
+
+        def constrain(path, q):  # noqa: F811
+            spec = _spec_for_path(path, q.shape, rules, mesh)
+            return jax.lax.with_sharding_constraint(
+                q, NamedSharding(mesh, spec))
+
+    def rec(node, path):
+        if isinstance(node, (list, tuple)):
+            out = [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(out) if isinstance(node, tuple) else out
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            child_path = f"{path}/{k}" if path else k
+            if isinstance(v, (dict, list, tuple)):
+                out[k] = rec(v, child_path)
+            elif k in _WEIGHT_LEAVES and not _is_skipped(child_path, QuantPolicy.serve_int8()) \
+                    and hasattr(v, "ndim") and v.ndim >= 2:
+                keep = (tuple(range(v.ndim - 2)) + (v.ndim - 1,)
+                        if v.ndim > 2 else (v.ndim - 1,))
+                out[k] = ste_int8_weight(
+                    v, keep,
+                    (lambda q, p=child_path: constrain(p, q))
+                    if constrain else None)
+            else:
+                out[k] = v
+        return out
+
+    return rec(params, "")
+
+
+def quantize_input(x, qstate: Dict, site: str, width: int):
+    """Entry-point conversion the engine expects from the caller (Sec. 5.6:
+    ``x_fixed = clamp(x_float << INPUT_SCALE_FACTOR)``)."""
+    n = jnp.asarray(qstate[site], jnp.int32)
+    return QTensor(qformat.quantize(x, n, width), n, width)
+
+
+def model_rom_bytes(params) -> int:
+    """Deployed model size at logical widths (paper Table A3 semantics)."""
+    import jax
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QTensor)
+    ):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes_model + 4  # + exponent storage
+        elif hasattr(leaf, "size"):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total

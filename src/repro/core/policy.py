@@ -1,0 +1,91 @@
+"""Quantization policy — which tensors get quantized, how wide, what granularity.
+
+Mirrors the paper's configuration space (Sec. 4.1.2/4.1.3 + Sec. 7 discussion):
+
+  * widths: 8 / 9 / 16 bits (int9 is the Appendix-B PTQ variant); 4 is a
+    beyond-paper extension for weight-only serving.
+  * granularity: per-network (single n, e.g. Q7.9 => n=9), per-layer
+    (paper default for int8), per-channel (paper's future work; implemented).
+  * mode: off | qat (fake-quant fwd, STE bwd, ranges reassessed every step)
+          | calib (float fwd, record activation ranges)
+          | eval (fake-quant with frozen scales)
+          | integer (true int storage + int accumulators — serving path)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class QMode(enum.Enum):
+    OFF = "off"
+    QAT = "qat"
+    CALIB = "calib"
+    EVAL = "eval"
+    INTEGER = "integer"
+
+
+class Granularity(enum.Enum):
+    PER_NETWORK = "per_network"
+    PER_LAYER = "per_layer"
+    PER_CHANNEL = "per_channel"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Static quantization configuration (hashable; safe as a jit static arg)."""
+
+    mode: QMode = QMode.OFF
+    weight_bits: int = 8
+    act_bits: int = 8
+    # Accumulators are 2x operand width (paper Sec. 5.8); bias stored at
+    # accumulator width like TFLite/the paper's int32 biases.
+    granularity: Granularity = Granularity.PER_LAYER
+    # Per-network mode: one exponent for the whole net (paper's Q7.9 int16).
+    network_frac_bits: Optional[int] = None
+    # Asymmetric-range / non-pow2 scaling are the TFLite-style refinements the
+    # paper benchmarks against and lists as future work; kept as explicit
+    # switches so the comparison is runnable (beyond-paper).
+    symmetric: bool = True
+    power_of_two: bool = True
+    # Skip quantizing these layer kinds (router logits, norms are fp per
+    # DESIGN.md §5).
+    skip_kinds: tuple = ("router", "norm", "ssm_state")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != QMode.OFF
+
+    def with_mode(self, mode: QMode) -> "QuantPolicy":
+        return dataclasses.replace(self, mode=mode)
+
+    @staticmethod
+    def float32() -> "QuantPolicy":
+        return QuantPolicy(mode=QMode.OFF)
+
+    @staticmethod
+    def int16_ptq() -> "QuantPolicy":
+        """Paper's int16 flow: PTQ, per-network Q7.9 (n = 9)."""
+        return QuantPolicy(
+            mode=QMode.EVAL,
+            weight_bits=16,
+            act_bits=16,
+            granularity=Granularity.PER_NETWORK,
+            network_frac_bits=9,
+        )
+
+    @staticmethod
+    def int8_qat() -> "QuantPolicy":
+        """Paper's int8 flow: QAT, per-layer pow2 scales."""
+        return QuantPolicy(mode=QMode.QAT, weight_bits=8, act_bits=8)
+
+    @staticmethod
+    def int9_ptq() -> "QuantPolicy":
+        """Appendix-B variant: int9 PTQ beats int8 QAT."""
+        return QuantPolicy(mode=QMode.EVAL, weight_bits=9, act_bits=9)
+
+    @staticmethod
+    def serve_int8() -> "QuantPolicy":
+        """Integer serving path (true int8 storage + int32 accumulation)."""
+        return QuantPolicy(mode=QMode.INTEGER, weight_bits=8, act_bits=8)

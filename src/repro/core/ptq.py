@@ -1,0 +1,63 @@
+"""Post-training quantization (paper Sec. 4.2) + activation calibration.
+
+Flow:
+  1. Train the float network.
+  2. (activations) run ``calibrate`` over a few batches with the policy in
+     CALIB mode — the model records max-|x| per quant site; exponents are
+     derived with Eq. 1-2 and frozen.
+  3. (weights) exponents come analytically from the tensors (Sec. 4.1.4),
+     or from ``network_frac_bits`` in per-network mode (the paper's Q7.9).
+  4. Evaluate with EVAL mode (fake-quant on frozen scales) or deploy with
+     :mod:`repro.core.integerize` (true integers).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qformat
+from repro.core.policy import Granularity, QMode, QuantPolicy
+
+
+def ranges_to_qstate(
+    ranges: Dict[str, jax.Array], policy: QuantPolicy
+) -> Dict[str, jax.Array]:
+    """Convert recorded max-|x| stats to frozen exponents (Eq. 1-2)."""
+    if policy.granularity is Granularity.PER_NETWORK and policy.network_frac_bits is not None:
+        n_fixed = jnp.asarray(policy.network_frac_bits, jnp.int32)
+        return {k: n_fixed for k in ranges}
+    return {k: qformat.frac_bits_for(v, policy.act_bits) for k, v in ranges.items()}
+
+
+def calibrate(
+    apply_fn: Callable,
+    params,
+    batches: Iterable,
+    policy: QuantPolicy,
+    *,
+    existing: Optional[Dict[str, jax.Array]] = None,
+) -> Dict[str, jax.Array]:
+    """Run CALIB-mode forward passes, return frozen activation exponents.
+
+    ``apply_fn(params, batch, ctx) -> (out, stats)`` must thread a Context in
+    CALIB mode and return the collected stats dict (see
+    :func:`repro.train.trainer.make_calib_step` for the jit'd builder).
+    """
+    from repro.nn.module import Context
+
+    calib_policy = policy.with_mode(QMode.CALIB)
+
+    @jax.jit
+    def step(p, batch):
+        ctx = Context(policy=calib_policy, train=False)
+        apply_fn(p, batch, ctx)
+        return ctx.stats
+
+    acc: Dict[str, jax.Array] = dict(existing or {})
+    for batch in batches:
+        stats = step(params, batch)
+        for k, v in stats.items():
+            acc[k] = jnp.maximum(acc[k], v) if k in acc else v
+    return ranges_to_qstate(acc, policy)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    lm_token_batches,
+    make_classification_dataset,
+)
+from repro.data.pipeline import DataPipeline  # noqa: F401

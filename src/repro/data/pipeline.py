@@ -1,0 +1,75 @@
+"""Sharded, restart-deterministic host data pipeline.
+
+State = (seed, step).  Batch `step` is a pure function of the two, so a
+checkpoint stores two integers and a restart resumes mid-epoch exactly
+(DESIGN.md §4 fault tolerance).  Under multi-host each process materializes
+only its batch shard (process_index/process_count slicing); in this container
+process_count == 1 so the shard is the whole batch — the slicing logic is the
+same code path either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataPipeline:
+    """Wraps an indexable batch function with shard + device_put semantics."""
+
+    batch_fn: Callable[[int], Dict[str, np.ndarray]]  # step -> global batch
+    step: int = 0
+    sharding: Optional[object] = None   # NamedSharding tree or single sharding
+
+    def state(self) -> Dict[str, int]:
+        return {"step": self.step}
+
+    def restore(self, state: Dict[str, int]) -> None:
+        self.step = int(state["step"])
+
+    def _shard_host(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        pc, pi = jax.process_count(), jax.process_index()
+        if pc == 1:
+            return batch
+        return {k: v[v.shape[0] // pc * pi: v.shape[0] // pc * (pi + 1)]
+                for k, v in batch.items()}
+
+    def __next__(self):
+        batch = self._shard_host(self.batch_fn(self.step))
+        self.step += 1
+        if self.sharding is not None:
+            if isinstance(self.sharding, dict):
+                return {k: jax.device_put(v, self.sharding[k])
+                        for k, v in batch.items()}
+            return {k: jax.device_put(v, self.sharding) for k, v in batch.items()}
+        return batch
+
+    def __iter__(self):
+        return self
+
+
+def markov_batch_fn(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                    ) -> Callable[[int], Dict[str, np.ndarray]]:
+    """Step-indexed version of data.synthetic.lm_token_batches."""
+    base = np.random.default_rng(seed)
+    v_eff = min(vocab, 4096)
+    trans = base.dirichlet(np.full(64, 0.1), size=v_eff).astype(np.float32)
+    targets = base.integers(0, v_eff, size=(v_eff, 64))
+
+    def batch_fn(step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((seed * 1_000_003 + step) & 0x7FFFFFFF)
+        toks = np.zeros((batch, seq + 1), np.int64)
+        toks[:, 0] = rng.integers(0, v_eff, size=batch)
+        u = rng.random((batch, seq)).astype(np.float32)
+        for t in range(seq):
+            prev = toks[:, t]
+            cdf = np.cumsum(trans[prev], axis=-1)
+            pick = (u[:, t, None] < cdf).argmax(-1)
+            toks[:, t + 1] = targets[prev, pick]
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    return batch_fn

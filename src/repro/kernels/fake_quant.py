@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused fake-quantization (quantize->dequantize) tile op.
+
+QAT's inner elementwise op (paper Fig. 2): constrain a tensor to the Qm.n
+grid.  Fusing trunc/clip/rescale into one VMEM pass avoids three HBM
+round-trips that a naive jnp composition could incur when XLA fails to fuse
+across the custom_vjp boundary.  The exponent ``n`` is a scalar in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import qformat
+
+
+def _fq_kernel(n_ref, x_ref, o_ref, *, width: int):
+    n = n_ref[0].astype(jnp.float32)
+    scale = jnp.exp2(n)
+    inv = jnp.exp2(-n)
+    xf = x_ref[...].astype(jnp.float32) * scale
+    xq = jnp.clip(jnp.trunc(xf), qformat.qmin(width), qformat.qmax(width))
+    o_ref[...] = (xq * inv).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def fake_quant_pallas(
+    x: jax.Array,
+    n: jax.Array,
+    *,
+    width: int = 8,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fake-quantize x (any shape) on the 2^-n grid at `width` bits."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    lanes = 128
+    rem = (-flat.size) % lanes
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    x2 = flat.reshape(-1, lanes)
+    rows = x2.shape[0]
+    br = min(block_rows, rows)
+    remr = (-rows) % br
+    if remr:
+        x2 = jnp.pad(x2, ((0, remr), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    n_arr = jnp.asarray(n, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_fq_kernel, width=width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((br, lanes), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(n_arr, x2)
+    return out.reshape(-1)[: x.size].reshape(orig_shape)

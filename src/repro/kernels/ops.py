@@ -1,0 +1,119 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: the Pallas path targets TPU (and is validated on CPU in
+interpret mode by the kernel tests); everywhere else the pure-jnp oracle from
+``ref.py`` runs — it is the same math, so the framework is backend-portable
+exactly like the paper's "portable C library" claim for KerasCNN2C.
+
+Set ``repro.kernels.ops.FORCE`` to "pallas" / "ref" / "interpret" to override
+(used by tests and benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QTensor
+
+from . import ref
+from .fake_quant import fake_quant_pallas
+from .qconv1d import qconv1d_pallas
+from .qdecode_attn import qdecode_attn_pallas
+from .qmm import qmm_pallas, qmm_requant_pallas
+from .wq_matmul import wq_matmul_pallas
+
+FORCE: Optional[str] = None  # None | "pallas" | "ref" | "interpret"
+
+
+def _mode() -> str:
+    if FORCE is not None:
+        return FORCE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _2d(x):
+    """Collapse leading dims to rows for GEMM wrappers."""
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def qmm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Integer matmul with int32 accumulation; x (..., K), w (K, N)."""
+    x2, lead = _2d(x)
+    mode = _mode()
+    if mode == "pallas":
+        out = qmm_pallas(x2, w)
+    elif mode == "interpret":
+        out = qmm_pallas(x2, w, interpret=True)
+    else:
+        out = ref.qmm_ref(x2, w)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def qmm_requant(x, w, shift, *, width: int = 8):
+    x2, lead = _2d(x)
+    mode = _mode()
+    if mode == "pallas":
+        out = qmm_requant_pallas(x2, w, shift, width=width)
+    elif mode == "interpret":
+        out = qmm_requant_pallas(x2, w, shift, width=width, interpret=True)
+    else:
+        out = ref.qmm_requant_ref(x2, w, shift, width=width)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def wq_matmul(x: jax.Array, w: QTensor, *, transpose: bool = False) -> jax.Array:
+    """x (..., K) float @ dequant(w) — weight-only int8 path.
+
+    ``transpose=True`` computes x @ w.Tᵀ-style logits against an embedding
+    table stored (V, D): returns x @ table.T.
+    """
+    if transpose:
+        # Logits path: dequantize per-row exponents cannot ride the N axis of
+        # the kernel (they'd be per-K); fall back to dequant + matmul.
+        t = w.dequantize()
+        return jnp.matmul(x, t.T.astype(x.dtype))
+    x2, lead = _2d(x)
+    scale = jnp.squeeze(jnp.exp2(-w.n.astype(jnp.float32)))
+    if scale.ndim > 1:  # exotic multi-axis grids: dequant outside the kernel
+        y = jnp.matmul(x2.astype(jnp.float32),
+                       w.q.astype(jnp.float32)
+                       * jnp.exp2(-w.n.astype(jnp.float32))).astype(x.dtype)
+        return y.reshape(*lead, w.q.shape[-1])
+    mode = _mode()
+    if mode == "pallas":
+        out = wq_matmul_pallas(x2, w.q, scale, out_dtype=x.dtype)
+    elif mode == "interpret":
+        out = wq_matmul_pallas(x2, w.q, scale, out_dtype=x.dtype, interpret=True)
+    else:
+        out = ref.wq_matmul_ref(x2, w.q, scale, out_dtype=x.dtype)
+    return out.reshape(*lead, w.q.shape[-1])
+
+
+def fake_quant_fused(x, n, *, width: int = 8):
+    mode = _mode()
+    if mode == "pallas":
+        return fake_quant_pallas(x, n, width=width)
+    if mode == "interpret":
+        return fake_quant_pallas(x, n, width=width, interpret=True)
+    return ref.fake_quant_ref(x, n, width=width)
+
+
+def qconv1d(x, w, *, strides: int = 1, padding: str = "SAME"):
+    mode = _mode()
+    if mode == "pallas":
+        return qconv1d_pallas(x, w, stride=strides, padding=padding)
+    if mode == "interpret":
+        return qconv1d_pallas(x, w, stride=strides, padding=padding, interpret=True)
+    return ref.qconv1d_ref(x, w, stride=strides, padding=padding)
+
+
+def qdecode_attn(q, k_cache, v_cache, k_n, v_n, kv_len):
+    mode = _mode()
+    if mode == "pallas":
+        return qdecode_attn_pallas(q, k_cache, v_cache, k_n, v_n, kv_len)
+    if mode == "interpret":
+        return qdecode_attn_pallas(q, k_cache, v_cache, k_n, v_n, kv_len, interpret=True)
+    return ref.qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len)

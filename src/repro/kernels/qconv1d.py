@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: integer 1D convolution (the paper's primary layer).
+
+The paper's engine computes Conv1D as f x s x c x k MACs into an int32
+accumulator (Appendix E).  On TPU we restructure the same computation as K
+shifted (W' x C) @ (C x F) MXU matmuls accumulated in a VMEM scratch — the
+im2col is *implicit* (K shifted views of the same VMEM-resident row), so the
+input is read from HBM once, not K times.
+
+Blocking: one batch row per grid step (MCU-scale widths: W <= a few hundred,
+C,F <= 128 — a full padded row fits VMEM comfortably), F blocked on the lane
+dim.  Grid: (B, F/BF).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qconv1d_kernel(x_ref, w_ref, o_ref, *, ksize: int, wout: int, stride: int):
+    # x_ref: (1, Wpad, C) int8 ; w_ref: (K, C, BF) int8 ; o_ref: (1, Wout, BF) int32
+    acc = jnp.zeros(o_ref.shape[1:], jnp.int32)
+    for k in range(ksize):  # K is small & static: unrolled shifted matmuls
+        if stride == 1:
+            xs = x_ref[0, k : k + wout, :]
+        else:
+            xs = x_ref[0, k : k + (wout - 1) * stride + 1 : stride, :]
+        acc += jnp.dot(xs, w_ref[k], preferred_element_type=jnp.int32)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "bf", "interpret"))
+def qconv1d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x (B, W, C) int8, w (K, C, F) int8 -> (B, W', F) int32."""
+    b, width, c = x.shape
+    ksize, _, f = w.shape
+    if padding == "SAME":
+        wout = -(-width // stride)
+        pad_total = max(0, (wout - 1) * stride + ksize - width)
+        lo = pad_total // 2
+        x = jnp.pad(x, ((0, 0), (lo, pad_total - lo), (0, 0)))
+    elif padding == "VALID":
+        wout = (width - ksize) // stride + 1
+    else:
+        raise ValueError(padding)
+    bf_ = min(bf, f)
+    remf = (-f) % bf_
+    if remf:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, remf)))
+    fpad = w.shape[-1]
+    wpad = x.shape[1]
+    grid = (b, fpad // bf_)
+    out = pl.pallas_call(
+        functools.partial(_qconv1d_kernel, ksize=ksize, wout=wout, stride=stride),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, wpad, c), lambda i, j: (i, 0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((ksize, c, bf_), lambda i, j: (0, 0, j), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, wout, bf_), lambda i, j: (i, 0, j), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, wout, fpad), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :, :f]

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` is the straightforward XLA expression of the same math; kernel
+tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle (exact for
+the integer ops, tight rtol for the float ones).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qformat
+
+
+def qmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int (M,K) @ (K,N) with int32 accumulation."""
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def qmm_requant_ref(x, w, shift, *, width: int = 8):
+    acc = qmm_ref(x, w)
+    shift = jnp.asarray(shift, jnp.int32)
+    shifted = jnp.where(
+        shift >= 0,
+        jnp.right_shift(acc, jnp.maximum(shift, 0)),
+        jnp.left_shift(acc, jnp.maximum(-shift, 0)),
+    )
+    return jnp.clip(shifted, qformat.qmin(width), qformat.qmax(width)).astype(
+        qformat.storage_dtype(width)
+    )
+
+
+def wq_matmul_ref(x, wq, scale, out_dtype=jnp.float32):
+    w = wq.astype(jnp.float32) * jnp.broadcast_to(
+        jnp.asarray(scale, jnp.float32), (wq.shape[1],)
+    )
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+def fake_quant_ref(x, n, *, width: int = 8):
+    return qformat.quantize_dequantize(x, jnp.asarray(n, jnp.int32), width).astype(x.dtype)
+
+
+def qconv1d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """x (B,W,C) int, w (K,C,F) int -> (B,W',F) int32 via lax.conv."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NWC", "WIO", "NWC"))
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (stride,), padding,
+        dimension_numbers=dn, preferred_element_type=jnp.int32,
+    )
+
+
+def qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len):
+    """Dequantize-everything flash-free reference decode attention."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    k = k_cache.astype(jnp.float32) * jnp.exp2(-jnp.asarray(k_n, jnp.float32))
+    v = v_cache.astype(jnp.float32) * jnp.exp2(-jnp.asarray(v_n, jnp.float32))
+    qg = q.reshape(b, hkv, g, d)
+    # scores: (B, Hkv, G, S)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) / (d ** 0.5)
+    pos = jnp.arange(s)
+    scores = jnp.where(pos[None, None, None, :] < kv_len, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(b, hq, d).astype(q.dtype)

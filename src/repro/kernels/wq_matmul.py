@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: weight-only int8 matmul with in-kernel dequantization.
+
+Serving path for the large assigned archs (DESIGN.md §2): weights live in HBM
+as int8 with power-of-two exponents (paper's Qm.n storage — 4x less HBM
+traffic than f32, 2x less than bf16), activations stay bf16/f32.  Each weight
+block is dequantized *in VMEM* right before the MXU dot, so HBM sees only
+int8 bytes.  For memory-bound decode GEMVs this moves the memory-roofline
+term down by ~2x vs bf16 weights.
+
+Scales: scalar (per-tensor) or per-output-channel vector (beyond-paper
+per-filter mode) — passed as a precomputed f32 ``2^-n`` vector blocked along N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wq_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Dequantize the int8 weight block in VMEM, then hit the MXU in f32.
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        # Scale epilogue: per-channel 2^-n applied once at the end (exact —
+        # pow2 scale commutes with the f32 accumulation).
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple, axis):
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype"))
+def wq_matmul_pallas(
+    x: jax.Array,
+    wq: jax.Array,
+    scale: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M,K) f32/bf16 @ dequant((K,N) int8, scale) -> (M,N).
+
+    ``scale`` is ``2^-n`` with shape () or (N,).
+    """
+    m, k = x.shape
+    _, n = wq.shape
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)).reshape(1, n)
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
+    wp = _pad_to(_pad_to(wq, bk_, 0), bn_, 1)
+    sp = _pad_to(scale, bn_, 1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // bk_
+    grid = (mp // bm_, np_ // bn_, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_wq_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]

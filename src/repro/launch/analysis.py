@@ -1,0 +1,121 @@
+"""Post-compile HLO analysis: collective-bytes accounting + memory stats.
+
+``cost_analysis()`` does not expose collective traffic, so the dry-run parses
+the optimized (post-SPMD) HLO text and sums the result sizes of every
+communication op.  Wire-byte heuristics (ring algorithms, per participant):
+
+  all-gather         ≈ result_bytes × (n−1)/n            → counted as result
+  all-reduce         ≈ 2 × tensor_bytes × (n−1)/n        → counted as 2×result
+  reduce-scatter     ≈ input_bytes × (n−1)/n             → result × group_size
+  all-to-all         ≈ tensor_bytes × (n−1)/n            → counted as result
+  collective-permute ≈ tensor_bytes                      → counted as result
+
+These are the standard ring/torus estimates; group sizes are parsed from
+``replica_groups`` (iota or explicit form).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-category {count, result_bytes, wire_bytes} from optimized HLO."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("shapes"))
+        gs = _group_size(line)
+        if op == "all-reduce":
+            wire = 2 * rb * max(gs - 1, 1) / max(gs, 1)
+        elif op == "reduce-scatter":
+            wire = rb * max(gs - 1, 1)
+        elif op == "collective-permute":
+            wire = rb
+        else:  # all-gather / all-to-all
+            wire = rb * max(gs - 1, 1) / max(gs, 1)
+        d = out.setdefault(op, {"count": 0, "result_bytes": 0.0,
+                                "wire_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += rb
+        d["wire_bytes"] += wire
+    return out
+
+
+def total_wire_bytes(collectives: Dict[str, Dict[str, float]]) -> float:
+    return sum(d["wire_bytes"] for d in collectives.values())
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    """Extract whatever memory_analysis exposes on this backend."""
+    out: Dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+                 "host_argument_size_in_bytes", "host_output_size_in_bytes",
+                 "host_temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower()
+                or k in ("transcendentals",))}

@@ -1,0 +1,2 @@
+from repro.models.lm import CausalLM, EncDecLM  # noqa: F401
+from repro.models.registry import build_model, get_config, list_archs  # noqa: F401

@@ -1,0 +1,476 @@
+"""Grouped-query attention with RoPE, blocked (flash-style) softmax, KV cache
+and the paper-derived int8 KV-cache quantization.
+
+Three entry modes:
+  * train/prefill: blocked online-softmax attention (peak memory ~
+    block_q x block_kv per head, so 32k-seq prefill fits per-device HBM),
+  * decode: single-token step against a cache; float cache uses the same
+    einsum path, int8 cache dispatches to the ``qdecode_attn`` Pallas kernel
+    (dequant-in-VMEM, half the HBM bytes — DESIGN.md §2),
+  * cross-attention (whisper decoder): kv from encoder output, no causal mask.
+
+TP: head dims shard over the `model` mesh axis via sharding constraints on
+the (B, S, H, D) activations (heads-per-device = H / tp).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qformat
+from repro.core.qformat import QTensor
+from repro.nn.layers import Dense
+from repro.nn.module import Context, Params
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blocked online-softmax attention (pure-JAX flash)
+# --------------------------------------------------------------------------
+
+def blocked_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax attention; never materializes the full score matrix."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    # pad seq dims to block multiples
+    pq = (-sq) % bq
+    pkv = (-skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    sq_p, skv_p = q.shape[1], k.shape[1]
+    nq, nkv = sq_p // bq, skv_p // bkv
+
+    qb = q.reshape(b, nq, bq, hkv, g, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, nkv, bkv, hkv, d).astype(jnp.float32)
+    vb = v.reshape(b, nkv, bkv, hkv, d).astype(jnp.float32)
+
+    valid_kv = skv if kv_len is None else kv_len
+
+    def q_block(carry, iq):
+        qi = qb[:, iq]  # (B, bq, Hkv, G, D)
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_step(state, ikv):
+            m, l, acc = state
+            kj = kb[:, ikv]  # (B, bkv, Hkv, D)
+            vj = vb[:, ikv]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj)  # (B,Hkv,G,bq,bkv)
+            kpos = ikv * bkv + jnp.arange(bkv)
+            mask = kpos[None, :] < valid_kv
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            else:
+                mask = jnp.broadcast_to(mask, (bq, bkv))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vj)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,Hkv,G,bq,D)
+        return carry, out.transpose(0, 3, 1, 2, 4)  # (B,bq,Hkv,G,D)
+
+    _, outs = jax.lax.scan(q_block, (), jnp.arange(nq))
+    # outs: (nq, B, bq, Hkv, G, D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, hq, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash attention with custom VJP (recompute-in-backward)
+#
+# The naive blocked fwd above, when differentiated, makes lax.scan save every
+# per-block probability tensor P (B,Hkv,G,bq,bkv) — ≈8 GiB/layer at 4k seq —
+# which defeats the point of never materializing the score matrix.  The
+# custom VJP saves only (q, k, v, out, lse) and recomputes P blockwise in the
+# backward (the FlashAttention-2 recipe), so residuals are O(B·S·H·D).
+# --------------------------------------------------------------------------
+
+
+def _flash_fwd_inner(q, k, v, q_offset, valid_kv, causal, block_q, block_kv):
+    """Returns (out (B,Sq,Hq,D) f32, lse (B,Hkv,G,Sq) f32)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    bq, bkv = min(block_q, sq), min(block_kv, skv)
+    pq, pkv = (-sq) % bq, (-skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq, nkv = q.shape[1] // bq, k.shape[1] // bkv
+    qb = q.reshape(b, nq, bq, hkv, g, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, nkv, bkv, hkv, d).astype(jnp.float32)
+    vb = v.reshape(b, nkv, bkv, hkv, d).astype(jnp.float32)
+
+    def q_block(_, iq):
+        qi = qb[:, iq]
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_step(state, ikv):
+            m, l, acc = state
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kb[:, ikv])
+            kpos = ikv * bkv + jnp.arange(bkv)
+            mask = kpos[None, :] < valid_kv
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            else:
+                mask = jnp.broadcast_to(mask, (bq, bkv))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb[:, ikv])
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return _, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * bq, hq, d)[:, :sq]
+    lse = jnp.moveaxis(lses, 0, -2).reshape(b, hkv, g, nq * bq)[..., :sq]
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention(q, k, v, q_offset, kv_len, causal: bool,
+                    block_q: int = 512, block_kv: int = 1024):
+    """Online-softmax attention, O(S) memory in fwd AND bwd.
+
+    q (B,Sq,Hq,D); k/v (B,Skv,Hkv,D); GQA via Hq = G·Hkv.
+    q_offset/kv_len: int32 scalars (decode/prefill positioning + cache mask).
+    """
+    out, _ = _flash_fwd_inner(q, k, v, q_offset, kv_len, causal,
+                              block_q, block_kv)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, q_offset, kv_len, causal, block_q, block_kv):
+    out, lse = _flash_fwd_inner(q, k, v, q_offset, kv_len, causal,
+                                block_q, block_kv)
+    return out.astype(q.dtype), (q, k, v, out, lse, q_offset, kv_len)
+
+
+def _flash_bwd(causal, block_q, block_kv, res, gout):
+    q, k, v, out, lse, q_offset, valid_kv = res
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    bq, bkv = min(block_q, sq), min(block_kv, skv)
+    pq, pkv = (-sq) % bq, (-skv) % bkv
+    pad_q = lambda t: jnp.pad(t, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else t
+    pad_kv = lambda t: jnp.pad(t, ((0, 0), (0, pkv), (0, 0), (0, 0))) if pkv else t
+    qs = pad_q(q).astype(jnp.float32) * scale
+    kf = pad_kv(k).astype(jnp.float32)
+    vf = pad_kv(v).astype(jnp.float32)
+    go = pad_q(gout).astype(jnp.float32)
+    of = pad_q(out)
+    nq, nkv = qs.shape[1] // bq, kf.shape[1] // bkv
+    qb = qs.reshape(b, nq, bq, hkv, g, d)
+    gb = go.reshape(b, nq, bq, hkv, g, d).transpose(0, 1, 3, 4, 2, 5)
+    kb = kf.reshape(b, nkv, bkv, hkv, d)
+    vb = vf.reshape(b, nkv, bkv, hkv, d)
+    if pq:
+        lse = jnp.pad(lse, ((0, 0),) * 3 + ((0, pq),))
+    lseb = lse.reshape(b, hkv, g, nq, bq)
+    # D_i = rowsum(dout * out)
+    Dall = jnp.sum(go * of, axis=-1)                       # (B, Sq+p, Hq)
+    Db = Dall.reshape(b, nq, bq, hkv, g).transpose(0, 1, 3, 4, 2)
+
+    def q_block(carry, iq):
+        dk, dv = carry
+        qi = qb[:, iq]                                     # (B,bq,Hkv,G,D)
+        gi = gb[:, iq]                                     # (B,Hkv,G,bq,D)
+        lsei = lseb[:, :, :, iq]                           # (B,Hkv,G,bq)
+        Di = Db[:, iq]                                     # (B,Hkv,G,bq)
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_step(state, ikv):
+            dq_i, dk, dv = state
+            kj, vj = kb[:, ikv], vb[:, ikv]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj)
+            kpos = ikv * bkv + jnp.arange(bkv)
+            mask = kpos[None, :] < valid_kv
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            else:
+                mask = jnp.broadcast_to(mask, (bq, bkv))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            p = jnp.exp(s - lsei[..., None])               # recomputed P
+            dv_j = jnp.einsum("bhgqk,bhgqd->bkhd", p, gi)
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", gi, vj)
+            ds = p * (dp - Di[..., None])                  # (B,Hkv,G,bq,bkv)
+            dq_i = dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kj)
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qi)
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, ikv * bkv, bkv, 1) + dk_j,
+                ikv * bkv, axis=1)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, ikv * bkv, bkv, 1) + dv_j,
+                ikv * bkv, axis=1)
+            return (dq_i, dk, dv), None
+
+        dq0 = jnp.zeros((b, bq, hkv, g, d), jnp.float32)
+        (dq_i, dk, dv), _ = jax.lax.scan(kv_step, (dq0, dk, dv),
+                                         jnp.arange(nkv))
+        return (dk, dv), dq_i * scale
+
+    dk0 = jnp.zeros((b, nkv * bkv, hkv, d), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk, dv), dqs = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * bq, hq, d)[:, :sq]
+    return (dq.astype(q.dtype), dk[:, :skv].astype(k.dtype),
+            dv[:, :skv].astype(v.dtype), None, None)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, D)
+    k: jax.Array,        # (B, Skv, Hkv, D)  float or int8
+    v: jax.Array,
+    kv_len: jax.Array,
+    *,
+    k_n=None, v_n=None,  # int8 dequant exponents (paper Qm.n grid)
+) -> jax.Array:
+    """Single-token decode over the full cache, SPMD-shardable on Skv.
+
+    Unlike the blocked scan, this is one einsum + masked softmax + einsum, so
+    the XLA partitioner can shard the cache-length axis over `model`
+    (KV/context parallelism): each chip reads only its cache slice from HBM —
+    the decode-bound roofline term divides by the TP degree — and combines
+    with two tiny all-reduces (softmax max + sum).  int8 caches dequantize
+    inline on the paper's pow2 grid (shift semantics, exact).
+    """
+    b, _, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if k.dtype == jnp.int8:
+        kf = k.astype(jnp.float32) * jnp.exp2(-k_n.astype(jnp.float32))
+        vf = v.astype(jnp.float32) * jnp.exp2(-v_n.astype(jnp.float32))
+    else:
+        kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    qf = q[:, 0].reshape(b, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    mask = jnp.arange(skv)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(b, 1, hq, d)
+
+
+# --------------------------------------------------------------------------
+# KV cache (float or paper-quantized int8)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(
+    batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+    *, quantized: bool, dtype=jnp.bfloat16, cache_n: int = 3,
+) -> Dict[str, Any]:
+    """cache_n: frozen fractional-bit exponent for the int8 cache grid
+    (Q4.3 => range ±16, resolution 1/8 — post-norm K/V fit comfortably)."""
+    shape = (batch, max_len, n_kv_heads, head_dim)
+    if quantized:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_n": jnp.int32(cache_n),
+            "v_n": jnp.int32(cache_n),
+            "len": jnp.int32(0),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.int32(0),
+    }
+
+
+def update_kv_cache(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array):
+    """Insert (B, S_new, Hkv, D) at cache['len']; returns updated cache."""
+    idx = cache["len"]
+    if cache["k"].dtype == jnp.int8:
+        kq = qformat.quantize(k_new, cache["k_n"], 8)
+        vq = qformat.quantize(v_new, cache["v_n"], 8)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, idx, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, idx, axis=1)
+        return dict(cache, k=k, v=v, len=idx + k_new.shape[1])
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    return dict(cache, k=k, v=v, len=idx + k_new.shape[1])
+
+
+# --------------------------------------------------------------------------
+# The attention layer
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    use_qkv_bias: bool = False
+    use_out_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    dtype: Any = jnp.float32
+    name: str = "attn"
+
+    @property
+    def _q_dim(self):
+        return self.n_heads * self.head_dim
+
+    @property
+    def _kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+    def _projs(self):
+        mk = lambda o, nm, bias: Dense(self.d_model, o, use_bias=bias,
+                                       dtype=self.dtype, name=nm)
+        return {
+            "wq": mk(self._q_dim, "wq", self.use_qkv_bias),
+            "wk": mk(self._kv_dim, "wk", self.use_qkv_bias),
+            "wv": mk(self._kv_dim, "wv", self.use_qkv_bias),
+            "wo": Dense(self._q_dim, self.d_model, use_bias=self.use_out_bias,
+                        dtype=self.dtype, name="wo"),
+        }
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 4)
+        projs = self._projs()
+        return {nm: layer.init(k) for (nm, layer), k in zip(projs.items(), ks)}
+
+    def apply(
+        self,
+        params: Params,
+        x: jax.Array,  # (B, S, d_model)
+        ctx: Context,
+        *,
+        positions: Optional[jax.Array] = None,
+        cache: Optional[Dict[str, Any]] = None,
+        kv_source: Optional[jax.Array] = None,  # cross-attention
+        decode: bool = False,
+    ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        ctx = ctx.scope(self.name)
+        projs = self._projs()
+        b, s, _ = x.shape
+
+        q = projs["wq"].apply(params["wq"], x, ctx).reshape(b, s, self.n_heads, self.head_dim)
+        kv_in = x if kv_source is None else kv_source
+        skv = kv_in.shape[1]
+        k = projs["wk"].apply(params["wk"], kv_in, ctx).reshape(b, skv, self.n_kv_heads, self.head_dim)
+        v = projs["wv"].apply(params["wv"], kv_in, ctx).reshape(b, skv, self.n_kv_heads, self.head_dim)
+
+        q = ctx.constrain(q, "batch", None, "heads", None)
+        k = ctx.constrain(k, "batch", None, "kv_heads", None)
+        v = ctx.constrain(v, "batch", None, "kv_heads", None)
+
+        if positions is None:
+            if cache is not None and decode:
+                positions = cache["len"] + jnp.arange(s)
+            else:
+                positions = jnp.arange(s)
+        if self.use_rope and kv_source is None:
+            q = apply_rope(q, positions, self.rope_theta)
+            k = apply_rope(k, positions, self.rope_theta)
+
+        new_cache = None
+        if cache is not None and kv_source is None:
+            new_cache = update_kv_cache(cache, k, v)
+            if decode and s == 1 and cache["k"].dtype == jnp.int8 \
+                    and ctx.mesh is None:
+                # single-device int8 serving: fused Pallas dequant-attention
+                from repro.kernels import ops as kops
+
+                out = kops.qdecode_attn(
+                    q[:, 0].astype(jnp.float32),
+                    new_cache["k"], new_cache["v"],
+                    new_cache["k_n"], new_cache["v_n"], new_cache["len"],
+                )[:, None]  # (B,1,Hq,D) back
+                out = out.reshape(b, 1, self.n_heads, self.head_dim)
+            elif decode and s == 1:
+                out = decode_attention(
+                    q, new_cache["k"], new_cache["v"], new_cache["len"],
+                    k_n=new_cache.get("k_n"), v_n=new_cache.get("v_n"),
+                ).astype(q.dtype)
+            else:
+                kf = new_cache["k"]
+                vf = new_cache["v"]
+                if kf.dtype == jnp.int8:
+                    kf = qformat.dequantize(kf, new_cache["k_n"])
+                    vf = qformat.dequantize(vf, new_cache["v_n"])
+                # prefill-into-cache: causal relative to the pre-update length
+                out = flash_attention(
+                    q, kf.astype(q.dtype), vf.astype(q.dtype),
+                    cache["len"], new_cache["len"], self.causal)
+        else:
+            skv_len = jnp.int32(k.shape[1])
+            out = flash_attention(q, k, v, jnp.int32(0), skv_len,
+                                  self.causal and kv_source is None)
+
+        out = ctx.constrain(out, "batch", None, "heads", None)
+        y = projs["wo"].apply(params["wo"], out.reshape(b, s, self._q_dim), ctx)
+        return y, new_cache

@@ -1,0 +1,526 @@
+"""Core layers with three execution paths, mirroring the paper's engine:
+
+1. **float / fake-quant** — training, QAT (Sec. 4.3) and PTQ evaluation:
+   inputs, weights and biases are constrained to the Qm.n grid (in float),
+   outputs re-quantized after the computation (paper Fig. 2).
+2. **full integer** — the deployed inference engine (Sec. 5.8): int8/int16
+   operands, int32 accumulators, exact bit-shift requantization, saturation.
+   Activations flow between layers as :class:`QTensor`.
+3. **weight-only integer** — TPU serving adaptation for the large archs:
+   int8 weights dequantized on the fly (Pallas ``wq_matmul``), bf16/f32
+   activations.  (DESIGN.md §2.)
+
+Layer params are nested dicts; layers are frozen dataclasses with
+``init(key) -> params`` and ``apply(params, x, ctx) -> y``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qformat
+from repro.core.policy import QMode, QuantPolicy
+from repro.core.qformat import QTensor
+from repro.core.quantizers import quantize_activation, quantize_weight
+from repro.nn.module import Context, Params
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in_axes=None):
+    if fan_in_axes is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        if len(shape) > 2:  # conv kernels: all but the last axis feed in
+            fan_in = math.prod(shape[:-1])
+    else:
+        fan_in = math.prod(shape[a] for a in fan_in_axes)
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# Quant plumbing shared by compute layers
+# --------------------------------------------------------------------------
+
+def _fq_in(x, ctx: Context, site: str):
+    """Fake-quantize a layer input per the active policy (paper Fig. 2)."""
+    pol = ctx.policy
+    if not pol.enabled or pol.mode is QMode.INTEGER:
+        return x
+    if ctx.collecting:
+        ctx.record(site, x)
+    if pol.mode is QMode.CALIB:
+        return x
+    return quantize_activation(x, pol, frozen_n=ctx.frozen(site))
+
+
+def _fq_out(y, ctx: Context, site: str):
+    """Fake-quantize a layer output after computation (paper Fig. 2)."""
+    return _fq_in(y, ctx, site)
+
+
+def _fq_weight(w, ctx: Context, *, channel_axis: int):
+    pol = ctx.policy
+    if not pol.enabled or pol.mode in (QMode.INTEGER, QMode.CALIB):
+        return w
+    return quantize_weight(w, pol, channel_axis=channel_axis)
+
+
+def _fq_bias(b, ctx: Context):
+    pol = ctx.policy
+    if b is None or not pol.enabled or pol.mode in (QMode.INTEGER, QMode.CALIB):
+        return b
+    return quantize_weight(b, pol, channel_axis=None)
+
+
+def _nout_for(params: Params, ctx: Context, site: str) -> jax.Array:
+    """Frozen output exponent for the integer engine (from calibration)."""
+    if "n_out" in params:
+        return params["n_out"]
+    n = ctx.frozen(site)
+    if n is None:
+        raise ValueError(
+            f"integer mode needs a calibrated output exponent for site {ctx.key(site)!r}"
+        )
+    return n
+
+
+def _broadcast_channel_n(n: jax.Array, ndim: int, axis: int) -> jax.Array:
+    if jnp.ndim(n) == 0:
+        return n
+    shape = [1] * ndim
+    shape[axis] = -1
+    return n.reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# Dense
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    in_features: int
+    out_features: int
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    name: str = "dense"
+    kind: str = "gemm"  # matched against QuantPolicy.skip_kinds
+
+    def init(self, key) -> Params:
+        kw, kb = jax.random.split(key)
+        p: Params = {"kernel": lecun_normal(kw, (self.in_features, self.out_features),
+                                            self.param_dtype)}
+        if self.use_bias:
+            p["bias"] = zeros_init(kb, (self.out_features,), self.param_dtype)
+        return p
+
+    def apply(self, params: Params, x, ctx: Context):
+        ctx = ctx.scope(self.name)
+        kernel = params["kernel"]
+        bias = params.get("bias")
+        skip = self.kind in ctx.policy.skip_kinds
+
+        # ---- integer / weight-only paths --------------------------------
+        if isinstance(kernel, QTensor):
+            if isinstance(x, QTensor):
+                return self._integer_apply(params, x, ctx)
+            return self._weight_only_apply(kernel, bias, x)
+
+        # ---- float / fake-quant path -------------------------------------
+        if skip or not ctx.policy.enabled:
+            w = kernel.astype(self.dtype)
+            y = jnp.matmul(x.astype(self.dtype), w)
+            if bias is not None:
+                y = y + bias.astype(self.dtype)
+            return y
+        xq = _fq_in(x, ctx, "in")
+        w = _fq_weight(kernel, ctx, channel_axis=-1)
+        y = jnp.matmul(xq.astype(self.dtype), w.astype(self.dtype))
+        b = _fq_bias(bias, ctx)
+        if b is not None:
+            y = y + b.astype(self.dtype)
+        return _fq_out(y, ctx, "out")
+
+    # ---- paper's deployed engine: int operands, int32 acc, shift, saturate
+    def _integer_apply(self, params: Params, x: QTensor, ctx: Context) -> QTensor:
+        kernel: QTensor = params["kernel"]
+        bias = params.get("bias")
+        width = ctx.policy.act_bits
+        from repro.kernels import ops as kops  # local import; kernels are optional
+
+        acc = kops.qmm(x.q, kernel.q)  # int32 accumulator
+        n_w = _broadcast_channel_n(kernel.n, acc.ndim, -1)
+        n_acc = x.n + n_w
+        if bias is not None and isinstance(bias, QTensor):
+            b = qformat.align(bias.q, bias.n, n_acc, jnp.int32)
+            acc = acc + b
+        n_out = _nout_for(params, ctx, "out")
+        yq = qformat.requantize(acc, n_acc, n_out, width)
+        return QTensor(yq, n_out, width)
+
+    # ---- TPU serving path: int8 weights, float activations
+    def _weight_only_apply(self, kernel: QTensor, bias, x):
+        from repro.kernels import ops as kops
+
+        y = kops.wq_matmul(x.astype(self.dtype), kernel)
+        if bias is not None:
+            b = bias.dequantize() if isinstance(bias, QTensor) else bias
+            y = y + b.astype(y.dtype)
+        return y
+
+
+# --------------------------------------------------------------------------
+# Convolutions (paper's primary compute layer, Sec. 5.6: Conv1D; 2D for GTSRB)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvND:
+    """N-d convolution, channels-last (NWC / NHWC)."""
+
+    ndim: int
+    in_channels: int
+    out_channels: int
+    kernel_size: Tuple[int, ...]
+    strides: Tuple[int, ...]
+    padding: str = "SAME"
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    name: str = "conv"
+    kind: str = "conv"
+    feature_group_count: int = 1
+
+    def _dn(self):
+        if self.ndim == 1:
+            return jax.lax.conv_dimension_numbers(
+                (1, 1, self.in_channels), (*self.kernel_size, self.in_channels, self.out_channels),
+                ("NWC", "WIO", "NWC"))
+        return jax.lax.conv_dimension_numbers(
+            (1, 1, 1, self.in_channels), (*self.kernel_size, self.in_channels, self.out_channels),
+            ("NHWC", "HWIO", "NHWC"))
+
+    def init(self, key) -> Params:
+        kw, kb = jax.random.split(key)
+        kshape = (*self.kernel_size, self.in_channels // self.feature_group_count,
+                  self.out_channels)
+        p: Params = {"kernel": lecun_normal(kw, kshape, self.param_dtype)}
+        if self.use_bias:
+            p["bias"] = zeros_init(kb, (self.out_channels,), self.param_dtype)
+        return p
+
+    def _conv(self, x, w, preferred=None):
+        return jax.lax.conv_general_dilated(
+            x, w, window_strides=self.strides, padding=self.padding,
+            dimension_numbers=self._dn(), feature_group_count=self.feature_group_count,
+            preferred_element_type=preferred)
+
+    def apply(self, params: Params, x, ctx: Context):
+        ctx = ctx.scope(self.name)
+        kernel = params["kernel"]
+        bias = params.get("bias")
+
+        if isinstance(kernel, QTensor):
+            if isinstance(x, QTensor):
+                return self._integer_apply(params, x, ctx)
+            w = kernel.dequantize().astype(self.dtype)
+            y = self._conv(x.astype(self.dtype), w)
+            if bias is not None:
+                b = bias.dequantize() if isinstance(bias, QTensor) else bias
+                y = y + b.astype(y.dtype)
+            return y
+
+        if not ctx.policy.enabled or self.kind in ctx.policy.skip_kinds:
+            y = self._conv(x.astype(self.dtype), kernel.astype(self.dtype))
+            if bias is not None:
+                y = y + bias.astype(self.dtype)
+            return y
+        xq = _fq_in(x, ctx, "in")
+        w = _fq_weight(kernel, ctx, channel_axis=-1)
+        y = self._conv(xq.astype(self.dtype), w.astype(self.dtype))
+        b = _fq_bias(bias, ctx)
+        if b is not None:
+            y = y + b.astype(self.dtype)
+        return _fq_out(y, ctx, "out")
+
+    def _integer_apply(self, params: Params, x: QTensor, ctx: Context) -> QTensor:
+        kernel: QTensor = params["kernel"]
+        bias = params.get("bias")
+        width = ctx.policy.act_bits
+        from repro.kernels import ops as kops
+
+        if self.ndim == 1 and self.feature_group_count == 1:
+            acc = kops.qconv1d(x.q, kernel.q, strides=self.strides[0], padding=self.padding)
+        else:
+            acc = self._conv(x.q.astype(jnp.int32), kernel.q.astype(jnp.int32))
+        n_w = _broadcast_channel_n(kernel.n, acc.ndim, -1)
+        n_acc = x.n + n_w
+        if bias is not None and isinstance(bias, QTensor):
+            acc = acc + qformat.align(bias.q, bias.n, n_acc, jnp.int32)
+        n_out = _nout_for(params, ctx, "out")
+        yq = qformat.requantize(acc, n_acc, n_out, width)
+        return QTensor(yq, n_out, width)
+
+
+def Conv1D(in_channels, out_channels, kernel_size, stride=1, padding="SAME", **kw):
+    return ConvND(1, in_channels, out_channels, (kernel_size,), (stride,), padding, **kw)
+
+
+def Conv2D(in_channels, out_channels, kernel_size, stride=1, padding="SAME", **kw):
+    ks = (kernel_size, kernel_size) if isinstance(kernel_size, int) else tuple(kernel_size)
+    st = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    return ConvND(2, in_channels, out_channels, ks, st, padding, **kw)
+
+
+# --------------------------------------------------------------------------
+# Embedding
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab_size: int
+    features: int
+    param_dtype: Any = jnp.float32
+    dtype: Any = jnp.float32
+    name: str = "embed"
+    kind: str = "embed"
+
+    def init(self, key) -> Params:
+        return {"table": normal_init(key, (self.vocab_size, self.features),
+                                     std=1.0 / math.sqrt(self.features),
+                                     dtype=self.param_dtype)}
+
+    def apply(self, params: Params, ids, ctx: Context):
+        ctx = ctx.scope(self.name)
+        table = params["table"]
+        if isinstance(table, QTensor):
+            # Gather rows as integers, dequantize only the gathered slice
+            # (memory win: table stays int8 in HBM).
+            rows = jnp.take(table.q, ids, axis=0)
+            return qformat.dequantize(rows, table.n).astype(self.dtype)
+        t = table
+        if ctx.policy.enabled and ctx.policy.mode not in (QMode.CALIB, QMode.INTEGER) \
+                and self.kind not in ctx.policy.skip_kinds:
+            t = quantize_weight(t, ctx.policy, channel_axis=None)
+        return jnp.take(t, ids, axis=0).astype(self.dtype)
+
+    def attend(self, params: Params, x, ctx: Context):
+        """Tied-embedding logits: x @ table.T (always float; logits are fp)."""
+        table = params["table"]
+        if isinstance(table, QTensor):
+            from repro.kernels import ops as kops
+            return kops.wq_matmul(x, table, transpose=True)
+        return jnp.matmul(x, table.T.astype(self.dtype))
+
+
+# --------------------------------------------------------------------------
+# Norms (kept in fp32 — `norm` is in QuantPolicy.skip_kinds by default)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    features: int
+    eps: float = 1e-5
+    use_bias: bool = True
+    use_scale: bool = True
+    name: str = "ln"
+
+    def init(self, key) -> Params:
+        p: Params = {}
+        if self.use_scale:
+            p["scale"] = jnp.ones((self.features,), jnp.float32)
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.features,), jnp.float32)
+        return p
+
+    def apply(self, params: Params, x, ctx: Context):
+        del ctx
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + self.eps)
+        if "scale" in params:
+            y = y * params["scale"]
+        if "bias" in params:
+            y = y + params["bias"]
+        return y.astype(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    features: int
+    eps: float = 1e-6
+    name: str = "rms"
+
+    def init(self, key) -> Params:
+        return {"scale": jnp.ones((self.features,), jnp.float32)}
+
+    def apply(self, params: Params, x, ctx: Context):
+        del ctx
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + self.eps)
+        return (y * params["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# BatchNorm — folded form (paper Eqs. 5-7): y = w*x + b
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchNormFolded:
+    """Inference-form batch norm as the paper deploys it (Eqs. 5-7).
+
+    Training maintains (mean, var, gamma, beta); `fold()` produces the
+    multiplicand/addend form used by the engine.
+    """
+
+    features: int
+    eps: float = 1e-5
+    momentum: float = 0.9
+    name: str = "bn"
+
+    def init(self, key) -> Params:
+        del key
+        return {
+            "gamma": jnp.ones((self.features,), jnp.float32),
+            "beta": jnp.zeros((self.features,), jnp.float32),
+            "mean": jnp.zeros((self.features,), jnp.float32),
+            "var": jnp.ones((self.features,), jnp.float32),
+        }
+
+    def fold(self, params: Params) -> Tuple[jax.Array, jax.Array]:
+        sigma = jnp.sqrt(params["var"] + self.eps)      # Eq. 6
+        w = params["gamma"] / sigma                      # Eq. 5
+        b = params["beta"] - params["gamma"] * params["mean"] / sigma  # Eq. 7
+        return w, b
+
+    def apply(self, params: Params, x, ctx: Context):
+        if ctx.train:
+            axes = tuple(range(x.ndim - 1))
+            mu = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            y = (x - mu) * jax.lax.rsqrt(var + self.eps)
+            return y * params["gamma"] + params["beta"]
+        w, b = self.fold(params)
+        y = x * w + b
+        return _fq_out(y, ctx.scope(self.name), "out") if ctx.policy.enabled else y
+
+
+# --------------------------------------------------------------------------
+# Stateless ops with quant semantics from Sec. 4.3 / 5.8
+# --------------------------------------------------------------------------
+
+def relu(x):
+    """ReLU: element-wise max — *no* requantization (paper Sec. 4.3)."""
+    if isinstance(x, QTensor):
+        return QTensor(jnp.maximum(x.q, 0), x.n, x.width, x.channel_axis)
+    return jax.nn.relu(x)
+
+
+def max_pool(x, window: int, stride: Optional[int] = None, ndim: int = 1):
+    """Max pooling — element-wise max, no requantization (paper Sec. 4.3)."""
+    stride = stride or window
+    if isinstance(x, QTensor):
+        return QTensor(max_pool(x.q, window, stride, ndim), x.n, x.width, x.channel_axis)
+    dims = (1, window, 1) if ndim == 1 else (1, window, window, 1)
+    strides = (1, stride, 1) if ndim == 1 else (1, stride, stride, 1)
+    # init must be a concrete (numpy) scalar: a traced jnp constant breaks
+    # reduce_window linearization under jit+grad
+    import numpy as np
+
+    init = np.asarray(np.iinfo(x.dtype).min if jnp.issubdtype(x.dtype, jnp.integer)
+                      else -np.inf, x.dtype)
+    return jax.lax.reduce_window(x, init, jax.lax.max, dims, strides, "VALID")
+
+
+def avg_pool(x, window: int, stride: Optional[int] = None, ndim: int = 1):
+    stride = stride or window
+    if isinstance(x, QTensor):
+        # Integer average: int32 sum + shift when the divisor is a power of
+        # two (the paper's no-division rule), integer divide otherwise.
+        size = window if ndim == 1 else window * window
+        acc = avg_pool_sum(x.q.astype(jnp.int32), window, stride, ndim)
+        if size & (size - 1) == 0:
+            q = jnp.right_shift(acc, int(math.log2(size)))
+        else:
+            q = acc // size
+        q = jnp.clip(q, qformat.qmin(x.width), qformat.qmax(x.width))
+        return QTensor(q.astype(x.q.dtype), x.n, x.width, x.channel_axis)
+    dims = (1, window, 1) if ndim == 1 else (1, window, window, 1)
+    strides = (1, stride, 1) if ndim == 1 else (1, stride, stride, 1)
+    size = window if ndim == 1 else window * window
+    import numpy as np
+
+    s = jax.lax.reduce_window(x, np.asarray(0, x.dtype), jax.lax.add, dims,
+                              strides, "VALID")
+    return s / size
+
+
+def avg_pool_sum(x, window: int, stride: int, ndim: int = 1):
+    import numpy as np
+
+    dims = (1, window, 1) if ndim == 1 else (1, window, window, 1)
+    strides = (1, stride, 1) if ndim == 1 else (1, stride, stride, 1)
+    return jax.lax.reduce_window(x, np.asarray(0, x.dtype), jax.lax.add, dims,
+                                 strides, "VALID")
+
+
+def global_avg_pool(x, ndim: int = 1):
+    axes = (1,) if ndim == 1 else (1, 2)
+    if isinstance(x, QTensor):
+        size = math.prod(x.q.shape[a] for a in axes)
+        acc = jnp.sum(x.q.astype(jnp.int32), axis=axes)
+        q = jnp.clip(acc // size, qformat.qmin(x.width), qformat.qmax(x.width))
+        return QTensor(q.astype(x.q.dtype), x.n, x.width, x.channel_axis)
+    return jnp.mean(x, axis=axes)
+
+
+def qadd(a, b, ctx: Context, site: str = "add", n_out: Optional[jax.Array] = None):
+    """Element-wise add with the paper's Add-layer semantics (Sec. 4.3):
+
+    no weights, but the output dynamic range can grow, so the output gets its
+    own scale factor.  Integer path: align both operands to a common format in
+    the int32 accumulator, add, requantize + saturate.
+    """
+    if isinstance(a, QTensor) and isinstance(b, QTensor):
+        width = a.width
+        n_common = jnp.minimum(a.n, b.n)
+        acc = qformat.align(a.q, a.n, n_common, jnp.int32) + \
+            qformat.align(b.q, b.n, n_common, jnp.int32)
+        if n_out is None:
+            n_out = ctx.frozen(f"{site}/out")
+            if n_out is None:
+                raise ValueError(f"integer add needs calibrated exponent at {ctx.key(site)}")
+        yq = qformat.requantize(acc, n_common, n_out, width)
+        return QTensor(yq, n_out, width)
+    y = a + b
+    if ctx.policy.enabled and ctx.policy.mode is not QMode.INTEGER:
+        y = _fq_out(y, ctx.scope(site), "out")
+    return y
+
+
+def dropout(x, rate: float, ctx: Context, name: str = "dropout"):
+    if not ctx.train or rate <= 0.0 or ctx.rng is None:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(ctx.fold_rng(name), keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)

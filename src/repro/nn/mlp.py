@@ -1,0 +1,91 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU — llama-family) and classic MLP.
+
+All matmuls route through :class:`~repro.nn.layers.Dense`, so every FFN
+automatically supports the paper's three execution paths (float/fake-quant,
+full integer, weight-only int8) and the quantization policy hooks.
+
+TP sharding (Megatron-style): w_gate/w_in are column-parallel (output dim on
+the `model` mesh axis), w_out is row-parallel (input dim on `model`); the
+activation between them is constrained to (batch, None, model) so XLA keeps
+the hidden dim sharded and inserts a single reduce-scatter/all-reduce at w_out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Dense
+from repro.nn.module import Context, Params
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedMLP:
+    """SwiGLU/GeGLU: w_out(act(w_gate(x)) * w_in(x))."""
+
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+    use_bias: bool = False
+    dtype: Any = jnp.float32
+    name: str = "mlp"
+
+    def _layers(self):
+        return {
+            "w_gate": Dense(self.d_model, self.d_ff, self.use_bias, self.dtype, name="w_gate"),
+            "w_in": Dense(self.d_model, self.d_ff, self.use_bias, self.dtype, name="w_in"),
+            "w_out": Dense(self.d_ff, self.d_model, self.use_bias, self.dtype, name="w_out"),
+        }
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 3)
+        return {nm: l.init(k) for (nm, l), k in zip(self._layers().items(), ks)}
+
+    def apply(self, params: Params, x, ctx: Context):
+        ctx = ctx.scope(self.name)
+        ls = self._layers()
+        g = ls["w_gate"].apply(params["w_gate"], x, ctx)
+        h = ls["w_in"].apply(params["w_in"], x, ctx)
+        a = ACTIVATIONS[self.activation](g) * h
+        a = ctx.constrain(a, "batch", None, "ff")
+        return ls["w_out"].apply(params["w_out"], a, ctx)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """Classic 2-layer MLP (whisper, ViT, classifier heads)."""
+
+    d_model: int
+    d_ff: int
+    d_out: int = 0  # 0 => d_model
+    activation: str = "gelu"
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+    name: str = "mlp"
+
+    def _layers(self):
+        d_out = self.d_out or self.d_model
+        return {
+            "w_in": Dense(self.d_model, self.d_ff, self.use_bias, self.dtype, name="w_in"),
+            "w_out": Dense(self.d_ff, d_out, self.use_bias, self.dtype, name="w_out"),
+        }
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 2)
+        return {nm: l.init(k) for (nm, l), k in zip(self._layers().items(), ks)}
+
+    def apply(self, params: Params, x, ctx: Context):
+        ctx = ctx.scope(self.name)
+        ls = self._layers()
+        a = ACTIVATIONS[self.activation](ls["w_in"].apply(params["w_in"], x, ctx))
+        a = ctx.constrain(a, "batch", None, "ff")
+        return ls["w_out"].apply(params["w_out"], a, ctx)

@@ -1,0 +1,237 @@
+"""Minimal functional module substrate.
+
+Parameters are plain nested dicts of jnp arrays (or ``QTensor`` leaves once a
+model is integerized), so they are trivially shardable with pjit, scannable
+with ``jax.lax.scan`` (stacked leaves) and checkpointable.
+
+A ``Context`` threads cross-cutting concerns through ``apply``:
+
+  * the active :class:`~repro.core.policy.QuantPolicy` (QAT fake-quant hooks,
+    frozen scales for PTQ/eval, true-integer serving),
+  * activation-range statistics collection (paper Sec. 4.3: ranges reassessed
+    during training, frozen for inference — collection happens under CALIB),
+  * train/eval flag and RNG,
+  * a name path for stable quant-site keys.
+
+Stats collection under ``lax.scan`` needs explicit threading (a dict mutated
+inside a scan body would leak tracers); ``Context.fork_for_scan`` /
+``Context.merge_scanned`` implement that hand-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QMode, QuantPolicy
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Context:
+    policy: QuantPolicy = dataclasses.field(default_factory=QuantPolicy.float32)
+    train: bool = False
+    rng: Optional[jax.Array] = None
+    # Frozen activation exponents {site_path: int32 n}, produced by calibration.
+    qstate: Optional[Dict[str, jax.Array]] = None
+    # Mutable range stats collected this call {site_path: max_abs (f32)}.
+    stats: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # Auxiliary losses accumulated additively (MoE load-balance, router-z).
+    losses: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    path: str = ""
+    # Distribution: active mesh + logical->physical axis rules, e.g.
+    # {"batch": ("pod", "data"), "model": "model", "seq": None}.  None mesh =>
+    # single-device semantics (no constraints, no collectives in MoE).
+    mesh: Any = None
+    axis_rules: Optional[Dict[str, Any]] = None
+
+    def pspec(self, *logical_axes) -> Any:
+        """PartitionSpec from logical axis names via the active rules."""
+        from jax.sharding import PartitionSpec as P
+
+        if self.axis_rules is None:
+            return P()
+        return P(*(self.axis_rules.get(a) if a is not None else None
+                   for a in logical_axes))
+
+    def constrain(self, x, *logical_axes):
+        """with_sharding_constraint if a mesh is active, else identity.
+
+        An axis whose dimension does not divide the mesh-axis size is
+        dropped (replicated) — JAX would otherwise emit padded uneven
+        shardings (e.g. smollm's 9 heads on a 16-way model axis), which
+        show up as pathological all-gathers in the collective schedule.
+        """
+        if self.mesh is None or self.axis_rules is None:
+            return x
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        axes = []
+        for i, a in enumerate(logical_axes):
+            phys = self.axis_rules.get(a) if a is not None else None
+            if phys is None or i >= x.ndim:
+                axes.append(None)
+                continue
+            names = tuple(phys) if isinstance(phys, (tuple, list)) else (phys,)
+            # longest prefix of the axis tuple that divides the dim
+            while names:
+                size = 1
+                for nm in names:
+                    size *= int(self.mesh.shape[nm])
+                if size > 1 and x.shape[i] % size == 0:
+                    break
+                names = names[:-1]
+            if names:
+                axes.append(names if len(names) > 1 else names[0])
+            else:
+                axes.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*axes)))
+
+    def _axis_size(self, logical: str) -> int:
+        if self.mesh is None or self.axis_rules is None:
+            return 1
+        ax = self.axis_rules.get(logical)
+        if ax is None:
+            return 1
+        axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+        size = 1
+        for a in axes:
+            size *= int(self.mesh.shape[a])
+        return size
+
+    @property
+    def dp_size(self) -> int:
+        """Data-parallel degree (used e.g. to align MoE routing groups)."""
+        return self._axis_size("batch")
+
+    @property
+    def tp_size(self) -> int:
+        return self._axis_size("model")
+
+    # -- naming ------------------------------------------------------------
+    def scope(self, name: str) -> "Context":
+        child = dataclasses.replace(self)
+        child.stats = self.stats  # shared collectors
+        child.losses = self.losses
+        child.path = f"{self.path}/{name}" if self.path else name
+        return child
+
+    def key(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else name
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def collecting(self) -> bool:
+        return self.policy.mode in (QMode.CALIB, QMode.QAT)
+
+    def record(self, name: str, value: jax.Array) -> None:
+        """Record a max-|x| range statistic for a quant site."""
+        k = self.key(name)
+        v = jnp.max(jnp.abs(jax.lax.stop_gradient(value))).astype(jnp.float32)
+        if k in self.stats:
+            self.stats[k] = jnp.maximum(self.stats[k], v)
+        else:
+            self.stats[k] = v
+
+    def frozen(self, name: str) -> Optional[jax.Array]:
+        """Frozen activation exponent for this site, if calibrated."""
+        if self.qstate is None:
+            return None
+        return self.qstate.get(self.key(name))
+
+    def add_loss(self, name: str, value: jax.Array) -> None:
+        """Accumulate an auxiliary loss term (summed across sites/layers)."""
+        if name in self.losses:
+            self.losses[name] = self.losses[name] + value
+        else:
+            self.losses[name] = value
+
+    # -- rng ---------------------------------------------------------------
+    def fold_rng(self, name: str) -> Optional[jax.Array]:
+        if self.rng is None:
+            return None
+        # crc32 (not hash()) so the fold-in is deterministic across processes.
+        digest = zlib.crc32(self.key(name).encode()) & 0x7FFFFFFF
+        return jax.random.fold_in(self.rng, digest)
+
+    # -- scan support --------------------------------------------------------
+    def fork_for_scan(self) -> "Context":
+        """A context whose stats/losses dicts are private to one scan-body trace."""
+        child = dataclasses.replace(self)
+        child.stats = {}
+        child.losses = {}
+        return child
+
+    def merge_scanned(self, scanned_stats: Dict[str, jax.Array],
+                      scanned_losses: Optional[Dict[str, jax.Array]] = None) -> None:
+        """Merge per-layer-stacked stats (max over scan axis) and losses (sum)."""
+        for k, v in scanned_stats.items():
+            v = jnp.max(v) if v.ndim else v
+            if k in self.stats:
+                self.stats[k] = jnp.maximum(self.stats[k], v)
+            else:
+                self.stats[k] = v
+        for k, v in (scanned_losses or {}).items():
+            v = jnp.sum(v) if v.ndim else v
+            self.add_loss(k, v)
+
+
+def eval_context(policy: Optional[QuantPolicy] = None, **kw) -> Context:
+    return Context(policy=policy or QuantPolicy.float32(), train=False, **kw)
+
+
+def train_context(policy: Optional[QuantPolicy] = None, rng=None, **kw) -> Context:
+    return Context(policy=policy or QuantPolicy.float32(), train=True, rng=rng, **kw)
+
+
+# --------------------------------------------------------------------------
+# Param tree helpers
+# --------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(l.size for l in leaves if hasattr(l, "size")))
+
+
+def param_bytes(params: Params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(l.size * l.dtype.itemsize for l in leaves if hasattr(l, "size")))
+
+
+def tree_paths(params: Params, prefix: str = "") -> Dict[str, Any]:
+    """Flatten a nested-dict tree to {slash/path: leaf}."""
+    out: Dict[str, Any] = {}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, f"{path}/{k}" if path else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{path}/{i}" if path else str(i))
+        else:
+            out[path] = node
+
+    rec(params, prefix)
+    return out
+
+
+def map_with_path(fn: Callable[[str, Any], Any], params: Params) -> Params:
+    """Map leaf -> leaf with access to the slash path (dict trees only)."""
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{path}/{k}" if path else str(k)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            out = [rec(v, f"{path}/{i}" if path else str(i))
+                   for i, v in enumerate(node)]
+            return type(node)(out) if isinstance(node, tuple) else out
+        return fn(path, node)
+
+    return rec(params, "")

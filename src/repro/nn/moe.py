@@ -1,0 +1,182 @@
+"""Mixture-of-Experts with capacity-based top-k routing (EP-shardable).
+
+Design (DESIGN.md §4):
+  * Experts stored stacked: ``w_gate/w_in`` (E, D, F), ``w_out`` (E, F, D).
+    Under pjit the expert axis E shards over the `model` mesh axis (expert
+    parallelism) — phi3.5: 1 expert/device, kimi-k2: 24 experts/device.
+  * Router (``kind="router"``) stays in float: the top-k decision boundary is
+    precision-sensitive, so it is in ``QuantPolicy.skip_kinds`` (paper's
+    per-layer skip rule applied to a new layer family).
+  * Dispatch is **dense and static-shaped** for compile-time determinism:
+    tokens are split into `num_groups` routing groups (aligned with the data
+    shards so routing never crosses a shard boundary), each expert takes its
+    top-`capacity` tokens per group via ``lax.top_k``, gathers, runs a batched
+    expert GEMM, and scatter-adds back.  Over-capacity tokens are dropped
+    (standard GShard/Switch semantics); capacity_factor controls slack.
+  * Load-balance auxiliary loss (Switch-style f·P) accumulated on the Context.
+
+The expert FFN math itself routes through the same fake-quant hooks as Dense
+(weights fake-quantized per policy), so the paper's QAT/PTQ applies to expert
+weights exactly as to dense FFNs — see ``_fq_weight`` use below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QTensor
+from repro.nn.layers import Dense, _fq_in, _fq_out, _fq_weight, lecun_normal
+from repro.nn.mlp import ACTIVATIONS
+from repro.nn.module import Context, Params
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE:
+    d_model: int
+    d_ff: int                      # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    n_shared_experts: int = 0      # kimi-k2-style always-on shared expert(s)
+    activation: str = "silu"
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    dtype: Any = jnp.float32
+    name: str = "moe"
+
+    def _router(self):
+        return Dense(self.d_model, self.n_experts, use_bias=False,
+                     dtype=jnp.float32, name="router", kind="router")
+
+    def init(self, key) -> Params:
+        kr, kg, ki, ko, ks = jax.random.split(key, 5)
+        E, D, F = self.n_experts, self.d_model, self.d_ff
+        p: Params = {
+            "router": self._router().init(kr),
+            "experts": {
+                "w_gate": {"kernel": lecun_normal(kg, (E, D, F))},
+                "w_in": {"kernel": lecun_normal(ki, (E, D, F))},
+                "w_out": {"kernel": lecun_normal(ko, (E, F, D))},
+            },
+        }
+        if self.n_shared_experts:
+            from repro.nn.mlp import GatedMLP
+
+            shared = GatedMLP(D, F * self.n_shared_experts,
+                              activation=self.activation, dtype=self.dtype,
+                              name="shared")
+            p["shared"] = shared.init(ks)
+        return p
+
+    # -- expert weight access (handles float / fake-quant / integerized) ----
+    def _expert_w(self, params: Params, name: str, ctx: Context):
+        leaf = params["experts"][name]["kernel"]
+        if isinstance(leaf, QTensor):
+            return leaf.dequantize().astype(self.dtype)
+        if ctx.policy.enabled and ctx.policy.mode.value not in ("integer", "calib"):
+            return _fq_weight(leaf, ctx.scope(name), channel_axis=-1).astype(self.dtype)
+        return leaf.astype(self.dtype)
+
+    def apply(self, params: Params, x, ctx: Context, *, num_groups: Optional[int] = None):
+        """x: (B, S, D) -> (B, S, D)."""
+        ctx = ctx.scope(self.name)
+        b, s, d = x.shape
+        E, K = self.n_experts, self.top_k
+        act = ACTIVATIONS[self.activation]
+
+        # Decode (s==1) uses the weight-stationary dispatch: with tokens
+        # sharded over `data` AND expert weights FSDP-sharded over `data`,
+        # the expert einsum has a data-axis conflict (batch dim vs
+        # contracting dim) that makes XLA all-gather the expert weights —
+        # ~4 GiB/layer for 128 tokens (kimi-k2, §Perf).  Instead: replicate
+        # the tiny token set over `data`, shard the *contracting* dims over
+        # `data`, and let two small activation psums replace the gathers.
+        weight_stationary = (s == 1 and ctx.mesh is not None)
+
+        # ---- routing groups: align with the data shards so top-k stays local
+        if num_groups is None:
+            num_groups = 1 if weight_stationary else ctx.dp_size
+        g = max(1, min(num_groups, b))
+        while b % g:
+            g -= 1
+        tokens_per_group = (b // g) * s
+        cap = int(math.ceil(tokens_per_group * K / E * self.capacity_factor))
+        cap = max(1, min(cap, tokens_per_group))
+
+        xg = x.reshape(g, tokens_per_group, d)
+        xg = ctx.constrain(xg, "batch", None, None)
+
+        # ---- router (fp32, not quantized).  The expert axis of the logits
+        # must be REPLICATED: top_k along a model-sharded axis makes the
+        # partitioner replicate the full (g,t,E) routing tensors (9.6 GiB
+        # observed on kimi-k2 — §Perf kimi train iteration 2).
+        logits = self._router().apply(params["router"], xg.astype(jnp.float32), ctx)
+        logits = ctx.constrain(logits, "batch", None, None)
+        probs = jax.nn.softmax(logits, axis=-1)                    # (g, t, E)
+
+        # SPMD replicates sort/top_k operands, so the (g,t,E) routing tensors
+        # cross the wire in full; running the *selection* in bf16 halves
+        # those bytes (order-based — bf16 flips ties only).  The aux loss
+        # keeps the f32 probs.
+        probs_sel = probs.astype(jnp.bfloat16)
+        top_vals, top_idx = jax.lax.top_k(probs_sel, K)            # (g, t, K)
+        mask = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=probs_sel.dtype),
+                       axis=2)                                      # (g,t,E)
+        gates_te = probs_sel * mask                                 # (g, t, E)
+
+        # ---- load-balance aux loss (Switch: E * sum_e f_e * P_e)
+        f_e = jnp.mean(mask, axis=1)                                # (g, E)
+        p_e = jnp.mean(probs, axis=1)
+        aux = jnp.mean(jnp.sum(f_e * p_e, axis=-1)) * E
+        ctx.add_loss("moe_load_balance", self.aux_loss_weight * aux)
+
+        # ---- expert choice of tokens: top-capacity tokens per (group, expert)
+        sel_gate, sel_idx = jax.lax.top_k(
+            jnp.swapaxes(gates_te, 1, 2), cap)                      # (g, E, C)
+        xe = jnp.take_along_axis(
+            xg[:, None], sel_idx[..., None], axis=2)                # (g, E, C, D)
+        if weight_stationary:
+            xe = ctx.constrain(xe, None, "expert", None, "fsdp")
+        else:
+            xe = ctx.constrain(xe, "batch", "expert", None, None)
+
+        # ---- fake-quant hooks on the expert FFN input/output (paper Fig. 2)
+        xe = _fq_in(xe, ctx, "experts/in")
+        w_g = self._expert_w(params, "w_gate", ctx)
+        w_i = self._expert_w(params, "w_in", ctx)
+        w_o = self._expert_w(params, "w_out", ctx)
+
+        xe_c = xe.astype(self.dtype)
+        h = act(jnp.einsum("gecd,edf->gecf", xe_c, w_g)) * jnp.einsum(
+            "gecd,edf->gecf", xe_c, w_i)
+        if weight_stationary:
+            h = ctx.constrain(h, None, "expert", None, "fsdp")
+        else:
+            h = ctx.constrain(h, "batch", "expert", None, None)
+        ye = jnp.einsum("gecf,efd->gecd", h, w_o)                   # (g, E, C, D)
+        ye = _fq_out(ye, ctx, "experts/out")
+        ye = ctx.constrain(ye, "batch", "expert", None, None)
+
+        # ---- combine: scatter-add weighted expert outputs back to tokens
+        ye = ye * sel_gate[..., None].astype(ye.dtype)
+        flat_idx = sel_idx.reshape(g, E * cap)                      # (g, E*C)
+        flat_ye = ye.reshape(g, E * cap, d)
+
+        def combine(idx_1d, ye_2d):
+            return jnp.zeros((tokens_per_group, d), ye_2d.dtype).at[idx_1d].add(ye_2d)
+
+        out = jax.vmap(combine)(flat_idx, flat_ye)                  # (g, t, D)
+        out = out.reshape(b, s, d)
+        out = ctx.constrain(out, "batch", None, None)
+
+        if self.n_shared_experts:
+            from repro.nn.mlp import GatedMLP
+
+            shared = GatedMLP(self.d_model, self.d_ff * self.n_shared_experts,
+                              activation=self.activation, dtype=self.dtype,
+                              name="shared")
+            out = out + shared.apply(params["shared"], x, ctx)
+        return out

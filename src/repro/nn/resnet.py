@@ -1,0 +1,92 @@
+"""The paper's evaluation network: ResNetv1-6 (Fig. 4), 1D and 2D.
+
+Topology (constant ``filters`` f everywhere, matching Fig. 4 / Appendix E):
+
+    conv1(k) → relu
+    [ conv2(k) → relu → conv3(k) ] + shortcut-conv(1x1) → add → relu
+    maxpool(pool)
+    [ conv4(k) → relu → conv5(k) ] + identity → add → relu
+    global-maxpool → fully-connected(classes)
+
+All three execution paths are supported end-to-end:
+float / fake-quant (QAT Sec. 4.3, PTQ-eval), and **full integer** (Sec. 5.8 —
+input arrives as a QTensor, activations flow as QTensor, ReLU/MaxPool pass
+through without requantization, Add re-aligns operands, the classifier output
+is dequantized to float logits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qformat import QTensor
+from repro.nn.layers import (Conv1D, Conv2D, Dense, global_avg_pool, max_pool,
+                             qadd, relu)
+from repro.nn.module import Context, Params
+
+
+def _global_max_pool(x, ndim: int):
+    axes = (1,) if ndim == 1 else (1, 2)
+    if isinstance(x, QTensor):
+        return QTensor(jnp.max(x.q, axis=axes), x.n, x.width, x.channel_axis)
+    return jnp.max(x, axis=axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetV1_6:
+    in_channels: int
+    filters: int
+    classes: int
+    kernel: int = 3
+    pool: int = 4
+    ndim: int = 1                 # 1 (UCI-HAR/SMNIST) or 2 (GTSRB)
+    global_pool: str = "max"      # paper's net ends in a max pool
+    dtype: Any = jnp.float32
+    name: str = "resnet6"
+
+    def _conv(self, cin, cout, k, name):
+        mk = Conv1D if self.ndim == 1 else Conv2D
+        return mk(cin, cout, k, padding="SAME", dtype=self.dtype, name=name)
+
+    def _layers(self):
+        f, k = self.filters, self.kernel
+        return {
+            "conv1": self._conv(self.in_channels, f, k, "conv1"),
+            "conv2": self._conv(f, f, k, "conv2"),
+            "conv3": self._conv(f, f, k, "conv3"),
+            "short1": self._conv(f, f, 1, "short1"),
+            "conv4": self._conv(f, f, k, "conv4"),
+            "conv5": self._conv(f, f, k, "conv5"),
+            "fc": Dense(f, self.classes, dtype=self.dtype, name="fc"),
+        }
+
+    def init(self, key) -> Params:
+        ls = self._layers()
+        ks = jax.random.split(key, len(ls))
+        return {nm: l.init(k) for (nm, l), k in zip(ls.items(), ks)}
+
+    def apply(self, params: Params, x, ctx: Context):
+        """x: (B, S, C) for 1D, (B, H, W, C) for 2D — float or QTensor."""
+        ctx = ctx.scope(self.name)
+        ls = self._layers()
+
+        h = relu(ls["conv1"].apply(params["conv1"], x, ctx))
+        r = relu(ls["conv2"].apply(params["conv2"], h, ctx))
+        r = ls["conv3"].apply(params["conv3"], r, ctx)
+        sc = ls["short1"].apply(params["short1"], h, ctx)
+        h = relu(qadd(r, sc, ctx, site="add1"))
+        h = max_pool(h, self.pool, ndim=self.ndim)
+        r = relu(ls["conv4"].apply(params["conv4"], h, ctx))
+        r = ls["conv5"].apply(params["conv5"], r, ctx)
+        h = relu(qadd(r, h, ctx, site="add2"))
+        if self.global_pool == "max":
+            h = _global_max_pool(h, self.ndim)
+        else:
+            h = global_avg_pool(h, ndim=self.ndim)
+        logits = ls["fc"].apply(params["fc"], h, ctx)
+        if isinstance(logits, QTensor):
+            return logits.dequantize()
+        return logits

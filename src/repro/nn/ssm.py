@@ -1,0 +1,366 @@
+"""State-space sequence mixers: Mamba (jamba hybrid) and RWKV6 "Finch".
+
+Both are attention-free recurrences with O(1) decode state — the reason the
+``long_500k`` shape runs only on these families (DESIGN.md §5).
+
+Quantization applicability (DESIGN.md §Arch-applicability): the paper's
+technique covers every *projection* GEMM (in/out/x/dt for Mamba; r/k/v/g/o and
+the FFN for RWKV) via the shared :class:`Dense` layer.  The recurrent **state
+itself stays fp32**: a Qm.n-quantized state re-quantizes every step and the
+truncation error compounds over thousands of steps (the paper's engine never
+re-quantizes inside max-pool for the same reason — precision lost is never
+recovered).  ``ssm_state`` is in ``QuantPolicy.skip_kinds``.
+
+Implementation notes:
+  * Train/prefill use a **chunked scan**: an outer ``lax.scan`` over chunks
+    carries the (B, ...) state; within a chunk the recurrence is unrolled in
+    matrix form where possible.  Chunk size bounds the materialized
+    (B, chunk, d_inner, d_state) tensor — VMEM/HBM-friendly.
+  * Decode is a single recurrence step against carried state (serve path).
+  * TP: d_inner / heads shard over `model`; the state shards with them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Dense, lecun_normal, normal_init
+from repro.nn.module import Context, Params
+
+# --------------------------------------------------------------------------
+# Mamba (selective SSM, v1 — as interleaved in Jamba)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba:
+    d_model: int
+    d_inner: int = 0          # default 2*d_model
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0          # default ceil(d_model/16)
+    chunk: int = 128
+    dtype: Any = jnp.float32
+    name: str = "mamba"
+
+    @property
+    def _di(self):
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def _dtr(self):
+        return self.dt_rank or max(1, math.ceil(self.d_model / 16))
+
+    def _projs(self):
+        di = self._di
+        return {
+            "in_proj": Dense(self.d_model, 2 * di, use_bias=False, dtype=self.dtype,
+                             name="in_proj"),
+            "x_proj": Dense(di, self._dtr + 2 * self.d_state, use_bias=False,
+                            dtype=self.dtype, name="x_proj"),
+            "dt_proj": Dense(self._dtr, di, use_bias=True, dtype=self.dtype,
+                             name="dt_proj"),
+            "out_proj": Dense(di, self.d_model, use_bias=False, dtype=self.dtype,
+                              name="out_proj"),
+        }
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 6)
+        di, n = self._di, self.d_state
+        p = {nm: l.init(k) for (nm, l), k in zip(self._projs().items(), ks)}
+        # depthwise causal conv over time: (d_conv, di)
+        p["conv"] = {"kernel": lecun_normal(ks[4], (self.d_conv, 1, di)),
+                     "bias": jnp.zeros((di,), jnp.float32)}
+        # S4D-real init for A; D skip
+        a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+        p["ssm"] = {"a_log": jnp.log(a), "d_skip": jnp.ones((di,), jnp.float32)}
+        return p
+
+    def _conv1d(self, params, x, conv_state=None):
+        """Causal depthwise conv; returns (y, new_conv_state).
+
+        ``conv_state`` is the trailing (K-1) inputs of the previous call
+        (zeros for a fresh sequence), so prefill-with-state and single-token
+        decode share one code path.
+        """
+        w = params["conv"]["kernel"].astype(self.dtype)   # (K, 1, di)
+        b = params["conv"]["bias"].astype(self.dtype)
+        k = self.d_conv
+        if conv_state is not None:
+            xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        else:
+            xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        y = jax.lax.conv_general_dilated(
+            xp, w, (1,), "VALID", dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=self._di) + b
+        return y, (xp[:, -(k - 1):] if k > 1 else None)
+
+    def _ssm_inputs(self, params, xc, ctx):
+        """Data-dependent dt, B, C from the conv output."""
+        projs = self._projs()
+        dbc = projs["x_proj"].apply(params["x_proj"], xc, ctx)
+        dt, bmat, cmat = jnp.split(
+            dbc, [self._dtr, self._dtr + self.d_state], axis=-1)
+        dt = jax.nn.softplus(projs["dt_proj"].apply(params["dt_proj"], dt, ctx)
+                             .astype(jnp.float32))                  # (B,L,di)
+        return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+    def _scan(self, a_log, d_skip, xc, dt, bmat, cmat, h0):
+        """Chunked selective scan. xc/dt (B,L,di); bmat/cmat (B,L,N); h0 (B,di,N)."""
+        bsz, L, di = xc.shape
+        n = self.d_state
+        A = -jnp.exp(a_log)                                          # (di, N)
+        ch = min(self.chunk, L)
+        pad = (-L) % ch
+        if pad:
+            z = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            xc, dt, bmat, cmat = z(xc), z(dt), z(bmat), z(cmat)
+        nc = xc.shape[1] // ch
+
+        xcf = xc.astype(jnp.float32)
+
+        def chunk_step(h, args):
+            xk, dtk, bk, ck = args                                   # (B,ch,·)
+            da = jnp.exp(dtk[..., None] * A)                         # (B,ch,di,N)
+            dbx = (dtk * xk)[..., None] * bk[:, :, None, :]          # (B,ch,di,N)
+
+            def inner(hc, t):
+                hc = da[:, t] * hc + dbx[:, t]
+                return hc, jnp.einsum("bdn,bn->bd", hc, ck[:, t])
+
+            h, ys = jax.lax.scan(inner, h, jnp.arange(ch))
+            return h, jnp.moveaxis(ys, 0, 1)                         # (B,ch,di)
+
+        args = tuple(t.reshape(bsz, nc, ch, *t.shape[2:]).swapaxes(0, 1)
+                     for t in (xcf, dt, bmat, cmat))
+        h, ys = jax.lax.scan(chunk_step, h0, args)
+        y = ys.swapaxes(0, 1).reshape(bsz, nc * ch, di)[:, :L]
+        return y + xcf * d_skip, h
+
+    def apply(self, params: Params, x, ctx: Context,
+              state: Optional[Dict[str, Any]] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        """x: (B, S, D).  state: {'h': (B,di,N) f32, 'conv': (B,K-1,di)} or None."""
+        ctx = ctx.scope(self.name)
+        projs = self._projs()
+        b, s, _ = x.shape
+        di, n = self._di, self.d_state
+
+        xz = projs["in_proj"].apply(params["in_proj"], x, ctx)
+        xin, z = jnp.split(xz, 2, axis=-1)
+        xin = ctx.constrain(xin, "batch", None, "ff")
+
+        decode = state is not None
+        conv_state = state["conv"] if decode else None
+        xc, new_conv = self._conv1d(params, xin, conv_state)
+        xc = jax.nn.silu(xc)
+
+        dt, bmat, cmat = self._ssm_inputs(params, xc, ctx)
+        h0 = state["h"] if decode else jnp.zeros((b, di, n), jnp.float32)
+
+        if decode and s == 1:
+            A = -jnp.exp(params["ssm"]["a_log"])
+            da = jnp.exp(dt[:, 0, :, None] * A)
+            h = da * h0 + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+                * bmat[:, 0, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+            y = y + xc.astype(jnp.float32) * params["ssm"]["d_skip"]
+        else:
+            y, h = self._scan(params["ssm"]["a_log"], params["ssm"]["d_skip"],
+                              xc, dt, bmat, cmat, h0)
+
+        y = (y.astype(self.dtype) * jax.nn.silu(z)).astype(self.dtype)
+        out = projs["out_proj"].apply(params["out_proj"], y, ctx)
+        new_state = {"h": h, "conv": new_conv} if decode else None
+        return out, new_state
+
+    def init_state(self, batch: int) -> Dict[str, Any]:
+        return {"h": jnp.zeros((batch, self._di, self.d_state), jnp.float32),
+                "conv": jnp.zeros((batch, self.d_conv - 1, self._di), self.dtype)}
+
+
+# --------------------------------------------------------------------------
+# RWKV6 "Finch" — data-dependent decay linear attention
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6TimeMix:
+    """RWKV6 time-mixing: S_t = diag(w_t)·S_{t-1} + kᵀv; o = r·(S + diag(u)kᵀv).
+
+    Simplified-faithful Finch: data-dependent per-channel decay w_t through a
+    low-rank MLP (the paper's LoRA), token-shift interpolation on the inputs,
+    grouped heads with per-head (N×N) fp32 state.
+    """
+
+    d_model: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 128
+    dtype: Any = jnp.float32
+    name: str = "timemix"
+
+    @property
+    def n_heads(self):
+        return self.d_model // self.head_dim
+
+    def _projs(self):
+        d = self.d_model
+        mk = lambda nm: Dense(d, d, use_bias=False, dtype=self.dtype, name=nm)
+        return {"wr": mk("wr"), "wk": mk("wk"), "wv": mk("wv"),
+                "wg": mk("wg"), "wo": mk("wo")}
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 9)
+        d, h, n = self.d_model, self.n_heads, self.head_dim
+        p = {nm: l.init(k) for (nm, l), k in zip(self._projs().items(), ks)}
+        p["decay"] = {  # w0 + tanh(x A) B  (the Finch decay LoRA)
+            "w0": jnp.full((d,), -6.0, jnp.float32),
+            "a": normal_init(ks[5], (d, self.decay_lora), std=0.01),
+            "b": normal_init(ks[6], (self.decay_lora, d), std=0.01),
+        }
+        p["bonus_u"] = normal_init(ks[7], (h, n), std=0.5)
+        p["mix"] = {"x": jnp.full((5, d), 0.5, jnp.float32)}  # token-shift lerp
+        p["ln_out"] = {"scale": jnp.ones((d,), jnp.float32)}
+        return p
+
+    def _token_shift(self, x, last):
+        """x_{t-1} per position; `last` is (B,1,D) carry for decode."""
+        prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+        return prev
+
+    def _scan(self, r, k, v, w, u, s0):
+        """Recurrence over time, chunked.  r/k/v (B,L,H,N); w (B,L,H,N) decay
+        in (0,1); u (H,N); s0 (B,H,N,N).  Returns (out (B,L,H,N), sT)."""
+        bsz, L, h, n = r.shape
+        ch = min(self.chunk, L)
+        pad = (-L) % ch
+        if pad:
+            z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r, k, v, w = z(r), z(k), z(v), z(w)
+            w = w.at[:, L:].set(1.0)  # identity decay on padding
+        nc = r.shape[1] // ch
+
+        def chunk_step(s, args):
+            rk, kk, vk, wk = args                                     # (B,ch,H,N)
+
+            def inner(sc, t):
+                kv = kk[:, t, :, :, None] * vk[:, t, :, None, :]      # (B,H,N,N)
+                o = jnp.einsum("bhn,bhnm->bhm", rk[:, t],
+                               sc + u[None, :, :, None] * kv)
+                sc = wk[:, t, :, :, None] * sc + kv
+                return sc, o
+
+            s, os = jax.lax.scan(inner, s, jnp.arange(ch))
+            return s, jnp.moveaxis(os, 0, 1)                          # (B,ch,H,N)
+
+        args = tuple(t.reshape(bsz, nc, ch, h, n).swapaxes(0, 1)
+                     for t in (r, k, v, w))
+        s, outs = jax.lax.scan(chunk_step, s0, args)
+        out = outs.swapaxes(0, 1).reshape(bsz, nc * ch, h, n)[:, :L]
+        return out, s
+
+    def apply(self, params: Params, x, ctx: Context,
+              state: Optional[Dict[str, Any]] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        ctx = ctx.scope(self.name)
+        projs = self._projs()
+        b, s, d = x.shape
+        h, n = self.n_heads, self.head_dim
+
+        last = state["shift"] if state is not None else jnp.zeros(
+            (b, 1, d), x.dtype)
+        prev = self._token_shift(x, last)
+        mix = params["mix"]["x"]                                      # (5, D)
+        xr, xk, xv, xg, xw = (x + mix[i] * (prev - x) for i in range(5))
+
+        r = projs["wr"].apply(params["wr"], xr, ctx).reshape(b, s, h, n)
+        k = projs["wk"].apply(params["wk"], xk, ctx).reshape(b, s, h, n)
+        v = projs["wv"].apply(params["wv"], xv, ctx).reshape(b, s, h, n)
+        g = jax.nn.silu(projs["wg"].apply(params["wg"], xg, ctx))
+
+        # data-dependent decay (fp32; `decay` path skipped from quantization)
+        dk = params["decay"]
+        wraw = dk["w0"] + jnp.tanh(xw.astype(jnp.float32) @ dk["a"]) @ dk["b"]
+        w = jnp.exp(-jnp.exp(wraw)).reshape(b, s, h, n)               # (0,1)
+
+        r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+        s0 = state["s"] if state is not None else jnp.zeros(
+            (b, h, n, n), jnp.float32)
+        s0 = ctx.constrain(s0, "batch", "heads", None, None)
+
+        if state is not None and s == 1:
+            kv = k32[:, 0, :, :, None] * v32[:, 0, :, None, :]
+            o = jnp.einsum("bhn,bhnm->bhm",
+                           r32[:, 0], s0 + params["bonus_u"][None, :, :, None] * kv)
+            sT = w[:, 0, :, :, None] * s0 + kv
+            out = o[:, None]
+        else:
+            out, sT = self._scan(r32, k32, v32, w, params["bonus_u"], s0)
+
+        # per-head group norm (ln_out), then gate and project
+        out = out.reshape(b, s, h, n)
+        mu = jnp.mean(out, axis=-1, keepdims=True)
+        var = jnp.var(out, axis=-1, keepdims=True)
+        out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+        out = out.reshape(b, s, d) * params["ln_out"]["scale"]
+        out = (out.astype(self.dtype) * g).astype(self.dtype)
+        y = projs["wo"].apply(params["wo"], out, ctx)
+        new_state = None
+        if state is not None:
+            new_state = {"s": sT, "shift": x[:, -1:, :]}
+        return y, new_state
+
+    def init_state(self, batch: int) -> Dict[str, Any]:
+        return {"s": jnp.zeros((batch, self.n_heads, self.head_dim, self.head_dim),
+                               jnp.float32),
+                "shift": jnp.zeros((batch, 1, self.d_model), self.dtype)}
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6ChannelMix:
+    """RWKV6 channel-mixing FFN: relu²(wk(x̃))·wv with a receptance gate."""
+
+    d_model: int
+    d_ff: int
+    dtype: Any = jnp.float32
+    name: str = "chanmix"
+
+    def _projs(self):
+        return {
+            "wk": Dense(self.d_model, self.d_ff, use_bias=False, dtype=self.dtype,
+                        name="wk"),
+            "wv": Dense(self.d_ff, self.d_model, use_bias=False, dtype=self.dtype,
+                        name="wv"),
+            "wr": Dense(self.d_model, self.d_model, use_bias=False, dtype=self.dtype,
+                        name="wr"),
+        }
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 3)
+        p = {nm: l.init(k) for (nm, l), k in zip(self._projs().items(), ks)}
+        p["mix"] = {"x": jnp.full((2, self.d_model), 0.5, jnp.float32)}
+        return p
+
+    def apply(self, params: Params, x, ctx: Context,
+              state: Optional[Dict[str, Any]] = None):
+        ctx = ctx.scope(self.name)
+        projs = self._projs()
+        last = state["shift"] if state is not None else jnp.zeros(
+            (x.shape[0], 1, x.shape[-1]), x.dtype)
+        prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+        mix = params["mix"]["x"]
+        xk = x + mix[0] * (prev - x)
+        xr = x + mix[1] * (prev - x)
+        k = projs["wk"].apply(params["wk"], xk, ctx)
+        k = jnp.square(jax.nn.relu(k))
+        k = ctx.constrain(k, "batch", None, "ff")
+        kv = projs["wv"].apply(params["wv"], k, ctx)
+        r = jax.nn.sigmoid(projs["wr"].apply(params["wr"], xr, ctx))
+        y = r * kv
+        new_state = {"shift": x[:, -1:, :]} if state is not None else None
+        return y, new_state

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import Optimizer, adamw, multistep_lr, sgd  # noqa: F401

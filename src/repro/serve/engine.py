@@ -1,0 +1,116 @@
+"""Batched serving engine: prefill + decode steps with quantized options.
+
+The serving path is where the paper's memory claims cash out at TPU scale
+(DESIGN.md §2): ``weight_quant`` stores all GEMM weights as int8 QTensors
+(HBM ÷4 — the 1T-param kimi-k2 fits a 512×16GiB fleet only this way) and
+``quantized_kv`` stores the KV cache as int8 on the paper's Qm.n grid
+(cache bytes ÷2 vs bf16; the decode-bound cell's dominant roofline term).
+
+Steps are jit-compiled once per shape; the engine drives a fixed-slot batch
+(continuous-batching-lite): finished sequences are replaced host-side while
+the device tensors keep their static shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.integerize import integerize_weights_only
+from repro.core.policy import QuantPolicy
+from repro.nn.module import Context
+
+
+def make_prefill_step(model, *, mesh=None, axis_rules=None,
+                      policy: Optional[QuantPolicy] = None) -> Callable:
+    """(params, tokens, cache, [embeds/enc]) -> (last_logits, cache')."""
+
+    def prefill(params, tokens, cache, embeds=None, enc=None):
+        ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
+                      mesh=mesh, axis_rules=axis_rules)
+        kw: Dict[str, Any] = {}
+        if enc is not None:
+            kw["enc"] = enc
+        if embeds is not None:
+            kw["embeds"] = embeds
+        logits, new_cache = model.apply(params, tokens, ctx, cache=cache,
+                                        decode=True, **kw)
+        return logits[:, -1], new_cache
+
+    return prefill
+
+
+def make_decode_step(model, *, mesh=None, axis_rules=None,
+                     policy: Optional[QuantPolicy] = None,
+                     temperature: float = 0.0) -> Callable:
+    """(params, token (B,1), cache, rng, [enc]) -> (next (B,1), cache')."""
+
+    def decode(params, token, cache, rng, enc=None):
+        ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
+                      mesh=mesh, axis_rules=axis_rules)
+        kw = {"enc": enc} if enc is not None else {}
+        logits, new_cache = model.apply(params, token, ctx, cache=cache,
+                                        decode=True, **kw)
+        logits = logits[:, -1]
+        # mask the padded-vocab tail so it can never be sampled
+        vocab = getattr(model, "vocab", logits.shape[-1])
+        v_iota = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+        logits = jnp.where(v_iota >= vocab, -jnp.inf, logits)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), new_cache
+
+    return decode
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Fixed-slot batched generation over a (possibly quantized) model."""
+
+    model: Any
+    params: Any
+    max_len: int
+    batch_slots: int
+    quantized_kv: bool = False
+    weight_quant: bool = False
+    temperature: float = 0.0
+    mesh: Any = None
+    axis_rules: Any = None
+
+    def __post_init__(self):
+        if self.weight_quant:
+            self.params = integerize_weights_only(self.params)
+        self._prefill = jax.jit(make_prefill_step(
+            self.model, mesh=self.mesh, axis_rules=self.axis_rules))
+        self._decode = jax.jit(make_decode_step(
+            self.model, mesh=self.mesh, axis_rules=self.axis_rules,
+            temperature=self.temperature))
+
+    def new_cache(self):
+        dt = getattr(self.model, "dtype", jnp.float32)
+        return self.model.init_cache(self.batch_slots, self.max_len,
+                                     quantized_kv=self.quantized_kv,
+                                     kv_dtype=dt)
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 *, seed: int = 0, enc: Optional[jax.Array] = None,
+                 ) -> jax.Array:
+        """prompts: (batch_slots, S_prompt) int32 → (batch_slots, max_new)."""
+        cache = self.new_cache()
+        rng = jax.random.PRNGKey(seed)
+        last_logits, cache = self._prefill(self.params, prompts, cache,
+                                           None, enc)
+        vocab = getattr(self.model, "vocab", last_logits.shape[-1])
+        v_iota = jax.lax.broadcasted_iota(jnp.int32, (last_logits.shape[-1],), 0)
+        masked = jnp.where(v_iota >= vocab, -jnp.inf, last_logits)
+        tok = jnp.argmax(masked, axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for _ in range(max_new_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            tok, cache = self._decode(self.params, tok, cache, sub, enc)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,7 @@
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.trainer import (  # noqa: F401
+    TrainState,
+    make_calib_fn,
+    make_eval_step,
+    make_train_step,
+)

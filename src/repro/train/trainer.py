@@ -1,0 +1,203 @@
+"""Train/eval/calibration step builders (QAT-aware, mesh-aware).
+
+``make_train_step`` returns a jit-able pure function
+``(state, batch) -> (state, metrics)`` where state = {params, opt, step}:
+
+  * the Context threads the active QuantPolicy (OFF → float training,
+    QAT → fake-quant forward + STE backward with per-step range reassessment,
+    exactly paper Sec. 4.3),
+  * microbatched gradient accumulation (``microbatch_split > 1``) runs the
+    batch through an inner ``lax.scan`` — the standard activation-memory lever
+    recorded in §Perf,
+  * under a mesh, sharding constraints inside the model keep the DP/TP/EP
+    layout; gradients inherit param shardings (FSDP ⇒ ZeRO: grads and
+    optimizer state are sharded the same way params are).
+
+``make_dp_shardmap_train_step`` is the explicit-collective variant used by
+the int8 gradient-compression feature (psum is manual inside shard_map).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QMode, QuantPolicy
+from repro.nn.module import Context
+
+TrainState = Dict[str, Any]  # {"params": tree, "opt": tree, "step": int32}
+
+
+def init_train_state(model, optimizer, key) -> TrainState:
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(model, optimizer, lr_schedule, *,
+                    policy: Optional[QuantPolicy] = None,
+                    mesh=None, axis_rules=None,
+                    microbatch_split: int = 1,
+                    int8_weight_gather: bool = False,
+                    loss_scale: float = 1.0) -> Callable:
+    """``int8_weight_gather``: materialize an int8 copy of every GEMM weight
+    inside the step (STE backward, f32/bf16 master untouched) so FSDP
+    all-gathers move int8 — the paper's quantizer applied to the wire."""
+    policy = policy or QuantPolicy.float32()
+
+    def loss_fn(params, batch, step, rng):
+        if int8_weight_gather:
+            from repro.core.integerize import fake_int8_weights
+
+            params = fake_int8_weights(params, mesh=mesh, rules=axis_rules)
+        ctx = Context(policy=policy, train=True, rng=rng, mesh=mesh,
+                      axis_rules=axis_rules)
+        loss, mets = model.loss(params, batch, ctx)
+        return loss * loss_scale, mets
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> tuple:
+        params, opt, step = state["params"], state["opt"], state["step"]
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), step)
+
+        if microbatch_split > 1:
+            def micro(carry, mb):
+                gacc, lacc, aacc = carry
+                (l, mets), g = grad_fn(params, mb, step, rng)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, lacc + l, aacc + mets["accuracy"]), None
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatch_split,
+                                    x.shape[0] // microbatch_split,
+                                    *x.shape[1:]), batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, acc), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatch_split, grads)
+            loss, acc = loss / microbatch_split, acc / microbatch_split
+            mets = {"accuracy": acc}
+        else:
+            (loss, mets), grads = grad_fn(params, batch, step, rng)
+
+        if loss_scale != 1.0:
+            grads = jax.tree_util.tree_map(lambda g: g / loss_scale, grads)
+            loss = loss / loss_scale
+        lr = lr_schedule(step) if callable(lr_schedule) else lr_schedule
+        new_params, new_opt = optimizer.update(grads, opt, params, lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        metrics = {"loss": loss, "lr": jnp.asarray(lr, jnp.float32), **mets}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, *, policy: Optional[QuantPolicy] = None,
+                   qstate=None, mesh=None, axis_rules=None) -> Callable:
+    policy = policy or QuantPolicy.float32()
+
+    def eval_step(params, batch):
+        ctx = Context(policy=policy, train=False, qstate=qstate, mesh=mesh,
+                      axis_rules=axis_rules)
+        loss, mets = model.loss(params, batch, ctx)
+        return {"loss": loss, **mets}
+
+    return eval_step
+
+
+def make_calib_fn(model, policy: QuantPolicy) -> Callable:
+    """apply_fn for repro.core.ptq.calibrate: records activation ranges."""
+
+    def apply_fn(params, batch, ctx):
+        return model.loss(params, batch, ctx)
+
+    return apply_fn
+
+
+def calibrate_model(model, params, batches, policy: QuantPolicy):
+    """Run CALIB forward passes over `batches`; return frozen exponents."""
+    from repro.core import ptq
+
+    calib_policy = policy.with_mode(QMode.CALIB)
+
+    @jax.jit
+    def step(p, batch):
+        ctx = Context(policy=calib_policy, train=False)
+        model.loss(p, batch, ctx)
+        return ctx.stats
+
+    acc: Dict[str, jax.Array] = {}
+    for batch in batches:
+        stats = step(params, batch)
+        for k, v in stats.items():
+            acc[k] = jnp.maximum(acc[k], v) if k in acc else v
+    return ptq.ranges_to_qstate(acc, policy)
+
+
+# --------------------------------------------------------------------------
+# Explicit-DP shard_map train step with int8 gradient compression
+# --------------------------------------------------------------------------
+
+
+def make_dp_shardmap_train_step(model, optimizer, lr_schedule, mesh, *,
+                                policy: Optional[QuantPolicy] = None,
+                                compress_bits: int = 0,
+                                axis_name: str = "data") -> Callable:
+    """Pure-DP training over `axis_name` with manual psum — enables the
+    paper-grid int8 gradient all-reduce (dist/compress.py).
+
+    state gains an "err" tree (error feedback) when compression is on.
+    Params are replicated; batch is sharded on dim 0.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.compress import compressed_grad_allreduce
+
+    policy = policy or QuantPolicy.float32()
+
+    def loss_fn(params, batch, step):
+        ctx = Context(policy=policy, train=True,
+                      rng=jax.random.fold_in(jax.random.PRNGKey(0), step))
+        loss, mets = model.loss(params, batch, ctx)
+        return loss, mets
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step_body(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+        (loss, mets), grads = grad_fn(params, batch, step)
+        if compress_bits:
+            grads, new_err = compressed_grad_allreduce(
+                grads, axis_name, bits=compress_bits, error_state=state["err"])
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, axis_name), grads)
+            new_err = None
+        loss = jax.lax.pmean(loss, axis_name)
+        acc = jax.lax.pmean(mets["accuracy"], axis_name)
+        lr = lr_schedule(step) if callable(lr_schedule) else lr_schedule
+        new_params, new_opt = optimizer.update(grads, opt, params, lr)
+        out = {"params": new_params, "opt": new_opt, "step": step + 1}
+        if new_err is not None:
+            out["err"] = new_err
+        return out, {"loss": loss, "accuracy": acc}
+
+    def train_step(state, batch):
+        if compress_bits and "err" not in state:
+            state = dict(state, err=jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]))
+        sspec = jax.tree_util.tree_map(lambda _: P(), state)
+        bspec = jax.tree_util.tree_map(lambda _: P(axis_name), batch)
+        fn = jax.shard_map(step_body, mesh=mesh, in_specs=(sspec, bspec),
+                           out_specs=(sspec, jax.tree_util.tree_map(
+                               lambda _: P(), {"loss": 0, "accuracy": 0})),
+                           check_vma=False)
+        return jax.jit(fn)(state, batch)
+
+    return train_step

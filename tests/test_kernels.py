@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.qconv1d import qconv1d_pallas
+from repro.kernels.qdecode_attn import qdecode_attn_pallas
+from repro.kernels.qmm import qmm_pallas, qmm_requant_pallas
+from repro.kernels.wq_matmul import wq_matmul_pallas
+
+
+def _rand_int(key, shape, dtype):
+    info = jnp.iinfo(dtype)
+    return jax.random.randint(key, shape, info.min, info.max + 1, dtype=jnp.int32).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (128, 256, 128), (100, 300, 50), (1, 512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])
+def test_qmm_matches_ref(m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = _rand_int(kx, (m, k), dtype)
+    w = _rand_int(kw, (k, n), dtype)
+    got = qmm_pallas(x, w, bm=32, bk=64, bn=32, interpret=True)
+    want = ref.qmm_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shift", [-3, 0, 5, 11])
+@pytest.mark.parametrize("width", [8, 16])
+def test_qmm_requant_matches_ref(shift, width):
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    x = _rand_int(kx, (64, 96), jnp.int8)
+    w = _rand_int(kw, (96, 48), jnp.int8)
+    got = qmm_requant_pallas(x, w, jnp.int32(shift), width=width, bm=32, bk=32, bn=32,
+                             interpret=True)
+    want = ref.qmm_requant_ref(x, w, shift, width=width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 32, 16), (64, 128, 256), (33, 100, 77)])
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_wq_matmul_matches_ref(m, k, n, per_channel):
+    kx, kw, kn = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    wq = _rand_int(kw, (k, n), jnp.int8)
+    if per_channel:
+        nexp = jax.random.randint(kn, (n,), 3, 9)
+    else:
+        nexp = jnp.int32(6)
+    scale = jnp.exp2(-nexp.astype(jnp.float32))
+    got = wq_matmul_pallas(x, wq, scale, bm=32, bk=64, bn=32, interpret=True)
+    want = ref.wq_matmul_ref(x, wq, scale)
+    # Kernel applies the pow2 scale after K-accumulation (exact in real
+    # arithmetic; differs from the ref only by f32 reassociation rounding).
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(7,), (128, 9), (4, 33, 5)])
+@pytest.mark.parametrize("width,n", [(8, 5), (16, 9), (8, -2)])
+def test_fake_quant_matches_ref(shape, width, n):
+    x = jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32) * 4.0
+    got = fake_quant_pallas(x, jnp.int32(n), width=width, block_rows=8, interpret=True)
+    want = ref.fake_quant_ref(x, n, width=width)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("b,w,c,f,ksize,stride,padding", [
+    (2, 128, 9, 16, 3, 1, "SAME"),
+    (1, 64, 8, 32, 5, 1, "SAME"),
+    (3, 128, 16, 24, 3, 2, "SAME"),
+    (2, 50, 4, 8, 3, 1, "VALID"),
+    (1, 33, 3, 130, 7, 2, "VALID"),
+])
+def test_qconv1d_matches_ref(b, w, c, f, ksize, stride, padding):
+    kx, kw = jax.random.split(jax.random.PRNGKey(4))
+    x = _rand_int(kx, (b, w, c), jnp.int8)
+    wgt = _rand_int(kw, (ksize, c, f), jnp.int8)
+    got = qconv1d_pallas(x, wgt, stride=stride, padding=padding, bf=64, interpret=True)
+    want = ref.qconv1d_ref(x, wgt, stride=stride, padding=padding)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,s,kv_len", [
+    (2, 8, 2, 64, 256, 256),
+    (1, 4, 4, 32, 128, 100),
+    (2, 16, 2, 64, 512, 17),
+])
+def test_qdecode_attn_matches_ref(b, hq, hkv, d, s, kv_len):
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (b, hq, d), jnp.float32)
+    kc = _rand_int(keys[1], (b, s, hkv, d), jnp.int8)
+    vc = _rand_int(keys[2], (b, s, hkv, d), jnp.int8)
+    k_n, v_n = jnp.int32(5), jnp.int32(6)
+    got = qdecode_attn_pallas(q, kc, vc, k_n, v_n, jnp.int32(kv_len), bs=64, interpret=True)
+    want = ref.qdecode_attn_ref(q, kc, vc, k_n, v_n, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis) for the quantization core's invariants.
+
+These pin down the *mathematical contract* of the paper's scheme (Eqs. 1-4 +
+Sec. 5.8 integer arithmetic) over adversarial inputs, not just examples.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import qformat
+from repro.core.quantizers import fake_quant
+
+jax.config.update("jax_enable_x64", False)
+
+finite_floats = st.floats(min_value=-1e4, max_value=1e4,
+                          allow_nan=False, allow_infinity=False, width=32)
+small_arrays = hnp.arrays(np.float32, hnp.array_shapes(max_dims=2,
+                                                       max_side=16),
+                          elements=finite_floats)
+widths = st.sampled_from([8, 9, 16])
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_arrays, widths)
+def test_quantize_dequantize_error_bound(x, width):
+    """|x − dq(q(x))| ≤ 2⁻ⁿ for every in-range element (truncation ≤ 1 step)."""
+    n = qformat.frac_bits_for(qformat.max_abs(jnp.asarray(x)), width)
+    q = qformat.quantize(jnp.asarray(x), n, width)
+    back = np.asarray(qformat.dequantize(q, n))
+    step = float(2.0 ** -int(n))
+    in_range = np.abs(x) * 2.0 ** int(n) <= qformat.qmax(width)
+    err = np.abs(x - back)
+    assert np.all(err[in_range] <= step * (1 + 1e-5)), err.max()
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_arrays, widths)
+def test_no_overflow_at_derived_exponent(x, width):
+    """Eq. 1-2's exponent never saturates the max element (paper's whole
+    point: represent the full range)."""
+    xa = jnp.asarray(x)
+    ma = float(qformat.max_abs(xa))
+    if ma == 0 or ma < 2.0 ** -(qformat.N_MAX - 1):
+        return
+    n = qformat.frac_bits_for(qformat.max_abs(xa), width)
+    scaled = np.abs(x).max() * 2.0 ** int(n)
+    # the max element must fit in the integer range (with trunc, strictly)
+    assert scaled <= qformat.qmax(width) + 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_arrays, widths)
+def test_fake_quant_idempotent(x, width):
+    """Fake-quant is a projection: applying it twice = once (same grid)."""
+    xa = jnp.asarray(x)
+    n = qformat.frac_bits_for(qformat.max_abs(xa), width)
+    y1 = np.asarray(qformat.quantize_dequantize(xa, n, width))
+    y2 = np.asarray(qformat.quantize_dequantize(jnp.asarray(y1), n, width))
+    np.testing.assert_allclose(y1, y2, rtol=0, atol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.int32, (8,), elements=st.integers(-2**20, 2**20)),
+       st.integers(-8, 8), st.integers(-8, 8), st.sampled_from([8, 16]))
+def test_requantize_matches_float_semantics(acc, n_in, n_out, width):
+    """Integer shift requant == float rescale + trunc-toward-neg-inf + sat.
+
+    (Arithmetic right shift floors — the documented engine semantics.)
+    """
+    got = np.asarray(qformat.requantize(jnp.asarray(acc), jnp.int32(n_in),
+                                        jnp.int32(n_out), width))
+    shift = n_in - n_out
+    if shift >= 0:
+        want = np.floor(acc / 2.0 ** shift)
+    else:
+        want = acc * 2.0 ** (-shift)
+    want = np.clip(want, qformat.qmin(width), qformat.qmax(width))
+    np.testing.assert_array_equal(got, want.astype(got.dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.int8, (16,), elements=st.integers(-128, 127)),
+       st.integers(-4, 10), st.integers(-4, 10))
+def test_align_is_exact_left_shift(q, n_x, n_common):
+    """Aligning to more fractional bits is exact (information-preserving)."""
+    if n_common < n_x:
+        return
+    out = np.asarray(qformat.align(jnp.asarray(q), jnp.int32(n_x),
+                                   jnp.int32(n_common)))
+    np.testing.assert_array_equal(out, q.astype(np.int64) * 2 ** (n_common - n_x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_arrays)
+def test_ste_gradient_is_identity(x):
+    """QAT backward: d(fake_quant)/dx == 1 elementwise (paper Sec. 4.3)."""
+    xa = jnp.asarray(x)
+    n = jnp.int32(5)
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t, n, 8)))(xa)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_qtensor_rom_bytes(rows, cols):
+    """Table A3 semantics: logical-width bytes, not container bytes (int9!)."""
+    x = jnp.ones((rows, cols))
+    t8 = qformat.quantize_tensor(x, 8)
+    t9 = qformat.quantize_tensor(x, 9)
+    t16 = qformat.quantize_tensor(x, 16)
+    assert t8.nbytes_model == rows * cols
+    assert t9.nbytes_model == rows * cols * 9 // 8   # int9 logical packing
+    assert t16.nbytes_model == rows * cols * 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 1024)),
+                min_size=2, max_size=12))
+def test_pool_allocator_no_conflicts(layers):
+    """The paper's RAM-pool allocator never places a layer's output over its
+    own input, and total RAM ≥ the largest single buffer."""
+    from repro.core.cost_model import PoolAllocator
+
+    graph = []
+    prev = None
+    for i, (_, nbytes) in enumerate(layers):
+        graph.append({"name": f"l{i}", "inputs": [prev] if prev else [],
+                      "bytes": nbytes})
+        prev = f"l{i}"
+    alloc = PoolAllocator()
+    total = alloc.allocate(graph)
+    assert total >= max(b for _, b in layers)
+    assert len(alloc.pools) >= 2 or len(layers) < 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.float32, (4, 8), elements=finite_floats))
+def test_per_channel_beats_or_ties_per_tensor(x):
+    """Per-channel exponents (beyond-paper) never increase quantization MSE."""
+    xa = jnp.asarray(x)
+    pt = qformat.quantize_tensor(xa, 8)
+    pc = qformat.quantize_tensor(xa, 8, channel_axis=1)
+    mse_t = float(jnp.mean(jnp.square(xa - pt.dequantize())))
+    mse_c = float(jnp.mean(jnp.square(xa - pc.dequantize())))
+    assert mse_c <= mse_t * (1 + 1e-4) + 1e-12

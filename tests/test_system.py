@@ -1,0 +1,293 @@
+"""End-to-end system tests: the paper's full pipeline (train → quantize →
+deploy) plus the framework's fault-tolerance and serving behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.microai_resnet import build_resnet
+from repro.core import integerize
+from repro.core.policy import QMode, QuantPolicy
+from repro.data.synthetic import make_classification_dataset
+from repro.models.registry import get_config
+from repro.nn.module import Context, eval_context
+from repro.optim import multistep_lr, sgd
+from repro.serve.engine import ServeEngine
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import make_train_step
+
+
+# --------------------------------------------------------------------------
+# Paper pipeline on the paper's network
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained_resnet():
+    """A small float ResNetv1-6 trained on synthetic UCI-HAR-like data."""
+    x_tr, y_tr, x_te, y_te = make_classification_dataset(
+        "uci-har", n_train=768, n_test=256, seed=0)
+    model = build_resnet("uci-har", filters=12)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = sgd(momentum=0.9, weight_decay=5e-4)
+    opt_state = opt.init(params)
+    sched = multistep_lr(0.05, milestones=(260, 340))
+
+    @jax.jit
+    def step(params, opt_state, xb, yb, lr):
+        def loss_fn(p):
+            logits = model.apply(p, xb, Context(train=True))
+            oh = jax.nn.one_hot(yb, logits.shape[-1])
+            return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(0)
+    bs = 64
+    for it in range(400):
+        idx = rng.integers(0, x_tr.shape[0], bs)
+        params, opt_state, loss = step(params, opt_state, x_tr[idx], y_tr[idx],
+                                       sched(it))
+    return model, params, (x_te, y_te)
+
+
+def _accuracy(model, params, data, ctx):
+    x, y = data
+    logits = model.apply(params, x, ctx)
+    if hasattr(logits, "dequantize"):
+        logits = logits.dequantize()
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def test_float_baseline_learns(trained_resnet):
+    model, params, test = trained_resnet
+    acc = _accuracy(model, params, test, eval_context())
+    assert acc > 0.8, f"float baseline failed to learn: {acc}"
+
+
+def test_int16_ptq_matches_float(trained_resnet):
+    """Paper claim C1: int16 PTQ ≈ float32, no QAT needed."""
+    model, params, test = trained_resnet
+    acc_f = _accuracy(model, params, test, eval_context())
+    acc_16 = _accuracy(model, params, test,
+                       eval_context(QuantPolicy.int16_ptq()))
+    assert abs(acc_f - acc_16) < 0.02, (acc_f, acc_16)
+
+
+def test_int8_ptq_reasonable_int9_better(trained_resnet):
+    """Paper Appendix B shape: int9 PTQ ≥ int8 PTQ (more grid precision)."""
+    model, params, test = trained_resnet
+    pol8 = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8)
+    pol9 = QuantPolicy.int9_ptq()
+    acc8 = _accuracy(model, params, test, eval_context(pol8))
+    acc9 = _accuracy(model, params, test, eval_context(pol9))
+    acc_f = _accuracy(model, params, test, eval_context())
+    assert acc9 >= acc8 - 0.02
+    assert acc_f - acc8 < 0.15, f"int8 PTQ collapsed: {acc8} vs {acc_f}"
+
+
+def test_integer_engine_end_to_end(trained_resnet):
+    """Paper Sec. 5.8: calibrate → integerize → full-integer inference.
+
+    The integer engine's predictions must track the fake-quant EVAL path
+    (same grid, same scales) almost everywhere.
+    """
+    model, params, (x_te, y_te) = trained_resnet
+    policy = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8)
+
+    calib = policy.with_mode(QMode.CALIB)
+
+    @jax.jit
+    def calib_step(p, xb):
+        ctx = Context(policy=calib, train=False)
+        model.apply(p, xb, ctx)
+        return ctx.stats
+
+    acc_stats = {}
+    for i in range(4):
+        st = calib_step(params, x_te[i * 32:(i + 1) * 32])
+        for k, v in st.items():
+            acc_stats[k] = jnp.maximum(acc_stats[k], v) if k in acc_stats else v
+    from repro.core import ptq
+
+    qstate = ptq.ranges_to_qstate(acc_stats, policy)
+    iparams = integerize.integerize(params, policy, qstate)
+
+    # input quantization (paper Sec. 5.6: caller converts)
+    in_site = "resnet6/conv1/in"
+    assert in_site in qstate
+    xq = integerize.quantize_input(x_te[:64], qstate, in_site, 8)
+
+    int_ctx = Context(policy=policy.with_mode(QMode.INTEGER), train=False,
+                      qstate=qstate)
+    out = model.apply(iparams, xq, int_ctx)
+    assert out.shape == (64, 6)
+    int_pred = jnp.argmax(out, -1)
+
+    eval_ctx = Context(policy=policy, train=False, qstate=qstate)
+    fq_logits = model.apply(params, x_te[:64], eval_ctx)
+    fq_pred = jnp.argmax(fq_logits, -1)
+    agree = float(jnp.mean(int_pred == fq_pred))
+    assert agree > 0.9, f"integer engine diverges from fake-quant: {agree}"
+
+    # memory claim C3: int8 storage is ~4x smaller than float32
+    rom_int8 = integerize.model_rom_bytes(iparams)
+    rom_f32 = integerize.model_rom_bytes(params)
+    assert rom_f32 / rom_int8 > 3.5, (rom_f32, rom_int8)
+
+
+def test_weight_only_serving_path(trained_resnet):
+    """int8 weight-only (TPU serving mode): logits stay close to float."""
+    model, params, (x_te, _) = trained_resnet
+    wq = integerize.integerize_weights_only(params)
+    lf = model.apply(params, x_te[:32], eval_context())
+    lq = model.apply(wq, x_te[:32], eval_context())
+    cos = jnp.sum(lf * lq) / (jnp.linalg.norm(lf) * jnp.linalg.norm(lq))
+    assert float(cos) > 0.99, float(cos)
+
+
+# --------------------------------------------------------------------------
+# Fault tolerance
+# --------------------------------------------------------------------------
+
+def test_checkpoint_restart_exact_resume(tmp_path):
+    """Simulated preemption: resume from the checkpoint reproduces the run."""
+    from repro.data.pipeline import markov_batch_fn
+
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="none")
+    opt = sgd(momentum=0.9)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step_fn = jax.jit(make_train_step(model, opt, 0.01))
+    bf = markov_batch_fn(cfg.vocab, 4, 32, seed=3)
+
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    losses = []
+    for s in range(6):
+        state, m = step_fn(state, bf(s))
+        losses.append(float(m["loss"]))
+        if s == 2:
+            ckpt.save(3, state)
+
+    # "preemption": restart from step 3 and replay
+    state2 = ckpt.restore(3, {"params": params, "opt": opt.init(params),
+                              "step": jnp.zeros((), jnp.int32)})
+    assert int(state2["step"]) == 3
+    for s in range(3, 6):
+        state2, m2 = step_fn(state2, bf(s))
+        assert abs(float(m2["loss"]) - losses[s]) < 1e-5, s
+    for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                    jax.tree_util.tree_leaves(state2["params"])):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_checkpoint_atomicity_and_retention(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    tree = {"w": jnp.arange(8.0), "b": {"x": jnp.ones((3,))}}
+    for s in (1, 2, 3):
+        ckpt.save(s, tree)
+    assert ckpt.all_steps() == [2, 3]      # retention
+    # a stale .tmp dir (killed writer) must be invisible to restore
+    os.makedirs(os.path.join(str(tmp_path), "ck", "step_000000009.tmp"))
+    assert ckpt.latest_step() == 3
+    restored = ckpt.restore(3, tree)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_elastic_restore_changes_dtype(tmp_path):
+    """Restore casts dtypes onto the target spec (mesh-independent format)."""
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(1, tree)
+    target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    out = ckpt.restore(1, target)
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_async_checkpoint(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    tree = {"w": jnp.ones((128, 128))}
+    fut = ckpt.save_async(7, tree)
+    fut.result()
+    assert ckpt.latest_step() == 7
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def test_serve_engine_quantized_variants_agree():
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.arange(2 * 8, dtype=jnp.int32).reshape(2, 8) % cfg.vocab
+
+    outs = {}
+    for name, kw in [("float", {}), ("qkv", {"quantized_kv": True}),
+                     ("wq", {"weight_quant": True})]:
+        eng = ServeEngine(model=model, params=params, max_len=24,
+                          batch_slots=2, **kw)
+        outs[name] = np.asarray(eng.generate(prompts, 8))
+    assert outs["float"].shape == (2, 8)
+    for name in ("qkv", "wq"):
+        assert outs[name].max() < cfg.vocab
+        assert (outs[name][:, 0] == outs["float"][:, 0]).mean() >= 0.5
+
+
+def test_kv_cache_int8_quantization_grid():
+    """int8 KV cache follows the paper's Qm.n grid exactly."""
+    from repro.nn.attention import init_kv_cache, update_kv_cache
+
+    cache = init_kv_cache(1, 8, 2, 4, quantized=True, cache_n=3)
+    k = jnp.full((1, 2, 2, 4), 0.77)
+    v = jnp.full((1, 2, 2, 4), -1.23)
+    cache = update_kv_cache(cache, k, v)
+    assert int(cache["k"][0, 0, 0, 0]) == int(0.77 * 8)     # trunc(x * 2^3)
+    assert int(cache["v"][0, 0, 0, 0]) == int(np.trunc(-1.23 * 8))
+    assert int(cache["len"]) == 2
+
+
+# --------------------------------------------------------------------------
+# Data pipeline determinism
+# --------------------------------------------------------------------------
+
+def test_pipeline_step_determinism():
+    from repro.data.pipeline import markov_batch_fn
+
+    bf1 = markov_batch_fn(1000, 4, 16, seed=7)
+    bf2 = markov_batch_fn(1000, 4, 16, seed=7)
+    np.testing.assert_array_equal(bf1(5)["tokens"], bf2(5)["tokens"])
+    assert not np.array_equal(bf1(5)["tokens"], bf1(6)["tokens"])
+
+
+def test_int8_weight_gather_training_learns():
+    """Beyond-paper: training with materialized-int8 weights (STE, float
+    master) — the optimizer accumulates exactly while every forward uses the
+    paper's int8 grid."""
+    import jax
+
+    from repro.data.pipeline import markov_batch_fn
+    from repro.optim import sgd
+
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="none")
+    opt = sgd(momentum=0.9)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step = jax.jit(make_train_step(model, opt, 0.05,
+                                   int8_weight_gather=True))
+    bf = markov_batch_fn(cfg.vocab, 16, 32, seed=2)
+    losses = []
+    for s in range(20):
+        state, m = step(state, bf(s))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.15, losses
+    # master params stay float (exact accumulation)
+    leaves = jax.tree_util.tree_leaves(state["params"])
+    assert all(l.dtype == jnp.float32 for l in leaves)
