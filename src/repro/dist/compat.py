@@ -1,0 +1,46 @@
+"""Version compatibility for the distribution layer.
+
+The codebase targets the modern JAX surface (``jax.shard_map`` with
+``check_vma``, ``AbstractMesh(axis_sizes, axis_names)``); the pinned
+container ships jax 0.4.x where shard_map still lives in
+``jax.experimental.shard_map`` under the ``check_rep`` spelling.  This module
+polyfills the new names onto the old wheel — imported for its side effect by
+``repro.dist.__init__`` so any caller that touches the dist layer gets the
+uniform API.  On a new-enough jax it is a no-op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def _polyfill_shard_map():
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    @functools.wraps(_legacy)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        check = True
+        if check_vma is not None:
+            check = check_vma
+        if check_rep is not None:
+            check = check_rep
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=check, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``AbstractMesh`` under both calling conventions (>=0.5 takes
+    ``(sizes, names)``; 0.4.x takes a ``((name, size), ...)`` tuple)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+_polyfill_shard_map()

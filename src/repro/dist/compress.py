@@ -1,0 +1,74 @@
+"""int8 gradient all-reduce on the paper's power-of-two Qm.n grid.
+
+The same uniform, symmetric, pow2-scale quantizer the paper deploys on the
+Cortex-M (``core/qformat``, Eqs. 1–4) doubles as a gradient-compression codec
+for data-parallel training: every shard quantizes its local gradient onto a
+*shared* grid (the exponent is derived from the pmax of the shard maxima, so
+all shards agree bit-for-bit), the integer payloads are psum-reduced — exact,
+integers add losslessly — and the mean is dequantized with one shift.  Wire
+bytes drop 4× vs f32 (the DCN-crossing all-reduce is the scaling bottleneck,
+see launch/mesh.py).
+
+Error feedback (Seide et al. 2014; Karimireddy et al. 2019) makes the scheme
+convergent: the residual each step's quantization dropped is carried into the
+next step's gradient, so the *cumulative* compressed update tracks the
+cumulative exact update to within one quantization step.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qformat
+
+
+def compressed_psum_mean(g: jax.Array, axis_name: str, *, bits: int = 8,
+                         error: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Mean of ``g`` over ``axis_name`` through a ``bits``-wide integer
+    all-reduce.  Must be called inside ``shard_map``/``pmap``.
+
+    ``error`` is this leaf's error-feedback state (same shape as ``g``;
+    zeros on the first step).  Returns ``(mean, new_error)`` where
+    ``new_error`` is exactly what quantization dropped this step.
+    """
+    e = jnp.zeros_like(g) if error is None else error
+    v = g + e
+    # Shared grid: every shard derives the exponent from the *global* max so
+    # the integer payloads are commensurable (psum of mismatched grids would
+    # be meaningless).
+    ma = jax.lax.pmax(jnp.max(jnp.abs(v)), axis_name)
+    n = qformat.frac_bits_for(ma, bits)
+    q = qformat.quantize(v, n, bits)
+    new_error = v - qformat.dequantize(q, n)
+    acc = jax.lax.psum(q.astype(qformat.accumulator_dtype(bits)), axis_name)
+    world = jax.lax.psum(1, axis_name)
+    mean = qformat.dequantize(acc, n) / world
+    return mean.astype(g.dtype), new_error.astype(g.dtype)
+
+
+def compressed_grad_allreduce(grads: Any, axis_name: str, *, bits: int = 8,
+                              error_state: Optional[Any] = None
+                              ) -> Tuple[Any, Any]:
+    """Tree-wise :func:`compressed_psum_mean`: each leaf gets its own Qm.n
+    grid (per-tensor exponents, the paper's per-layer granularity applied to
+    gradients) and its own error-feedback slot.
+
+    Returns ``(mean_tree, new_error_tree)``; ``error_state=None`` starts the
+    feedback at zero.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if error_state is None:
+        errs = [None] * len(leaves)
+    else:
+        errs = jax.tree_util.tree_leaves(error_state)
+        assert len(errs) == len(leaves), "error_state must mirror grads"
+    means, new_errs = [], []
+    for g, e in zip(leaves, errs):
+        m, ne = compressed_psum_mean(g, axis_name, bits=bits, error=e)
+        means.append(m)
+        new_errs.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, means),
+            jax.tree_util.tree_unflatten(treedef, new_errs))

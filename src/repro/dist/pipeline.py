@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism over ``shard_map``.
+
+The multi-pod mesh's ``pod`` axis (launch/mesh.py) is repurposed as a stage
+axis: device *s* holds stage *s*'s weights (stacked on dim 0 and sharded over
+the axis), microbatches flow stage-to-stage through a ``ppermute`` ring.  The
+schedule is the classic GPipe fill/steady/drain: with M microbatches and S
+stages it runs M + S − 1 ticks, each tick every device computes its stage on
+the microbatch in flight and passes the activation to its successor, so the
+bubble fraction is (S − 1) / (M + S − 1).
+
+Numerically the pipeline is *exactly* the sequential composition of the
+stage function — same ops in the same order per microbatch — which
+``tests/test_dist.py::test_pipeline_parallel_matches_sequential`` pins down.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def make_pipelined_fn(stage_fn: Callable, mesh, *,
+                      axis_name: str = "pod") -> Callable:
+    """Build ``run(stage_params, x) -> y`` executing ``stage_fn`` as a
+    pipeline over ``mesh[axis_name]``.
+
+    ``stage_fn(params_s, x_mb)`` applies one stage to one microbatch.
+    ``stage_params`` is a pytree whose leaves are stacked ``(n_stages, ...)``;
+    ``x`` is ``(n_micro, microbatch, ...)``.  Output matches ``x``'s shape
+    with every stage applied in order to every microbatch.
+    """
+    n_stages = int(dict(mesh.shape)[axis_name])
+    ring = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def body(stage_params, x):
+        stage = jax.lax.axis_index(axis_name)
+        w = jax.tree_util.tree_map(lambda l: l[0], stage_params)
+        n_micro = x.shape[0]
+        ticks = n_micro + n_stages - 1
+
+        def tick(carry, t):
+            prev, outputs = carry
+            # pass last tick's activation to the next stage (ring; stage 0's
+            # incoming edge carries drain-phase garbage and is ignored below)
+            recv = jax.lax.ppermute(prev, axis_name, ring)
+            inp = jnp.where(stage == 0, x[jnp.clip(t, 0, n_micro - 1)], recv)
+            y = stage_fn(w, inp)
+            # the last stage emits microbatch t-(S-1) once the pipe is full
+            out_t = t - (n_stages - 1)
+            write = jnp.logical_and(stage == n_stages - 1, out_t >= 0)
+            written = outputs.at[jnp.clip(out_t, 0, n_micro - 1)].set(y)
+            outputs = jnp.where(write, written, outputs)
+            return (y, outputs), None
+
+        zero = jnp.zeros(x.shape[1:], x.dtype)
+        (_, outputs), _ = jax.lax.scan(
+            tick, (zero, jnp.zeros_like(x)), jnp.arange(ticks))
+        # only the last stage holds the result; psum broadcasts it (all other
+        # stages contribute zeros) and makes the output mesh-invariant
+        outputs = jnp.where(stage == n_stages - 1, outputs,
+                            jnp.zeros_like(outputs))
+        return jax.lax.psum(outputs, axis_name)
+
+    # One jitted wrapper per input rank: the specs depend only on x.ndim, and
+    # rebuilding shard_map+jit per call would retrace/recompile every step.
+    _jitted: dict = {}
+
+    def run(stage_params: Any, x: jax.Array) -> jax.Array:
+        fn = _jitted.get(x.ndim)
+        if fn is None:
+            fn = jax.jit(jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(axis_name), P(*([None] * x.ndim))),
+                out_specs=P(*([None] * x.ndim)),
+                check_vma=False))
+            _jitted[x.ndim] = fn
+        return fn(stage_params, x)
+
+    return run

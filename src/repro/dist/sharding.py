@@ -1,0 +1,262 @@
+"""Mesh-axis rule inference: logical axes → physical mesh axes → PartitionSpecs.
+
+The contract has two halves:
+
+1. ``make_axis_rules(mesh, ...)`` returns the *logical→physical* mapping the
+   model's activation constraints consume (``Context.constrain`` keys:
+   ``batch``, ``seq``, ``heads``, ``kv_heads``, ``ff``, ``expert``, ``fsdp``,
+   ``model``, ``kv_seq``).  A value is a mesh-axis name, a tuple of names
+   (composed axes, e.g. DP over ``("data", "pod")``), or None (replicated).
+
+2. ``_spec_for_path`` / ``param_pspecs`` / ``batch_pspecs`` / ``cache_pspecs``
+   turn those rules into concrete :class:`~jax.sharding.NamedSharding` trees
+   for whole param / batch / cache pytrees, by *path* (router and norm leaves
+   stay replicated) and by *shape* (an axis whose dimension is not divisible
+   by the mesh-axis size is dropped rather than padded — JAX would otherwise
+   emit uneven shardings that show up as pathological all-gathers).
+
+Layout conventions (DESIGN.md §3):
+
+* dense kernels ``(..., D_in, D_out)``: FSDP on the second-to-last dim over
+  ``data``, tensor parallelism on the last dim over ``model``; scan-stacked
+  leading dims are replicated (every device steps every layer).
+* stacked expert kernels ``(..., E, A, B)``: expert parallelism on E over
+  ``model``; the FSDP axis *flips orientation* between train and serve —
+  training shards the F (output) dim so the backward all-gathers overlap the
+  wide GEMM, decode shards the D (contracting) dim so expert weights stay
+  stationary and only small activation psums cross the wire.
+* QTensor leaves: the int8 payload shards like the float kernel it replaced;
+  per-channel exponents ``n`` ride whatever the payload's channel axis got.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.qformat import QTensor
+from repro.nn.module import map_with_path
+
+AxisEntry = Any  # str | tuple[str, ...] | None
+
+# Param-path segments whose leaves stay replicated: tiny and/or
+# precision-sensitive (router decision boundary, norm scales, ssm internals) —
+# same family as repro.core.integerize._SKIP_SUBSTR.
+_REPLICATED_SUBSTR = ("router", "ln", "rms", "norm", "bn",
+                      "a_log", "dt_", "decay")
+
+
+def make_axis_rules(mesh, *, seq_shard: bool = False,
+                    decode_kv_shard: bool = True,
+                    dp_only: bool = False) -> Dict[str, AxisEntry]:
+    """Logical→physical axis rules for ``mesh``.
+
+    ``dp_only``   — repurpose every mesh axis for data parallelism (the batch
+                    rule becomes ``("data", "model", "pod")``; params
+                    replicate).  Used for small models where TP is overhead.
+    ``seq_shard`` — sequence-parallel activations (``seq`` → ``model``).
+    ``decode_kv_shard`` — shard the KV-cache sequence dim over ``model``
+                    (the decode default); off = replicate the cache.
+    """
+    names = tuple(getattr(mesh, "axis_names", ()))
+
+    def have(a):
+        return a in names
+
+    if dp_only:
+        batch = tuple(a for a in ("data", "model", "pod") if have(a))
+        tensor = None
+        fsdp = None
+    else:
+        batch = tuple(a for a in ("data", "pod") if have(a))
+        tensor = "model" if have("model") else None
+        fsdp = "data" if have("data") else None
+    return {
+        "batch": batch or None,
+        "fsdp": fsdp,
+        "model": tensor,
+        "ff": tensor,
+        "heads": tensor,
+        "kv_heads": tensor,
+        "expert": tensor,
+        "seq": tensor if seq_shard else None,
+        "kv_seq": tensor if decode_kv_shard else None,
+        "stage": "pod" if have("pod") else None,
+    }
+
+
+def _fit(mesh, axes: AxisEntry, dim: int) -> Optional[Tuple[str, ...]]:
+    """Longest prefix of ``axes`` whose total mesh size divides ``dim``.
+
+    Returns the prefix as a tuple of axis names, or None when even the first
+    axis does not divide (→ replicate).  Composed DP axes degrade gracefully:
+    a 256-token batch on a (pod=2, data=16, model=16) dp-only mesh shards
+    256-way over ("data", "model") and replicates over "pod".
+    """
+    if axes is None or dim <= 0:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = dict(mesh.shape)
+    for k in range(len(axes), 0, -1):
+        size = 1
+        for a in axes[:k]:
+            size *= int(sizes[a])
+        if size > 1 and dim % size == 0:
+            return tuple(axes[:k])
+    return None
+
+
+def _entry(fit: Optional[Tuple[str, ...]]) -> AxisEntry:
+    if fit is None:
+        return None
+    return fit[0] if len(fit) == 1 else tuple(fit)
+
+
+def _dedupe(entries: Tuple[AxisEntry, ...]) -> Tuple[AxisEntry, ...]:
+    """Drop any mesh axis already used by an earlier dim (an axis may appear
+    at most once in a PartitionSpec); later uses replicate instead."""
+    used = set()
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(None)
+            continue
+        names = (e,) if isinstance(e, str) else tuple(e)
+        kept = tuple(a for a in names if a not in used)
+        used.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(kept)
+    return tuple(out)
+
+
+def _spec_for_path(path: str, shape, rules: Dict[str, AxisEntry], mesh,
+                   serve: bool = False) -> P:
+    """PartitionSpec for one param leaf, from its tree path and shape."""
+    parts = path.lower().split("/")
+    if any(any(s in seg for s in _REPLICATED_SUBSTR) for seg in parts):
+        return P()
+    ndim = len(shape)
+    if ndim < 2:
+        return P()
+    entries: list = [None] * ndim
+    if "experts" in parts and ndim >= 3:
+        # (..., E, A, B): EP on E; FSDP on F (train) vs D (serve/decode).
+        entries[ndim - 3] = _entry(_fit(mesh, rules.get("expert"),
+                                        shape[ndim - 3]))
+        fdim = ndim - 2 if serve else ndim - 1
+        entries[fdim] = _entry(_fit(mesh, rules.get("fsdp"), shape[fdim]))
+    else:
+        # (..., D_in, D_out): FSDP on D_in, TP on D_out; stacked dims replicate.
+        entries[ndim - 2] = _entry(_fit(mesh, rules.get("fsdp"),
+                                        shape[ndim - 2]))
+        entries[ndim - 1] = _entry(_fit(mesh, rules.get("model"),
+                                        shape[ndim - 1]))
+    return P(*_dedupe(tuple(entries)))
+
+
+def _exponent_spec(qspec: P, qt: QTensor) -> P:
+    """Spec for a QTensor's exponent leaf: per-channel ``n`` rides whatever
+    mesh axis the payload's channel dim got; scalars replicate."""
+    n_ndim = getattr(qt.n, "ndim", 0)
+    if n_ndim == 0:
+        return P()
+    q_shape = qt.q.shape
+    entries = list(qspec) + [None] * (len(q_shape) - len(tuple(qspec)))
+    if qt.channel_axis is not None and n_ndim == 1:
+        return P(entries[qt.channel_axis])
+    if n_ndim == len(q_shape):
+        # broadcast-shaped exponents (per-(layer, channel) stacked kernels)
+        return P(*(entries[d] if qt.n.shape[d] == q_shape[d]
+                   and qt.n.shape[d] > 1 else None
+                   for d in range(n_ndim)))
+    return P()
+
+
+def param_pspecs(params, mesh, rules: Dict[str, AxisEntry], *,
+                 serve: bool = False):
+    """NamedSharding tree for a param (or optimizer-moment) tree.
+
+    QTensor leaves return a QTensor whose ``q``/``n`` slots hold the payload
+    and exponent shardings, so the result can be passed straight to
+    ``jax.device_put`` / ``with_shardings`` against the matching value tree.
+    """
+
+    def leaf_spec(path, leaf):
+        if isinstance(leaf, QTensor):
+            qspec = _spec_for_path(path, leaf.q.shape, rules, mesh, serve=serve)
+            return QTensor(q=NamedSharding(mesh, qspec),
+                           n=NamedSharding(mesh, _exponent_spec(qspec, leaf)),
+                           width=leaf.width, channel_axis=leaf.channel_axis)
+        shape = getattr(leaf, "shape", ())
+        return NamedSharding(mesh,
+                             _spec_for_path(path, shape, rules, mesh,
+                                            serve=serve))
+
+    return map_with_path(
+        leaf_spec,
+        params) if isinstance(params, dict) else jax.tree_util.tree_map(
+            lambda l: leaf_spec("", l), params,
+            is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def batch_pspecs(batch, mesh, rules: Dict[str, AxisEntry]):
+    """Shard dim 0 of every batch leaf over the (composed) DP axes; a batch
+    that does not divide falls back to the longest divisible axis prefix."""
+
+    def leaf(x):
+        ndim = getattr(x, "ndim", 0)
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        e = _entry(_fit(mesh, rules.get("batch"), x.shape[0]))
+        return NamedSharding(mesh, P(e, *([None] * (ndim - 1))))
+
+    return jax.tree_util.tree_map(leaf, batch)
+
+
+def cache_pspecs(cache, mesh, rules: Dict[str, AxisEntry]):
+    """NamedSharding tree for a decode cache.
+
+    KV leaves ``k``/``v`` are ``(..., batch, seq, heads, head_dim)`` (a
+    leading layer dim when scan-stacked): batch shards over DP, the sequence
+    dim over ``model`` (``kv_seq`` rule — 32k-token caches dominate decode
+    HBM), heads over whatever is left after dedupe.  Everything else
+    (exponents, lengths, ssm states) replicates — those are small.
+    """
+
+    def leaf_spec(path, x):
+        ndim = getattr(x, "ndim", 0)
+        name = path.rsplit("/", 1)[-1]
+        if name in ("k", "v") and ndim >= 4:
+            entries: list = [None] * ndim
+            entries[ndim - 4] = _entry(_fit(mesh, rules.get("batch"),
+                                            x.shape[ndim - 4]))
+            entries[ndim - 3] = _entry(_fit(mesh, rules.get("kv_seq"),
+                                            x.shape[ndim - 3]))
+            entries[ndim - 2] = _entry(_fit(mesh, rules.get("kv_heads"),
+                                            x.shape[ndim - 2]))
+            return NamedSharding(mesh, P(*_dedupe(tuple(entries))))
+        return NamedSharding(mesh, P())
+
+    return map_with_path(leaf_spec, cache)
+
+
+def named(mesh, spec: Optional[P] = None) -> NamedSharding:
+    """NamedSharding for a single leaf; default fully replicated."""
+    return NamedSharding(mesh, spec if spec is not None else P())
+
+
+def with_shardings(tree, shardings):
+    """Attach a sharding tree to a ShapeDtypeStruct tree (AOT lowering inputs).
+
+    The two trees must have the same structure (QTensor nodes included —
+    ``param_pspecs`` produces exactly that)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)

@@ -1,3 +1,14 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# The kernels target the modern Pallas surface (pltpu.CompilerParams); on
+# 0.4.x wheels that class is still spelled TPUCompilerParams — alias it once
+# here so every kernel module (and downstream caller) sees the same API.
+try:  # pragma: no cover - depends on installed jax
+    import jax.experimental.pallas.tpu as _pltpu
+
+    if not hasattr(_pltpu, "CompilerParams"):
+        _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+except ImportError:  # pallas not available on this backend
+    pass

@@ -29,11 +29,26 @@ import numpy as np
 _LEAF_SEP = "."
 
 
+def _keystr(path) -> str:
+    # jax >= 0.5 spells this keystr(path, simple=True, separator=_LEAF_SEP);
+    # build the same "a.b.0.c" form by hand so 0.4.x wheels work too.
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):       # DictKey / FlattenedIndexKey
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):     # SequenceKey
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):    # GetAttrKey
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return _LEAF_SEP.join(parts)
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = jax.tree_util.keystr(path, simple=True, separator=_LEAF_SEP)
-        flat[key] = leaf
+        flat[_keystr(path)] = leaf
     return flat
 
 
@@ -48,6 +63,10 @@ class CheckpointManager:
 
     # ---- write -------------------------------------------------------------
     def save(self, step: int, tree) -> str:
+        # Drain any in-flight async write first: two writers racing on the
+        # same step's tmp dir TOCTOU each other (seen when the final sync
+        # save lands on a step save_async already picked up).
+        self.wait()
         host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
         return self._write(step, host)
 
@@ -131,8 +150,7 @@ class CheckpointManager:
                 loaded[key] = jax.numpy.asarray(arr.astype(tgt.dtype))
         # reassemble in target's treedef order
         paths, treedef = jax.tree_util.tree_flatten_with_path(target)
-        leaves = [loaded[jax.tree_util.keystr(p, simple=True, separator=_LEAF_SEP)]
-                  for p, _ in paths]
+        leaves = [loaded[_keystr(p)] for p, _ in paths]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def restore_latest(self, target):

@@ -173,8 +173,12 @@ def make_dp_shardmap_train_step(model, optimizer, lr_schedule, mesh, *,
         params, opt, step = state["params"], state["opt"], state["step"]
         (loss, mets), grads = grad_fn(params, batch, step)
         if compress_bits:
+            # err leaves carry a leading per-shard axis (see train_step);
+            # locally that axis is size 1 — peel it for the compressor.
+            err_local = jax.tree_util.tree_map(lambda e: e[0], state["err"])
             grads, new_err = compressed_grad_allreduce(
-                grads, axis_name, bits=compress_bits, error_state=state["err"])
+                grads, axis_name, bits=compress_bits, error_state=err_local)
+            new_err = jax.tree_util.tree_map(lambda e: e[None], new_err)
         else:
             grads = jax.tree_util.tree_map(
                 lambda g: jax.lax.pmean(g, axis_name), grads)
@@ -189,10 +193,22 @@ def make_dp_shardmap_train_step(model, optimizer, lr_schedule, mesh, *,
         return out, {"loss": loss, "accuracy": acc}
 
     def train_step(state, batch):
+        world = 1
+        for a in (axis_name if isinstance(axis_name, tuple) else (axis_name,)):
+            world *= int(mesh.shape[a])
         if compress_bits and "err" not in state:
+            # Error-feedback residuals are genuinely *per-shard* state (each
+            # shard quantizes its own gradient), so they get a leading
+            # device axis sharded over `axis_name` — declaring them
+            # replicated would let any fetch/reshard pick one shard's
+            # residual and silently clobber the others.
             state = dict(state, err=jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]))
+                lambda p: jnp.zeros((world,) + p.shape, jnp.float32),
+                state["params"]))
         sspec = jax.tree_util.tree_map(lambda _: P(), state)
+        if compress_bits:
+            sspec["err"] = jax.tree_util.tree_map(
+                lambda _: P(axis_name), state["err"])
         bspec = jax.tree_util.tree_map(lambda _: P(axis_name), batch)
         fn = jax.shard_map(step_body, mesh=mesh, in_specs=(sspec, bspec),
                            out_specs=(sspec, jax.tree_util.tree_map(

@@ -11,6 +11,9 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess-per-test: device count must be
+#                                fixed before jax initializes
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

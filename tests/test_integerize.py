@@ -1,0 +1,118 @@
+"""Unit tests for ``core/integerize``: ROM accounting (paper Table A3),
+entry-point input quantization (Sec. 5.6) and the skip rules that keep
+precision-sensitive leaves (norms, router) in float."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import integerize, qformat
+from repro.core.integerize import (_is_skipped, integerize as integerize_tree,
+                                   model_rom_bytes, quantize_input)
+from repro.core.policy import QuantPolicy
+from repro.core.qformat import QTensor
+
+
+# ---- model_rom_bytes: Table A3 semantics -----------------------------------
+
+
+def test_rom_bytes_int8_plus_exponent():
+    params = {"l": {"kernel": qformat.quantize_tensor(jnp.ones((4, 8)), 8)}}
+    # 32 weights at logical 8-bit + 4 bytes of exponent storage
+    assert model_rom_bytes(params) == 4 * 8 + 4
+
+
+def test_rom_bytes_int9_logical_not_container():
+    params = {"l": {"kernel": qformat.quantize_tensor(jnp.ones((4, 8)), 9)}}
+    # int9 counts 9 bits/weight (packed), NOT the 16-bit storage container
+    assert model_rom_bytes(params) == 4 * 8 * 9 // 8 + 4
+
+
+def test_rom_bytes_mixed_tree_counts_float_leaves_at_itemsize():
+    params = {
+        "dense": {"kernel": qformat.quantize_tensor(jnp.ones((4, 8)), 8)},
+        "norm": {"scale": jnp.ones((8,), jnp.float32)},
+    }
+    assert model_rom_bytes(params) == (4 * 8 + 4) + 8 * 4
+
+
+# ---- quantize_input (Sec. 5.6 entry-point conversion) ----------------------
+
+
+def test_quantize_input_roundtrip_on_grid():
+    qstate = {"in": 5}
+    x = jnp.array([0.5, -1.25, 3.96875, 0.0])  # multiples of 2^-5
+    qt = quantize_input(x, qstate, "in", 8)
+    assert isinstance(qt, QTensor)
+    assert qt.q.dtype == jnp.int8 and int(qt.n) == 5
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()), np.asarray(x))
+
+
+def test_quantize_input_saturates_out_of_range():
+    qt = quantize_input(jnp.array([100.0, -100.0]), {"in": 5}, "in", 8)
+    np.testing.assert_array_equal(np.asarray(qt.q), [127, -128])
+
+
+def test_quantize_input_missing_site_raises():
+    with pytest.raises(KeyError):
+        quantize_input(jnp.ones(3), {}, "absent", 8)
+
+
+# ---- _is_skipped: norms and router stay float ------------------------------
+
+
+@pytest.mark.parametrize("path,skipped", [
+    ("block/norm1/scale", True),
+    ("stack/ln_f/scale", True),
+    ("block/rms_in/scale", True),
+    ("moe/router/kernel", True),
+    ("mixer/ssm/a_log", True),
+    ("attn/wq/kernel", False),
+    ("ffn/w_gate/kernel", False),
+    ("embed/table", False),
+])
+def test_is_skipped_paths(path, skipped):
+    assert _is_skipped(path, QuantPolicy.int8_qat()) is skipped
+
+
+def test_integerize_keeps_norms_float_and_bakes_n_out():
+    params = {
+        "dense": {"kernel": jnp.ones((4, 4)) * 0.5, "bias": jnp.ones((4,))},
+        "norm": {"scale": jnp.ones((4,))},
+        "router": {"kernel": jnp.ones((4, 2))},
+    }
+    out = integerize_tree(params, QuantPolicy.int8_qat(),
+                          qstate={"dense/out": 4})
+    assert isinstance(out["dense"]["kernel"], QTensor)
+    assert isinstance(out["dense"]["bias"], QTensor)
+    # calibrated activation exponent baked next to the quantized layer
+    assert int(out["dense"]["n_out"]) == 4
+    # norm scale and router kernel pass through untouched (float)
+    assert not isinstance(out["norm"]["scale"], QTensor)
+    assert not isinstance(out["router"]["kernel"], QTensor)
+    assert "n_out" not in out["router"]
+
+
+def test_integerize_weights_only_leaves_small_leaves_alone():
+    params = {
+        "attn": {"wq": {"kernel": jnp.ones((8, 8))}},
+        "norm": {"scale": jnp.ones((8,))},
+        "head": {"bias": jnp.ones((8,))},
+    }
+    out = integerize.integerize_weights_only(params, bits=8)
+    qt = out["attn"]["wq"]["kernel"]
+    assert isinstance(qt, QTensor) and qt.q.dtype == jnp.int8
+    # per-channel exponents along the output axis
+    assert qt.n.shape == (8,) and qt.channel_axis == 1
+    assert not isinstance(out["norm"]["scale"], QTensor)
+    assert not isinstance(out["head"]["bias"], QTensor)
+
+
+def test_integerize_weights_only_stacked_keeps_per_layer_grids():
+    # scan-stacked kernel (L, D, F): each layer gets its own exponent row
+    w = jnp.stack([jnp.ones((4, 6)), jnp.ones((4, 6)) * 100.0])
+    out = integerize.integerize_weights_only({"ffn": {"kernel": w}}, bits=8)
+    qt = out["ffn"]["kernel"]
+    n = np.asarray(qt.n).reshape(2, 6)
+    assert (n[0] != n[1]).all()  # 1.0-scale layer vs 100.0-scale layer
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), np.asarray(w),
+                               rtol=2 ** -6)

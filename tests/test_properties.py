@@ -6,6 +6,11 @@ Sec. 5.8 integer arithmetic) over adversarial inputs, not just examples.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'dev' extra (pip install -e .[dev])")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp

@@ -1,0 +1,137 @@
+"""Deterministic edge-case tests for the Qm.n core (``core/qformat``).
+
+These pin — without hypothesis, which is an optional dev dependency — the
+exact corner behaviours the property suite covers statistically: all-zero
+tensors, negative fractional-bit exponents, int9 logical width in int16
+containers, and the requantize left-shift pre-saturation rule (the bug the
+``requantize`` docstring records hypothesis once catching).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qformat
+from repro.core.qformat import QTensor
+
+
+# ---- all-zero tensors ------------------------------------------------------
+
+
+def test_all_zero_tensor_clamps_exponent_and_roundtrips():
+    x = jnp.zeros((4, 4))
+    n = qformat.frac_bits_for(qformat.max_abs(x), 8)
+    # max|x| == 0 drives m to a large negative value; the clamp catches it
+    assert int(n) == qformat.N_MAX
+    qt = qformat.quantize_tensor(x, 8)
+    np.testing.assert_array_equal(np.asarray(qt.q), np.zeros((4, 4), np.int8))
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()), np.zeros((4, 4)))
+
+
+def test_all_zero_per_channel_column():
+    # one all-zero channel must not poison its neighbours' exponents
+    x = jnp.array([[0.0, 4.0], [0.0, -4.0]])
+    qt = qformat.quantize_tensor(x, 8, channel_axis=1)
+    assert int(qt.n[0]) == qformat.N_MAX
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()), np.asarray(x))
+
+
+# ---- negative n (ranges beyond the integer width) --------------------------
+
+
+def test_negative_n_for_large_ranges():
+    # max|x| = 3e5 needs m = 19 integer bits => n = 8 - 19 - 1 = -12
+    n = qformat.frac_bits_for(jnp.float32(3e5), 8)
+    assert int(n) == -12
+    x = jnp.array([40960.0, -12288.0])
+    q = qformat.quantize(x, n, 8)
+    np.testing.assert_array_equal(np.asarray(q), [10, -3])
+    # multiples of 2^12 round-trip exactly even at negative n
+    np.testing.assert_array_equal(np.asarray(qformat.dequantize(q, n)),
+                                  np.asarray(x))
+
+
+def test_negative_n_scale_is_power_of_two():
+    assert float(qformat.scale_from_n(jnp.int32(-3))) == 8.0
+    assert float(qformat.scale_from_n(jnp.int32(5))) == 1.0 / 32.0
+
+
+# ---- int9 (paper Appendix B) storage ---------------------------------------
+
+
+def test_int9_stored_in_int16_container():
+    assert qformat.storage_dtype(9) == jnp.int16
+    assert qformat.accumulator_dtype(9) == jnp.int32
+    assert qformat.qmax(9) == 255 and qformat.qmin(9) == -256
+    x = jnp.linspace(-1.0, 1.0, 7)
+    qt = qformat.quantize_tensor(x, 9)
+    assert qt.q.dtype == jnp.int16
+    # int9 quantization really uses the 9-bit range, not the int8 one
+    assert int(jnp.max(jnp.abs(qt.q))) > 127
+
+
+def test_rom_bytes_count_logical_width():
+    ones = jnp.ones((4, 8))
+    assert qformat.quantize_tensor(ones, 8).nbytes_model == 32
+    assert qformat.quantize_tensor(ones, 9).nbytes_model == 32 * 9 // 8
+    assert qformat.quantize_tensor(ones, 16).nbytes_model == 64
+
+
+# ---- requantize: shifts, floor semantics, pre-saturation -------------------
+
+
+def test_requantize_right_shift_floors():
+    # arithmetic right shift floors toward -inf (documented engine semantics)
+    got = qformat.requantize(jnp.int32(-5), jnp.int32(1), jnp.int32(0), 8)
+    assert int(got) == -3
+    got = qformat.requantize(jnp.int32(5), jnp.int32(1), jnp.int32(0), 8)
+    assert int(got) == 2
+
+
+def test_requantize_left_shift_saturates_before_overflow():
+    """n_out > n_in left-shifts the accumulator; the result must saturate as
+    if computed at infinite precision, even when the shifted value would
+    overflow the accumulator container (the hypothesis-found bug)."""
+    # small shift, still out of int8 range -> qmax
+    assert int(qformat.requantize(jnp.int32(1000), jnp.int32(0),
+                                  jnp.int32(4), 8)) == 127
+    assert int(qformat.requantize(jnp.int32(-1000), jnp.int32(0),
+                                  jnp.int32(4), 8)) == -128
+    # huge shift: 2^30 << 30 wraps any fixed-width container; the
+    # pre-saturation guard (compare against qmax >> lshift) must win
+    assert int(qformat.requantize(jnp.int32(2 ** 30), jnp.int32(0),
+                                  jnp.int32(30), 8)) == 127
+    assert int(qformat.requantize(jnp.int32(-(2 ** 30)), jnp.int32(0),
+                                  jnp.int32(30), 8)) == -128
+
+
+def test_requantize_left_shift_exact_when_in_range():
+    # in-range left shifts are exact bit shifts
+    got = qformat.requantize(jnp.int32(3), jnp.int32(0), jnp.int32(4), 8)
+    assert int(got) == 48
+    got = qformat.requantize(jnp.int32(-7), jnp.int32(2), jnp.int32(4), 16)
+    assert int(got) == -28
+
+
+def test_requantize_identity_when_formats_match():
+    acc = jnp.arange(-8, 8, dtype=jnp.int32)
+    got = qformat.requantize(acc, jnp.int32(5), jnp.int32(5), 8)
+    np.testing.assert_array_equal(np.asarray(got), np.arange(-8, 8))
+
+
+def test_align_then_requantize_roundtrip():
+    # align to a finer common grid, shift back: exact for in-range values
+    q = jnp.array([-3, 0, 7], dtype=jnp.int8)
+    acc = qformat.align(q, jnp.int32(4), jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(acc), [-48, 0, 112])
+    back = qformat.requantize(acc, jnp.int32(8), jnp.int32(4), 8)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_qtensor_pytree_roundtrip():
+    import jax
+
+    qt = qformat.quantize_tensor(jnp.ones((2, 3)), 8, channel_axis=1)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert len(leaves) == 2  # q + n
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, QTensor)
+    assert back.width == 8 and back.channel_axis == 1

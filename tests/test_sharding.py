@@ -15,7 +15,9 @@ pytestmark = pytest.mark.skipif(
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
     # AbstractMesh carries shapes/names without real devices
-    return jax.sharding.AbstractMesh(shape, axes)
+    from repro.dist.compat import abstract_mesh
+
+    return abstract_mesh(shape, axes)
 
 
 def test_divisibility_drops_axis():
