@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.microai_resnet import DATASETS, build_resnet
+from repro.configs.microai_resnet import build_resnet
 from repro.core.policy import QuantPolicy
 from repro.data.synthetic import make_classification_dataset
 from repro.nn.module import Context, eval_context

@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.cost_model import (inference_energy_uwh, inference_seconds,
-                                   resnet6_ops)
+from repro.core.cost_model import inference_seconds, resnet6_ops
 
 from .common import write_csv
 

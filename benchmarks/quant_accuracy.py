@@ -8,9 +8,7 @@ accuracies — see EXPERIMENTS.md §Paper-claims.
 """
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core.policy import Granularity, QMode, QuantPolicy
+from repro.core.policy import QMode, QuantPolicy
 
 from .common import accuracy, train_resnet, write_csv
 

@@ -1,0 +1,158 @@
+"""Serve throughput bench: continuous batching vs restart-the-batch, swept
+over the paper's deployment quantization variants.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke \\
+        [--baseline benchmarks/baselines/serve_bench.json]
+
+For each variant in {fp32, wq (int8 weights), qkv (int8 KV), wq_qkv} the same
+staggered-arrival workload (alternating short/long horizons — the length
+spread continuous batching exploits) runs through
+
+  * the continuous-batching Scheduler (serve/scheduler.py), and
+  * the restart-the-batch lockstep baseline,
+
+and writes ``benchmarks/out/serve_bench.json`` with steady tok/s, slot
+occupancy, p50/p99 latency, peak cache bytes and the scheduler/restart
+speedup.  This JSON is the perf trajectory CI tracks: with ``--baseline`` the
+run fails if any variant's scheduler steady tok/s regresses more than
+--tolerance (default 30%) against the checked-in
+``benchmarks/baselines/serve_bench.json``.  To refresh the baseline after an
+intentional perf change, copy the new out-file over it (see README "Serving").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import get_config
+from repro.serve import Request, ServeEngine, run_restart_batching
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+VARIANTS = {
+    "fp32": {},
+    "wq": {"weight_quant": True},
+    "qkv": {"quantized_kv": True},
+    "wq_qkv": {"weight_quant": True, "quantized_kv": True},
+}
+
+
+def make_workload(n_requests, prompt_len, short_new, long_new, spacing, vocab,
+                  seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(0, vocab, size=prompt_len, dtype=np.int32),
+                max_new=short_new if i % 2 == 0 else long_new,
+                arrival=i * spacing)
+        for i in range(n_requests)
+    ]
+
+
+def bench_variant(model, params, kw, workload, *, max_len, slots, seed=0):
+    engine = ServeEngine(model=model, params=params, max_len=max_len,
+                         batch_slots=slots, **kw)
+    sched_res, sched = engine.scheduler().run(workload, seed=seed)
+    restart_res, restart = run_restart_batching(engine, workload, seed=seed)
+    assert sorted(sched_res) == sorted(r.rid for r in workload)
+    assert sorted(restart_res) == sorted(r.rid for r in workload)
+    s, r = sched.summary(), restart.summary()
+    return {
+        **{k: s[k] for k in ("steady_tok_s", "compile_s", "occupancy",
+                             "p50_latency_steps", "p99_latency_steps",
+                             "peak_cache_bytes")},
+        "restart_tok_s": r["steady_tok_s"],
+        "restart_occupancy": r["occupancy"],
+        "speedup_vs_restart": round(s["steady_tok_s"]
+                                    / max(r["steady_tok_s"], 1e-9), 3),
+    }
+
+
+def run(smoke: bool = True, seed: int = 0, out_path: str = None):
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(seed))
+    # Alternating short/long horizons: the restart baseline holds every slot
+    # for the batch's longest request, so the short ones idle ~half the slot
+    # ticks — exactly the waste continuous batching reclaims.
+    if smoke:
+        wl_cfg = dict(n_requests=16, prompt_len=8, short_new=4, long_new=60,
+                      spacing=2, slots=4)
+    else:
+        wl_cfg = dict(n_requests=48, prompt_len=16, short_new=8, long_new=96,
+                      spacing=3, slots=8)
+    workload = make_workload(
+        wl_cfg["n_requests"], wl_cfg["prompt_len"], wl_cfg["short_new"],
+        wl_cfg["long_new"], wl_cfg["spacing"], cfg.vocab, seed=seed)
+    max_len = wl_cfg["prompt_len"] + wl_cfg["long_new"]
+
+    results = {"config": {"arch": "smollm-135m-smoke", "backend":
+                          jax.default_backend(), **wl_cfg},
+               "variants": {}}
+    for name, kw in VARIANTS.items():
+        results["variants"][name] = bench_variant(
+            model, params, kw, workload, max_len=max_len,
+            slots=wl_cfg["slots"], seed=seed)
+        v = results["variants"][name]
+        print(f"{name:8s} sched {v['steady_tok_s']:8.1f} tok/s "
+              f"(occ {v['occupancy']:.2f}) | restart "
+              f"{v['restart_tok_s']:8.1f} tok/s | "
+              f"speedup {v['speedup_vs_restart']:.2f}x | "
+              f"cache {v['peak_cache_bytes']/1024:.0f} KiB")
+
+    out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return results
+
+
+def check_baseline(results, baseline_path: str, tolerance: float) -> bool:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    ok = True
+    for name, base in baseline["variants"].items():
+        cur = results["variants"].get(name)
+        if cur is None:
+            print(f"REGRESSION {name}: variant missing from current run")
+            ok = False
+            continue
+        floor = base["steady_tok_s"] * (1.0 - tolerance)
+        if cur["steady_tok_s"] < floor:
+            print(f"REGRESSION {name}: steady {cur['steady_tok_s']:.1f} tok/s "
+                  f"< floor {floor:.1f} "
+                  f"(baseline {base['steady_tok_s']:.1f}, -{tolerance:.0%})")
+            ok = False
+        else:
+            print(f"ok {name}: {cur['steady_tok_s']:.1f} tok/s "
+                  f">= floor {floor:.1f}")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload (CI's bench-smoke job)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--baseline", default=None,
+                    help="compare steady tok/s against this JSON; exit 1 on "
+                         "a regression beyond --tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    results = run(smoke=args.smoke, seed=args.seed, out_path=args.out)
+    if args.baseline:
+        if not check_baseline(results, args.baseline, args.tolerance):
+            raise SystemExit(1)
+    print("serve_bench ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,12 +6,11 @@ accuracy + model ROM — reproducing the paper's headline trade-off.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
 from repro.core import integerize
 from repro.core.policy import QMode, QuantPolicy
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import accuracy, train_resnet  # noqa: E402
 

@@ -1,5 +1,8 @@
 """Serving a language model with the paper's quantization at the TPU layer:
-int8 weight-only storage (HBM ÷4) + int8 KV cache on the Qm.n grid.
+int8 weight-only storage (HBM ÷4) + int8 KV cache on the Qm.n grid — first
+as one lockstep batch, then under staggered traffic via the
+continuous-batching scheduler (queued admissions into freed slots, per-slot
+EOS/length eviction).
 
 Uses the smollm-135m *smoke* config so it runs on this CPU container; on a
 real fleet the same code path serves the full configs (see launch/serve.py
@@ -11,9 +14,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import get_config
-from repro.serve.engine import ServeEngine
+from repro.serve import Request, ServeEngine
 
 
 def main():
@@ -23,6 +27,7 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, cfg.vocab,
                                  dtype=jnp.int32)
 
+    print("== lockstep generate() across the quantized deployment variants")
     for name, kw in [("float32 weights + float KV", {}),
                      ("int8 weights (wq_matmul path)", {"weight_quant": True}),
                      ("int8 KV cache (paper grid)", {"quantized_kv": True}),
@@ -35,6 +40,26 @@ def main():
         out.block_until_ready()
         print(f"{name:35s} 4x32 tokens in {time.time()-t0:5.2f}s "
               f"first-10: {out[0,:10].tolist()}")
+
+    print("\n== continuous batching: 8 staggered requests through 4 slots")
+    eng = ServeEngine(model=model, params=params, max_len=44, batch_slots=4,
+                      weight_quant=True, quantized_kv=True)
+    rng = np.random.default_rng(0)
+    requests = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, size=12),
+                        max_new=8 if i % 2 == 0 else 32,
+                        arrival=2 * i)
+                for i in range(8)]
+    results, stats = eng.scheduler().run(requests)
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"req {rid}: arrival t={r.arrival:2d} admitted t={r.admitted_at:2d} "
+              f"finished t={r.finished_at:2d} ({len(r.tokens)} tokens)")
+    s = stats.summary()
+    print(f"steady {s['steady_tok_s']:.0f} tok/s | occupancy "
+          f"{s['occupancy']:.2f} | p50/p99 latency "
+          f"{s['p50_latency_steps']:.0f}/{s['p99_latency_steps']:.0f} steps | "
+          f"cache {s['peak_cache_bytes']/1024:.0f} KiB (int8 KV)")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,6 @@ real accelerator to train the full ~135M-parameter model — identical code.
 import argparse
 import tempfile
 
-import jax.numpy as jnp
-
 from repro.launch.train import main as train_main
 
 

@@ -34,7 +34,7 @@ def _qdecode_kernel(
 
     k_scale = scales_ref[0]
     v_scale = scales_ref[1]
-    kv_len = len_ref[0]
+    kv_len = len_ref[pl.program_id(0)]     # per-slot live length
 
     q = q_ref[0, 0]                   # (G, D) f32
     k = k_ref[0, :, 0, :].astype(jnp.float32) * k_scale   # (BS, D)
@@ -73,7 +73,11 @@ def qdecode_attn_pallas(
     bs: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """q (B,Hq,D) f32, caches (B,S,Hkv,D) int8, exponents scalar -> (B,Hq,D)."""
+    """q (B,Hq,D) f32, caches (B,S,Hkv,D) int8, exponents scalar -> (B,Hq,D).
+
+    ``kv_len``: scalar (one shared length) or (B,) per-slot lengths — the
+    continuous-batching scheduler's case, each slot masking its own prefix.
+    """
     b, hq, d = q.shape
     _, s, hkv, _ = k_cache.shape
     g = hq // hkv
@@ -85,7 +89,7 @@ def qdecode_attn_pallas(
     scales = jnp.stack(
         [jnp.exp2(-k_n.astype(jnp.float32)), jnp.exp2(-v_n.astype(jnp.float32))]
     )
-    len_arr = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+    len_arr = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
     out = pl.pallas_call(
         functools.partial(_qdecode_kernel, s_steps=s_steps, bs=bs_, sm_scale=sm_scale),
         grid=(b, hkv, s_steps),

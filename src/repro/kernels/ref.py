@@ -51,7 +51,10 @@ def qconv1d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
 
 
 def qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len):
-    """Dequantize-everything flash-free reference decode attention."""
+    """Dequantize-everything flash-free reference decode attention.
+
+    ``kv_len``: scalar or (B,) per-slot live lengths (scheduler cache).
+    """
     b, hq, d = q.shape
     _, s, hkv, _ = k_cache.shape
     g = hq // hkv
@@ -61,6 +64,8 @@ def qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len):
     # scores: (B, Hkv, G, S)
     scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) / (d ** 0.5)
     pos = jnp.arange(s)
+    if jnp.ndim(kv_len) == 1:
+        kv_len = kv_len[:, None, None, None]
     scores = jnp.where(pos[None, None, None, :] < kv_len, scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, v)

@@ -1,31 +1,84 @@
-"""Serving driver: batched generation with the quantized deployment options.
+"""Serving driver: continuous batching under an arrival-schedule workload.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m-smoke \\
-        --batch 4 --prompt-len 16 --max-new 32 [--wq] [--qkv]
+        --slots 4 --prompt-len 16 --requests 12 --max-new 32 --max-new-min 8 \\
+        --arrival-spacing 2 [--wq] [--qkv] [--policy scheduler]
 
 --wq   int8 weight-only storage (integerize_weights_only → wq_matmul path)
 --qkv  int8 KV cache on the paper's Qm.n grid
 Both reproduce the paper's deployment flow (train fp → quantize → deploy) at
-the serving layer.
+the serving layer — now under realistic traffic instead of one lockstep batch.
+
+Policies:
+  scheduler  continuous batching (serve/scheduler.py): queued requests admit
+             into freed slots, per-slot EOS/length eviction
+  restart    restart-the-batch baseline: lockstep generate() per gathered
+             batch, everyone waits for the longest request
+  lockstep   the legacy single-batch generate() (no queue; --requests is
+             clamped to --slots)
+
+Timing is reported as warmup/compile seconds and steady-state tok/s
+*separately* — jit compile no longer pollutes the throughput figure.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import get_config
-from repro.serve.engine import ServeEngine
+from repro.serve import Request, ServeEngine, run_restart_batching
+
+
+def build_workload(args, vocab: int):
+    """Arrival schedule: request i arrives at tick i*spacing with a prompt of
+    --prompt-len tokens and max_new alternating across [min, max] (length
+    spread is what continuous batching exploits)."""
+    rng = np.random.default_rng(args.seed + 1)
+    lo = args.max_new_min or args.max_new
+    reqs = []
+    for i in range(args.requests):
+        max_new = lo if (lo == args.max_new or i % 2 == 0) else args.max_new
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, size=args.prompt_len,
+                                dtype=np.int32),
+            max_new=int(max_new),
+            arrival=i * args.arrival_spacing))
+    return reqs
+
+
+def report(name: str, stats) -> None:
+    s = stats.summary()
+    print(f"[{name}] warmup(compile) {s['compile_s']:.2f}s | "
+          f"steady {s['steady_tok_s']:.1f} tok/s over {s['steady_s']:.3f}s | "
+          f"occupancy {s['occupancy']:.2f} | "
+          f"latency p50/p99 {s['p50_latency_steps']:.0f}/"
+          f"{s['p99_latency_steps']:.0f} steps | "
+          f"cache {s['peak_cache_bytes']/1024:.0f} KiB")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", type=int, default=4, dest="slots")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-new-min", type=int, default=0,
+                    help="alternate request horizons in [min, max] "
+                         "(0 = uniform --max-new)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--arrival-spacing", type=int, default=2,
+                    help="decode-step ticks between request arrivals")
+    ap.add_argument("--policy", default="scheduler",
+                    choices=["scheduler", "restart", "lockstep"])
+    ap.add_argument("--prompt-bucket", type=int, default=0,
+                    help="round prompt lengths up to this multiple "
+                         "(0 = exact lengths; one jit compile per length)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop a slot when this token is sampled (-1 = off)")
     ap.add_argument("--wq", action="store_true")
     ap.add_argument("--qkv", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -35,24 +88,48 @@ def main(argv=None):
     cfg = get_config(args.arch)
     model = cfg.build(dtype=jnp.float32, remat="off")
     params = model.init(jax.random.PRNGKey(args.seed))
-
     engine = ServeEngine(model=model, params=params,
                          max_len=args.prompt_len + args.max_new,
-                         batch_slots=args.batch, quantized_kv=args.qkv,
+                         batch_slots=args.slots, quantized_kv=args.qkv,
                          weight_quant=args.wq, temperature=args.temperature)
 
-    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab,
-                                 dtype=jnp.int32)
-    t0 = time.time()
-    out = engine.generate(prompts, args.max_new, seed=args.seed)
-    out.block_until_ready()
-    dt = time.time() - t0
-    toks = args.batch * args.max_new
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
-    print(out[:, :16])
-    return out
+    if args.policy == "lockstep":
+        import time
+
+        n = min(args.requests, args.slots)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1), (args.slots, args.prompt_len),
+            0, cfg.vocab, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.generate(prompts, args.max_new,
+                                              seed=args.seed))
+        warm = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, args.max_new, seed=args.seed)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        toks = n * args.max_new
+        print(f"[lockstep] warmup(compile) {warm:.2f}s | "
+              f"steady {toks/dt:.1f} tok/s over {dt:.3f}s")
+        print(out[:n, :16])
+        return out
+
+    reqs = build_workload(args, cfg.vocab)
+    if args.policy == "restart":
+        results, stats = run_restart_batching(
+            engine, reqs, seed=args.seed,
+            eos_id=None if args.eos_id < 0 else args.eos_id)
+        report("restart", stats)
+    else:
+        sched = engine.scheduler(
+            eos_id=None if args.eos_id < 0 else args.eos_id,
+            prompt_bucket=args.prompt_bucket or None)
+        results, stats = sched.run(reqs, seed=args.seed)
+        report("scheduler", stats)
+    first = results[min(results)]
+    print(f"request {first.rid}: {len(first.tokens)} tokens, "
+          f"first-10 {first.tokens[:10]}")
+    return results
 
 
 if __name__ == "__main__":

@@ -18,13 +18,11 @@ Production behaviours exercised here (scaled to the container):
 from __future__ import annotations
 
 import argparse
-import os
 import statistics
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.policy import QuantPolicy
 from repro.data.pipeline import DataPipeline, markov_batch_fn

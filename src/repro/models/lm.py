@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.nn.layers import Embedding, LayerNorm, RMSNorm
 from repro.nn.module import Context, Params
-from repro.nn.transformer import Block, Stack
+from repro.nn.transformer import Stack
 
 
 def _final_norm(norm: str, d_model: int):
@@ -58,9 +58,10 @@ class CausalLM:
         return p
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool = False,
-                   kv_dtype=jnp.bfloat16):
+                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False):
         return self.stack.init_cache(batch, max_len, quantized_kv=quantized_kv,
-                                     kv_dtype=kv_dtype)
+                                     kv_dtype=kv_dtype,
+                                     per_slot_len=per_slot_len)
 
     # ---- forward -----------------------------------------------------------
     def apply(self, params: Params, tokens: Optional[jax.Array], ctx: Context, *,
@@ -165,9 +166,10 @@ class EncDecLM:
         }
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool = False,
-                   kv_dtype=jnp.bfloat16):
+                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False):
         return self.decoder.init_cache(batch, max_len, quantized_kv=quantized_kv,
-                                       kv_dtype=kv_dtype)
+                                       kv_dtype=kv_dtype,
+                                       per_slot_len=per_slot_len)
 
     def encode(self, params: Params, embeds: jax.Array, ctx: Context) -> jax.Array:
         ctx = ctx.scope(self.name)

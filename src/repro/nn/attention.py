@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qformat
-from repro.core.qformat import QTensor
 from repro.nn.layers import Dense
 from repro.nn.module import Context, Params
 
@@ -301,6 +300,9 @@ def decode_attention(
     the decode-bound roofline term divides by the TP degree — and combines
     with two tiny all-reduces (softmax max + sum).  int8 caches dequantize
     inline on the paper's pow2 grid (shift semantics, exact).
+
+    ``kv_len`` may be a scalar (lockstep batch) or a (B,) vector (per-slot
+    continuous batching): each slot masks its own live prefix.
     """
     b, _, hq, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
@@ -312,6 +314,8 @@ def decode_attention(
         kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
     qf = q[:, 0].reshape(b, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
     s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    if jnp.ndim(kv_len) == 1:
+        kv_len = kv_len[:, None, None, None]
     mask = jnp.arange(skv)[None, None, None, :] < kv_len
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
@@ -326,39 +330,101 @@ def decode_attention(
 def init_kv_cache(
     batch: int, max_len: int, n_kv_heads: int, head_dim: int,
     *, quantized: bool, dtype=jnp.bfloat16, cache_n: int = 3,
+    per_slot_len: bool = False,
 ) -> Dict[str, Any]:
     """cache_n: frozen fractional-bit exponent for the int8 cache grid
-    (Q4.3 => range ±16, resolution 1/8 — post-norm K/V fit comfortably)."""
+    (Q4.3 => range ±16, resolution 1/8 — post-norm K/V fit comfortably).
+
+    ``per_slot_len=True`` makes ``len`` an int32 (B,) vector so every batch
+    slot advances independently — the continuous-batching scheduler's cache
+    (serve/scheduler.py): admissions write one slot, decode masks per slot.
+    """
     shape = (batch, max_len, n_kv_heads, head_dim)
+    ln = jnp.zeros((batch,), jnp.int32) if per_slot_len else jnp.int32(0)
     if quantized:
         return {
             "k": jnp.zeros(shape, jnp.int8),
             "v": jnp.zeros(shape, jnp.int8),
             "k_n": jnp.int32(cache_n),
             "v_n": jnp.int32(cache_n),
-            "len": jnp.int32(0),
+            "len": ln,
         }
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
-        "len": jnp.int32(0),
+        "len": ln,
     }
 
 
+def _insert_rows(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """Write (B, S_new, H, D) into (B, S, H, D) at position ``idx`` on axis 1.
+
+    Scalar ``idx``: one shared offset (lockstep batch).  (B,) ``idx``: each
+    slot writes at its own offset (per-slot continuous batching).
+    """
+    if jnp.ndim(idx) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, idx, axis=1)
+    return jax.vmap(
+        lambda b, n, i: jax.lax.dynamic_update_slice(b, n, (i, 0, 0))
+    )(buf, new, idx)
+
+
 def update_kv_cache(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array):
-    """Insert (B, S_new, Hkv, D) at cache['len']; returns updated cache."""
+    """Insert (B, S_new, Hkv, D) at cache['len']; returns updated cache.
+
+    With a per-slot ``len`` vector each slot writes at its own live offset
+    (writes past ``max_len`` clamp to the last row — harmless: only inactive
+    slots ever run off the end, and their output is masked by the scheduler).
+    """
     idx = cache["len"]
     if cache["k"].dtype == jnp.int8:
-        kq = qformat.quantize(k_new, cache["k_n"], 8)
-        vq = qformat.quantize(v_new, cache["v_n"], 8)
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, idx, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, idx, axis=1)
-        return dict(cache, k=k, v=v, len=idx + k_new.shape[1])
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+        k_new = qformat.quantize(k_new, cache["k_n"], 8)
+        v_new = qformat.quantize(v_new, cache["v_n"], 8)
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
+    k = _insert_rows(cache["k"], k_new, idx)
+    v = _insert_rows(cache["v"], v_new, idx)
     return dict(cache, k=k, v=v, len=idx + k_new.shape[1])
+
+
+def reset_kv_slot(cache: Dict[str, Any], slot: jax.Array,
+                  *, layer_axis: bool = False) -> Dict[str, Any]:
+    """Free one slot of a per-slot cache: len[slot] = 0.
+
+    The stale K/V rows stay in place — every consumer masks positions
+    ``>= len``, and the next admission overwrites them — so eviction is O(1),
+    not O(S·H·D).  ``layer_axis``: len is (L, B) (scan-stacked layers).
+    """
+    ln = cache["len"]
+    ln = ln.at[:, slot].set(0) if layer_axis else ln.at[slot].set(0)
+    return dict(cache, len=ln)
+
+
+def write_kv_slot(big: Dict[str, Any], small: Dict[str, Any], slot: jax.Array,
+                  length: jax.Array, *, layer_axis: bool = False,
+                  ) -> Dict[str, Any]:
+    """Copy a batch-1 prefilled kv dict into slot ``slot`` of a per-slot dict.
+
+    ``small`` comes from a slot-targeted prefill over a fresh batch-1 cache;
+    its rows past ``length`` may hold prompt-bucket padding junk — masked by
+    setting len[slot] = length (the true prompt length), then progressively
+    overwritten by decode.  ``layer_axis``: leaves carry a leading scan-layer
+    dim (k (L,B,S,H,D), len (L,B)).
+    """
+    b_axis = 1 if layer_axis else 0
+    k = jax.lax.dynamic_update_slice_in_dim(
+        big["k"], small["k"].astype(big["k"].dtype), slot, axis=b_axis)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        big["v"], small["v"].astype(big["v"].dtype), slot, axis=b_axis)
+    ln = big["len"]
+    if layer_axis:
+        upd = jnp.full((ln.shape[0], 1), length, jnp.int32)
+        ln = jax.lax.dynamic_update_slice_in_dim(ln, upd, slot, axis=1)
+    else:
+        ln = jax.lax.dynamic_update_slice_in_dim(
+            ln, jnp.asarray(length, jnp.int32).reshape(1), slot, axis=0)
+    return dict(big, k=k, v=v, len=ln)
 
 
 # --------------------------------------------------------------------------
@@ -430,7 +496,11 @@ class Attention:
 
         if positions is None:
             if cache is not None and decode:
-                positions = cache["len"] + jnp.arange(s)
+                ln = cache["len"]
+                if jnp.ndim(ln) == 1:      # per-slot offsets -> (B, S)
+                    positions = ln[:, None] + jnp.arange(s)[None, :]
+                else:
+                    positions = ln + jnp.arange(s)
             else:
                 positions = jnp.arange(s)
         if self.use_rope and kv_source is None:
@@ -457,6 +527,10 @@ class Attention:
                     k_n=new_cache.get("k_n"), v_n=new_cache.get("v_n"),
                 ).astype(q.dtype)
             else:
+                if jnp.ndim(cache["len"]) == 1:
+                    raise NotImplementedError(
+                        "multi-token prefill into a per-slot cache: admit via "
+                        "a batch-1 prefill + write_kv_slot (serve/scheduler)")
                 kf = new_cache["k"]
                 vf = new_cache["v"]
                 if kf.dtype == jnp.int8:

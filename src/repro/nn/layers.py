@@ -17,13 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import qformat
-from repro.core.policy import QMode, QuantPolicy
+from repro.core.policy import QMode
 from repro.core.qformat import QTensor
 from repro.core.quantizers import quantize_activation, quantize_weight
 from repro.nn.module import Context, Params

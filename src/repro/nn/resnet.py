@@ -17,7 +17,7 @@ is dequantized to float logits).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

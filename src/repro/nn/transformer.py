@@ -132,13 +132,19 @@ class Block:
         return p
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool,
-                   kv_dtype=jnp.bfloat16) -> Dict[str, Any]:
+                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
+                   ) -> Dict[str, Any]:
         if self.mixer == "attn":
             from repro.nn.attention import init_kv_cache
 
             return {"kv": init_kv_cache(batch, max_len, self.n_kv_heads,
                                         self.head_dim, quantized=quantized_kv,
-                                        dtype=kv_dtype)}
+                                        dtype=kv_dtype,
+                                        per_slot_len=per_slot_len)}
+        if per_slot_len:
+            raise NotImplementedError(
+                f"per-slot cache lifecycle needs an attention KV cache; "
+                f"{self.mixer!r} state has no length axis to mask")
         if self.mixer == "mamba":
             return {"ssm": Mamba(self.d_model, d_state=self.mamba_d_state,
                                  dtype=self.dtype).init_state(batch)}
@@ -234,23 +240,24 @@ class Stack:
         return p
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool,
-                   kv_dtype=jnp.bfloat16) -> Dict[str, Any]:
+                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
+                   ) -> Dict[str, Any]:
+        kw = dict(quantized_kv=quantized_kv, kv_dtype=kv_dtype,
+                  per_slot_len=per_slot_len)
         c: Dict[str, Any] = {}
         if self.prelude:
-            c["prelude"] = [blk.init_cache(batch, max_len, quantized_kv=quantized_kv,
-                                           kv_dtype=kv_dtype)
+            c["prelude"] = [blk.init_cache(batch, max_len, **kw)
                             for blk in self.prelude]
         if self.scan_layers and self.n_periods > 1:
             c["body"] = [
                 jax.tree_util.tree_map(
                     lambda l: jnp.broadcast_to(
                         l[None], (self.n_periods,) + l.shape).copy(),
-                    blk.init_cache(batch, max_len, quantized_kv=quantized_kv,
-                                   kv_dtype=kv_dtype))
+                    blk.init_cache(batch, max_len, **kw))
                 for blk in self.body]
         else:
             c["body"] = [self.body[i % len(self.body)].init_cache(
-                batch, max_len, quantized_kv=quantized_kv, kv_dtype=kv_dtype)
+                batch, max_len, **kw)
                 for i in range(self.n_periods * len(self.body))]
         return c
 

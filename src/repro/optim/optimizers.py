@@ -13,7 +13,7 @@ since params are FSDP-sharded over `data`, so is the momentum).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Sequence, Tuple
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp

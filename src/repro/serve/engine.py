@@ -13,7 +13,7 @@ the device tensors keep their static shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +23,38 @@ from repro.core.policy import QuantPolicy
 from repro.nn.module import Context
 
 
+def mask_vocab_tail(logits: jax.Array, vocab: int) -> jax.Array:
+    """-inf the padded-vocab tail so it can never be sampled (pad is purely a
+    TP-shardability artifact; see models/lm.py)."""
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+    return jnp.where(v_iota >= vocab, -jnp.inf, logits)
+
+
+def sample_tokens(logits: jax.Array, rng, vocab: int,
+                  temperature: float) -> jax.Array:
+    """(..., V) masked-tail greedy/categorical sample -> (..., 1) int32.
+
+    ``vocab`` outside (0, V) means "no padded tail" (models that don't
+    expose a true vocab size): sample over the full logits width.
+    """
+    if 0 < vocab < logits.shape[-1]:
+        logits = mask_vocab_tail(logits, vocab)
+    if temperature > 0.0:
+        nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    return nxt[..., None].astype(jnp.int32)
+
+
 def make_prefill_step(model, *, mesh=None, axis_rules=None,
-                      policy: Optional[QuantPolicy] = None) -> Callable:
-    """(params, tokens, cache, [embeds/enc]) -> (last_logits, cache')."""
+                      policy: Optional[QuantPolicy] = None,
+                      full_logits: bool = False) -> Callable:
+    """(params, tokens, cache, [embeds/enc]) -> (logits, cache').
+
+    ``full_logits=False`` (lockstep default) returns the last position only;
+    ``full_logits=True`` returns (B, S, V) so a slot-targeted prefill over a
+    padded prompt bucket can gather its true last-token logits (scheduler).
+    """
 
     def prefill(params, tokens, cache, embeds=None, enc=None):
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
@@ -37,7 +66,7 @@ def make_prefill_step(model, *, mesh=None, axis_rules=None,
             kw["embeds"] = embeds
         logits, new_cache = model.apply(params, tokens, ctx, cache=cache,
                                         decode=True, **kw)
-        return logits[:, -1], new_cache
+        return (logits if full_logits else logits[:, -1]), new_cache
 
     return prefill
 
@@ -53,23 +82,24 @@ def make_decode_step(model, *, mesh=None, axis_rules=None,
         kw = {"enc": enc} if enc is not None else {}
         logits, new_cache = model.apply(params, token, ctx, cache=cache,
                                         decode=True, **kw)
-        logits = logits[:, -1]
-        # mask the padded-vocab tail so it can never be sampled
         vocab = getattr(model, "vocab", logits.shape[-1])
-        v_iota = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
-        logits = jnp.where(v_iota >= vocab, -jnp.inf, logits)
-        if temperature > 0.0:
-            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt[:, None].astype(jnp.int32), new_cache
+        nxt = sample_tokens(logits[:, -1], rng, vocab, temperature)
+        return nxt, new_cache
 
     return decode
 
 
 @dataclasses.dataclass
 class ServeEngine:
-    """Fixed-slot batched generation over a (possibly quantized) model."""
+    """Fixed-slot batched generation over a (possibly quantized) model.
+
+    The engine owns the jitted steps and the cache geometry; *batch policy*
+    lives elsewhere: ``generate()`` is the legacy lockstep wrapper (every slot
+    starts together and runs a fixed horizon — kept as the token-identity
+    baseline for tests), ``scheduler()`` hands the same steps to the
+    continuous-batching ``Scheduler`` (serve/scheduler.py), which admits
+    queued requests into freed slots and evicts on EOS/length per slot.
+    """
 
     model: Any
     params: Any
@@ -90,11 +120,30 @@ class ServeEngine:
             self.model, mesh=self.mesh, axis_rules=self.axis_rules,
             temperature=self.temperature))
 
-    def new_cache(self):
+    @property
+    def vocab(self) -> int:
+        return getattr(self.model, "vocab",
+                       getattr(self.model, "vocab_padded", 0))
+
+    def new_cache(self, *, per_slot: bool = False, batch: Optional[int] = None):
         dt = getattr(self.model, "dtype", jnp.float32)
-        return self.model.init_cache(self.batch_slots, self.max_len,
+        return self.model.init_cache(batch or self.batch_slots, self.max_len,
                                      quantized_kv=self.quantized_kv,
-                                     kv_dtype=dt)
+                                     kv_dtype=dt, per_slot_len=per_slot)
+
+    def cache_bytes(self) -> int:
+        """Device bytes of one full serving cache (the paper's memory win:
+        int8 KV halves/quarters this vs bf16/f32). Shape-only — nothing is
+        allocated."""
+        shapes = jax.eval_shape(self.new_cache)
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(shapes))
+
+    def scheduler(self, **kwargs):
+        """A continuous-batching Scheduler bound to this engine's steps."""
+        from repro.serve.scheduler import Scheduler
+
+        return Scheduler(self, **kwargs)
 
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  *, seed: int = 0, enc: Optional[jax.Array] = None,
@@ -104,10 +153,8 @@ class ServeEngine:
         rng = jax.random.PRNGKey(seed)
         last_logits, cache = self._prefill(self.params, prompts, cache,
                                            None, enc)
-        vocab = getattr(self.model, "vocab", last_logits.shape[-1])
-        v_iota = jax.lax.broadcasted_iota(jnp.int32, (last_logits.shape[-1],), 0)
-        masked = jnp.where(v_iota >= vocab, -jnp.inf, last_logits)
-        tok = jnp.argmax(masked, axis=-1)[:, None].astype(jnp.int32)
+        rng, sub = jax.random.split(rng)
+        tok = sample_tokens(last_logits, sub, self.vocab, self.temperature)
         out = [tok]
         for _ in range(max_new_tokens - 1):
             rng, sub = jax.random.split(rng)

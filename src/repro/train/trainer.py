@@ -18,8 +18,6 @@ the int8 gradient-compression feature (psum is manual inside shard_map).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional
 
 import jax

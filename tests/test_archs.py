@@ -128,8 +128,6 @@ def test_decode_matches_prefill():
 
 def test_param_counts_match_analytic():
     """ArchConfig.param_count tracks the real tree within 2%."""
-    from repro.nn.module import param_count
-
     for arch in ["smollm-135m", "rwkv6-7b", "kimi-k2-1t-a32b"]:
         cfg = get_config(arch + "-smoke")
         model = cfg.build(dtype=jnp.float32)

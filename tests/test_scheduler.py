@@ -1,0 +1,199 @@
+"""Continuous-batching scheduler tests: token identity vs the lockstep
+baseline, queued-request admission into freed slots, EOS eviction mid-stream,
+and the per-slot KV cache primitives underneath (fp32 and int8 KV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config
+from repro.serve import Request, ServeEngine, run_restart_batching
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("batch_slots", 2)
+    return ServeEngine(model=model, params=params, **kw)
+
+
+# --------------------------------------------------------------------------
+# Token identity: simultaneous equal-length arrivals == lockstep generate()
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True],
+                         ids=["fp32", "int8kv"])
+def test_scheduler_token_identical_to_lockstep(smoke_lm, quantized_kv):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, quantized_kv=quantized_kv)
+    prompts = (jnp.arange(2 * 8, dtype=jnp.int32).reshape(2, 8) * 7) % cfg.vocab
+    base = np.asarray(eng.generate(prompts, 10))
+
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new=10)
+            for i in range(2)]
+    results, stats = eng.scheduler().run(reqs)
+    for i in range(2):
+        assert results[i].tokens == list(base[i]), (quantized_kv, i)
+    assert stats.occupancy == 1.0
+    assert stats.tokens_out == 20
+
+
+def test_scheduler_weight_quant_variant_runs(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, weight_quant=True, quantized_kv=True)
+    results, _ = eng.scheduler().run(
+        [Request(rid=0, prompt=np.arange(6), max_new=5)])
+    assert len(results[0].tokens) == 5
+    assert max(results[0].tokens) < cfg.vocab
+
+
+# --------------------------------------------------------------------------
+# Admission into freed slots
+# --------------------------------------------------------------------------
+
+def test_queued_requests_admitted_into_freed_slots(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params)
+    rng = np.random.default_rng(0)
+    # 5 requests, 2 slots, all at t=0: three must wait for a freed slot.
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=4) for i in range(5)]
+    results, stats = eng.scheduler().run(reqs)
+    assert sorted(results) == list(range(5))
+    assert all(len(results[i].tokens) == 4 for i in range(5))
+    # first two admitted immediately; the rest only after an eviction
+    assert results[0].admitted_at == 0 and results[1].admitted_at == 0
+    for i in (2, 3, 4):
+        assert results[i].admitted_at >= min(results[0].finished_at,
+                                             results[1].finished_at)
+    # never more than batch_slots in flight
+    live = [(r.admitted_at, r.finished_at) for r in results.values()]
+    for t in range(max(f for _, f in live) + 1):
+        assert sum(a <= t < f for a, f in live) <= eng.batch_slots
+
+
+def test_staggered_arrivals_and_prompt_bucketing(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params)
+    rng = np.random.default_rng(1)
+    # ragged prompt lengths share compiles via bucket=8; arrivals staggered
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=3 + i),
+                    max_new=3, arrival=2 * i) for i in range(4)]
+    results, _ = eng.scheduler(prompt_bucket=8).run(reqs)
+    assert sorted(results) == list(range(4))
+    for i in range(4):
+        assert len(results[i].tokens) == 3
+        assert results[i].admitted_at >= results[i].arrival
+
+
+# --------------------------------------------------------------------------
+# EOS eviction mid-stream
+# --------------------------------------------------------------------------
+
+def test_eos_evicts_slot_and_readmits(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, batch_slots=1)
+    prompt = np.arange(8, dtype=np.int32)
+    # discover what the model will emit, then declare token #2 to be EOS
+    free_run, _ = eng.scheduler().run(
+        [Request(rid=0, prompt=prompt, max_new=8)])
+    eos = free_run[0].tokens[2]
+    assert free_run[0].tokens.count(eos) >= 1
+
+    reqs = [Request(rid=0, prompt=prompt, max_new=8),
+            Request(rid=1, prompt=prompt + 1, max_new=3)]
+    results, _ = eng.scheduler(eos_id=eos).run(reqs)
+    # request 0 stops at the first eos (position 2), not at max_new
+    assert results[0].eos is True
+    assert results[0].tokens[-1] == eos
+    assert len(results[0].tokens) <= 3
+    # the freed slot served request 1 afterwards
+    assert results[1].admitted_at >= results[0].finished_at
+    assert len(results[1].tokens) == 3
+
+
+# --------------------------------------------------------------------------
+# Restart-the-batch baseline semantics (bench comparison point)
+# --------------------------------------------------------------------------
+
+def test_restart_batching_matches_lockstep_tokens(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params)
+    prompts = (jnp.arange(2 * 8, dtype=jnp.int32).reshape(2, 8) * 3) % cfg.vocab
+    base = np.asarray(eng.generate(prompts, 6))
+    results, stats = run_restart_batching(
+        eng, [Request(rid=i, prompt=np.asarray(prompts[i]), max_new=6)
+              for i in range(2)])
+    for i in range(2):
+        assert results[i].tokens == list(base[i])
+    # everyone waits for the longest request: one shared finish tick
+    assert results[0].finished_at == results[1].finished_at
+
+
+# --------------------------------------------------------------------------
+# Per-slot cache primitives
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["float", "int8"])
+def test_per_slot_cache_independent_offsets(quantized):
+    from repro.nn.attention import init_kv_cache, update_kv_cache
+
+    cache = init_kv_cache(2, 8, 2, 4, quantized=quantized,
+                          dtype=jnp.float32, per_slot_len=True)
+    cache["len"] = jnp.asarray([0, 3], jnp.int32)
+    k = jnp.ones((2, 1, 2, 4)) * jnp.asarray([1.0, 2.0])[:, None, None, None]
+    cache = update_kv_cache(cache, k, k)
+    np.testing.assert_array_equal(np.asarray(cache["len"]), [1, 4])
+    kf = np.asarray(cache["k"], np.float32)
+    assert kf[0, 0, 0, 0] != 0          # slot 0 wrote at its own offset 0
+    assert kf[1, 3, 0, 0] != 0          # slot 1 wrote at its own offset 3
+    assert kf[1, 0, 0, 0] == 0          # and not at slot 0's offset
+
+
+def test_per_slot_decode_attention_masks_each_slot():
+    from repro.nn.attention import decode_attention
+
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 1, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, 6, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, 6, 2, 8))
+    lens = jnp.asarray([2, 5], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    # per-row scalar-length computation must agree exactly
+    for i, ln in enumerate([2, 5]):
+        ref = decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                               jnp.int32(ln))
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref[0]),
+                                   rtol=1e-6)
+
+
+def test_qdecode_kernel_per_slot_lengths():
+    """Pallas (interpret) and ref agree on per-slot kv_len masking."""
+    from repro.kernels.qdecode_attn import qdecode_attn_pallas
+    from repro.kernels.ref import qdecode_attn_ref
+
+    rng = jax.random.PRNGKey(3)
+    q = jax.random.normal(rng, (2, 4, 8), jnp.float32)
+    kc = jax.random.randint(jax.random.fold_in(rng, 1), (2, 8, 2, 8),
+                            -100, 100, jnp.int8)
+    vc = jax.random.randint(jax.random.fold_in(rng, 2), (2, 8, 2, 8),
+                            -100, 100, jnp.int8)
+    lens = jnp.asarray([3, 7], jnp.int32)
+    ref = qdecode_attn_ref(q, kc, vc, 3, 3, lens)
+    out = qdecode_attn_pallas(q, kc, vc, jnp.int32(3), jnp.int32(3), lens,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # scalar kv_len still broadcasts (lockstep path unchanged)
+    ref_s = qdecode_attn_ref(q, kc, vc, 3, 3, jnp.int32(5))
+    out_s = qdecode_attn_pallas(q, kc, vc, jnp.int32(3), jnp.int32(3),
+                                jnp.int32(5), interpret=True)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(ref_s),
+                               rtol=1e-5, atol=1e-5)

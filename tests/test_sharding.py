@@ -3,7 +3,6 @@ fallback, serve orientation) — pure spec logic, no device mesh required
 beyond the default 1-CPU (specs are constructed, not applied)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
