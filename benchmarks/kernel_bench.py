@@ -21,6 +21,16 @@ def run():
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     xf = jax.random.normal(kx, (m, k), jnp.float32)
     wf = jax.random.normal(kw, (k, n), jnp.float32)
+    # chunked-prefill attention: C=64 chunk over a 2k int8 cache (serve path)
+    c, g, hkv, d, s = 64, 4, 4, 64, 2048
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q_ck = jax.random.normal(ks[0], (c, g * hkv, d), jnp.float32)
+    k_ck = jax.random.normal(ks[1], (c, hkv, d), jnp.float32)
+    v_ck = jax.random.normal(ks[2], (c, hkv, d), jnp.float32)
+    k_cache = jax.random.randint(ks[3], (4, s, hkv, d), -100, 100,
+                                 jnp.int32).astype(jnp.int8)
+    v_cache = jax.random.randint(ks[4], (4, s, hkv, d), -100, 100,
+                                 jnp.int32).astype(jnp.int8)
     x8 = qformat.quantize(xf, jnp.int32(5), 8)
     w8 = qformat.quantize(wf, jnp.int32(5), 8)
     w16 = qformat.quantize(wf, jnp.int32(9), 16)
@@ -37,6 +47,9 @@ def run():
             lambda a, b: ref.wq_matmul_ref(a, b, scale)),
         "fake_quant_fwd": jax.jit(
             lambda a: ref.fake_quant_ref(a, jnp.int32(5), width=8)),
+        "qchunk_attn_c64_s2k": jax.jit(
+            lambda *a: ref.qchunk_attn_ref(*a, jnp.int32(5), jnp.int32(5),
+                                           jnp.int32(1), jnp.int32(512))),
     }
     args = {
         "matmul_f32": (xf, wf),
@@ -45,6 +58,7 @@ def run():
         "qmm_requant_int8": (x8, w8),
         "wq_matmul_int8w": (xf, w8),
         "fake_quant_fwd": (xf,),
+        "qchunk_attn_c64_s2k": (q_ck, k_ck, v_ck, k_cache, v_cache),
     }
     base = None
     rows = []

@@ -1,23 +1,38 @@
-"""Serve throughput bench: continuous batching vs restart-the-batch, swept
-over the paper's deployment quantization variants.
+"""Serve bench: chunked-prefill vs stall-the-batch admission vs restart,
+swept over the paper's deployment quantization variants.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke \\
         [--baseline benchmarks/baselines/serve_bench.json]
 
 For each variant in {fp32, wq (int8 weights), qkv (int8 KV), wq_qkv} the same
-staggered-arrival workload (alternating short/long horizons — the length
-spread continuous batching exploits) runs through
+mixed-arrival workload (long prompts + alternating short/long horizons — the
+spread continuous batching exploits, and prompts long enough that one-shot
+admission visibly stalls the batch) runs through
 
-  * the continuous-batching Scheduler (serve/scheduler.py), and
+  * ``chunked``: the continuous-batching Scheduler with chunked-prefill
+    admission (one fused mixed step per tick; serve/scheduler.py),
+  * ``scheduler``: the same Scheduler with PR 2's one-shot admission (a
+    stop-the-world batch-1 prefill per freed slot), and
   * the restart-the-batch lockstep baseline,
 
-and writes ``benchmarks/out/serve_bench.json`` with steady tok/s, slot
-occupancy, p50/p99 latency, peak cache bytes and the scheduler/restart
-speedup.  This JSON is the perf trajectory CI tracks: with ``--baseline`` the
-run fails if any variant's scheduler steady tok/s regresses more than
---tolerance (default 30%) against the checked-in
-``benchmarks/baselines/serve_bench.json``.  To refresh the baseline after an
-intentional perf change, copy the new out-file over it (see README "Serving").
+asserts the two admission policies emit token-identical streams, and writes
+``benchmarks/out/serve_bench.json`` with steady tok/s, occupancy, p50/p99
+latency in steps AND wall milliseconds (both scheduler policies run with
+``time_ticks=True``: virtual time cannot see a stop-the-world prefill, wall
+time can; wall metrics are best-of-3 repeats — contention only adds time),
+jit-compile counts, chunk/stall counters, peak cache bytes and speedups.
+
+Two gates:
+
+  * always: the same-run relative gate — chunked must beat one-shot on p99
+    wall latency and steady tok/s (``check_relative``; ratios are immune to
+    runner weather);
+  * with ``--baseline``: steady tok/s and p99 latency in *steps* (the
+    deterministic schedule metric) vs the checked-in
+    ``benchmarks/baselines/serve_bench.json``, --tolerance (default 30%).
+
+To refresh the baseline after an intentional perf change, copy the new
+out-file over it (see README "Serving").
 """
 from __future__ import annotations
 
@@ -41,6 +56,11 @@ VARIANTS = {
     "wq_qkv": {"weight_quant": True, "quantized_kv": True},
 }
 
+_POLICY_KEYS = ("steady_tok_s", "compile_s", "occupancy",
+                "p50_latency_steps", "p99_latency_steps",
+                "p50_latency_ms", "p99_latency_ms",
+                "peak_cache_bytes", "num_jit_compiles")
+
 
 def make_workload(n_requests, prompt_len, short_new, long_new, spacing, vocab,
                   seed=0):
@@ -54,22 +74,60 @@ def make_workload(n_requests, prompt_len, short_new, long_new, spacing, vocab,
     ]
 
 
-def bench_variant(model, params, kw, workload, *, max_len, slots, seed=0):
+def _best_summary(stats_list):
+    """Summary of the best (lowest-p99) repeat, with each wall-sensitive
+    metric replaced by its best across repeats.  On a contended shared box
+    noise only ever *adds* time — single runs swing ±50%, medians still
+    wobble under multi-repeat contention bursts — so best-of-N is the
+    cleanest estimator of the true cost, for both policies alike.
+    ``compile_s`` comes from the FIRST repeat: later repeats hit warm jit
+    caches and would record ~0."""
+    first = stats_list[0].summary()
+    summaries = sorted((st.summary() for st in stats_list),
+                       key=lambda s: s["p99_latency_ms"])
+    out = dict(summaries[0])
+    out["compile_s"] = first["compile_s"]
+    out["steady_tok_s"] = max(s["steady_tok_s"] for s in summaries)
+    for key in ("p50_latency_ms", "p99_latency_ms"):
+        out[key] = min(s[key] for s in summaries)
+    return out
+
+
+def bench_variant(model, params, kw, workload, *, max_len, slots, chunk,
+                  seed=0, repeats=3):
     engine = ServeEngine(model=model, params=params, max_len=max_len,
                          batch_slots=slots, **kw)
-    sched_res, sched = engine.scheduler().run(workload, seed=seed)
+    sched_p, chunk_p = engine.scheduler(), engine.scheduler(chunk_size=chunk)
+    # interleave the policies' repeats so box-level noise hits both alike
+    # (jits are cached after the first run, so repeats time pure steady state)
+    sched_stats, chunk_stats = [], []
+    sched_res = chunk_res = None
+    for _ in range(repeats):
+        sched_res, st = sched_p.run(workload, seed=seed, time_ticks=True)
+        sched_stats.append(st)
+        chunk_res, st = chunk_p.run(workload, seed=seed, time_ticks=True)
+        chunk_stats.append(st)
     restart_res, restart = run_restart_batching(engine, workload, seed=seed)
-    assert sorted(sched_res) == sorted(r.rid for r in workload)
-    assert sorted(restart_res) == sorted(r.rid for r in workload)
-    s, r = sched.summary(), restart.summary()
+    for res in (sched_res, chunk_res, restart_res):
+        assert sorted(res) == sorted(r.rid for r in workload)
+    # acceptance bar: chunked admission is token-identical to one-shot
+    for r in workload:
+        assert chunk_res[r.rid].tokens == sched_res[r.rid].tokens, (
+            f"chunked/one-shot token divergence on rid {r.rid}")
+    s, c = _best_summary(sched_stats), _best_summary(chunk_stats)
+    rs = restart.summary()
     return {
-        **{k: s[k] for k in ("steady_tok_s", "compile_s", "occupancy",
-                             "p50_latency_steps", "p99_latency_steps",
-                             "peak_cache_bytes")},
-        "restart_tok_s": r["steady_tok_s"],
-        "restart_occupancy": r["occupancy"],
+        "scheduler": {**{k: s[k] for k in _POLICY_KEYS},
+                      "admission_stalls": s["admission_stalls"]},
+        "chunked": {**{k: c[k] for k in _POLICY_KEYS},
+                    "prefill_chunks": c["prefill_chunks"],
+                    "stalled_chunks": c["stalled_chunks"]},
+        "restart_tok_s": rs["steady_tok_s"],
+        "restart_occupancy": rs["occupancy"],
         "speedup_vs_restart": round(s["steady_tok_s"]
-                                    / max(r["steady_tok_s"], 1e-9), 3),
+                                    / max(rs["steady_tok_s"], 1e-9), 3),
+        "chunked_p99_speedup": round(s["p99_latency_ms"]
+                                     / max(c["p99_latency_ms"], 1e-9), 3),
     }
 
 
@@ -77,15 +135,16 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     cfg = get_config("smollm-135m-smoke")
     model = cfg.build(dtype=jnp.float32, remat="off")
     params = model.init(jax.random.PRNGKey(seed))
-    # Alternating short/long horizons: the restart baseline holds every slot
-    # for the batch's longest request, so the short ones idle ~half the slot
-    # ticks — exactly the waste continuous batching reclaims.
+    # Long prompts + alternating short/long horizons: the restart baseline
+    # holds every slot for the batch's longest request, and one-shot
+    # admission stalls every live slot for a full prompt prefill per freed
+    # slot — the chunked mixed step reclaims both.
     if smoke:
-        wl_cfg = dict(n_requests=16, prompt_len=8, short_new=4, long_new=60,
-                      spacing=2, slots=4)
+        wl_cfg = dict(n_requests=12, prompt_len=512, short_new=8, long_new=48,
+                      spacing=4, slots=4, chunk=256)
     else:
-        wl_cfg = dict(n_requests=48, prompt_len=16, short_new=8, long_new=96,
-                      spacing=3, slots=8)
+        wl_cfg = dict(n_requests=32, prompt_len=1024, short_new=8, long_new=64,
+                      spacing=6, slots=8, chunk=256)
     workload = make_workload(
         wl_cfg["n_requests"], wl_cfg["prompt_len"], wl_cfg["short_new"],
         wl_cfg["long_new"], wl_cfg["spacing"], cfg.vocab, seed=seed)
@@ -97,13 +156,15 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     for name, kw in VARIANTS.items():
         results["variants"][name] = bench_variant(
             model, params, kw, workload, max_len=max_len,
-            slots=wl_cfg["slots"], seed=seed)
+            slots=wl_cfg["slots"], chunk=wl_cfg["chunk"], seed=seed)
         v = results["variants"][name]
-        print(f"{name:8s} sched {v['steady_tok_s']:8.1f} tok/s "
-              f"(occ {v['occupancy']:.2f}) | restart "
-              f"{v['restart_tok_s']:8.1f} tok/s | "
-              f"speedup {v['speedup_vs_restart']:.2f}x | "
-              f"cache {v['peak_cache_bytes']/1024:.0f} KiB")
+        s, c = v["scheduler"], v["chunked"]
+        print(f"{name:8s} chunked {c['steady_tok_s']:8.1f} tok/s "
+              f"p99 {c['p99_latency_ms']:7.1f} ms ({c['num_jit_compiles']} "
+              f"jit shapes) | one-shot {s['steady_tok_s']:8.1f} tok/s "
+              f"p99 {s['p99_latency_ms']:7.1f} ms ({s['num_jit_compiles']}) "
+              f"| p99 speedup {v['chunked_p99_speedup']:.2f}x | restart "
+              f"{v['restart_tok_s']:7.1f} tok/s")
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -114,7 +175,52 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     return results
 
 
+def check_relative(results, *, min_p99_speedup: float = 1.0,
+                   min_tok_ratio: float = 1.0) -> bool:
+    """Same-run chunked-vs-one-shot gate — the noise-robust regression
+    signal: box-level contention moves both policies together, so absolute
+    wall metrics are weather but the ratio is signal.  Gated on the
+    *geomean across variants*: a contention burst landing on one variant's
+    repeats can still drag that single ratio below 1 (observed 0.6-0.7x
+    outliers on a healthy build whose other variants read 1.2-1.8x), while
+    a real chunked-path regression drags every variant — the geomean
+    separates the two cleanly (healthy: >= 1.1 on every observed run;
+    broken full-scan build: 0.93)."""
+    p99s, toks = [], []
+    for name, v in results["variants"].items():
+        s, c = v["scheduler"], v["chunked"]
+        ratio_p99 = s["p99_latency_ms"] / max(c["p99_latency_ms"], 1e-9)
+        ratio_tok = c["steady_tok_s"] / max(s["steady_tok_s"], 1e-9)
+        p99s.append(ratio_p99)
+        toks.append(ratio_tok)
+        print(f"   {name}: chunked vs one-shot p99 {ratio_p99:.2f}x, "
+              f"tok/s {ratio_tok:.2f}x")
+    gm = lambda xs: float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+    gm_p99, gm_tok = gm(p99s), gm(toks)
+    ok = True
+    if gm_p99 < min_p99_speedup:
+        print(f"REGRESSION: geomean chunked p99 speedup {gm_p99:.2f}x < "
+              f"{min_p99_speedup:.2f}x — chunked no longer beats one-shot")
+        ok = False
+    if gm_tok < min_tok_ratio:
+        print(f"REGRESSION: geomean chunked tok/s ratio {gm_tok:.2f} < "
+              f"{min_tok_ratio:.2f} — chunked steady throughput regressed")
+        ok = False
+    if ok:
+        print(f"ok relative gate: geomean p99 speedup {gm_p99:.2f}x, "
+              f"tok/s ratio {gm_tok:.2f}x")
+    return ok
+
+
 def check_baseline(results, baseline_path: str, tolerance: float) -> bool:
+    """Per variant x policy: fail on a steady-tok/s drop OR a >tolerance
+    p99-latency regression vs the checked-in baseline.
+
+    The p99 gate uses ``p99_latency_steps`` — with a fixed seed the tick
+    schedule is deterministic, so any movement is a real scheduling
+    regression, immune to runner weather.  Wall-clock p99 is recorded in
+    the JSON and gated *within* a run by ``check_relative`` (absolute wall
+    numbers across machines/runs swing far beyond any sane tolerance)."""
     with open(baseline_path) as f:
         baseline = json.load(f)
     ok = True
@@ -124,15 +230,35 @@ def check_baseline(results, baseline_path: str, tolerance: float) -> bool:
             print(f"REGRESSION {name}: variant missing from current run")
             ok = False
             continue
-        floor = base["steady_tok_s"] * (1.0 - tolerance)
-        if cur["steady_tok_s"] < floor:
-            print(f"REGRESSION {name}: steady {cur['steady_tok_s']:.1f} tok/s "
-                  f"< floor {floor:.1f} "
-                  f"(baseline {base['steady_tok_s']:.1f}, -{tolerance:.0%})")
-            ok = False
-        else:
-            print(f"ok {name}: {cur['steady_tok_s']:.1f} tok/s "
-                  f">= floor {floor:.1f}")
+        for policy in ("scheduler", "chunked"):
+            b, c = base.get(policy), cur.get(policy)
+            if b is None:
+                continue
+            if c is None:
+                print(f"REGRESSION {name}/{policy}: policy missing")
+                ok = False
+                continue
+            floor = b["steady_tok_s"] * (1.0 - tolerance)
+            if c["steady_tok_s"] < floor:
+                print(f"REGRESSION {name}/{policy}: steady "
+                      f"{c['steady_tok_s']:.1f} tok/s < floor {floor:.1f} "
+                      f"(baseline {b['steady_tok_s']:.1f}, -{tolerance:.0%})")
+                ok = False
+            else:
+                print(f"ok {name}/{policy}: {c['steady_tok_s']:.1f} tok/s "
+                      f">= floor {floor:.1f}")
+            if b.get("p99_latency_steps"):
+                ceil = b["p99_latency_steps"] * (1.0 + tolerance)
+                if c.get("p99_latency_steps", 0.0) > ceil:
+                    print(f"REGRESSION {name}/{policy}: p99 "
+                          f"{c['p99_latency_steps']:.1f} steps > ceiling "
+                          f"{ceil:.1f} (baseline "
+                          f"{b['p99_latency_steps']:.1f}, +{tolerance:.0%})")
+                    ok = False
+                else:
+                    print(f"ok {name}/{policy}: p99 "
+                          f"{c['p99_latency_steps']:.1f} steps <= ceiling "
+                          f"{ceil:.1f}")
     return ok
 
 
@@ -142,15 +268,24 @@ def main(argv=None):
                     help="small workload (CI's bench-smoke job)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--baseline", default=None,
-                    help="compare steady tok/s against this JSON; exit 1 on "
-                         "a regression beyond --tolerance")
+                    help="compare steady tok/s and p99 latency against this "
+                         "JSON; exit 1 on a regression beyond --tolerance")
     ap.add_argument("--tolerance", type=float, default=0.30)
+    ap.add_argument("--min-p99-speedup", type=float, default=1.0,
+                    help="relative-gate floor: geomean chunked-vs-one-shot "
+                         "p99 speedup across variants")
+    ap.add_argument("--min-tok-ratio", type=float, default=1.0,
+                    help="relative-gate floor: geomean chunked-vs-one-shot "
+                         "steady tok/s ratio across variants")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     results = run(smoke=args.smoke, seed=args.seed, out_path=args.out)
+    ok = check_relative(results, min_p99_speedup=args.min_p99_speedup,
+                        min_tok_ratio=args.min_tok_ratio)
     if args.baseline:
-        if not check_baseline(results, args.baseline, args.tolerance):
-            raise SystemExit(1)
+        ok = check_baseline(results, args.baseline, args.tolerance) and ok
+    if not ok:
+        raise SystemExit(1)
     print("serve_bench ok")
 
 

@@ -19,6 +19,7 @@ from repro.core.qformat import QTensor
 
 from . import ref
 from .fake_quant import fake_quant_pallas
+from .qchunk_attn import qchunk_attn_pallas
 from .qconv1d import qconv1d_pallas
 from .qdecode_attn import qdecode_attn_pallas
 from .qmm import qmm_pallas, qmm_requant_pallas
@@ -117,3 +118,21 @@ def qdecode_attn(q, k_cache, v_cache, k_n, v_n, kv_len):
     if mode == "interpret":
         return qdecode_attn_pallas(q, k_cache, v_cache, k_n, v_n, kv_len, interpret=True)
     return ref.qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len)
+
+
+def qchunk_attn(q, k_chunk, v_chunk, k_cache, v_cache, k_n, v_n, slot, start):
+    """Chunked-prefill attention + fused int8 quantize-on-write (serve path).
+
+    Returns (out (C, Hq, D), k_cache', v_cache'): rows [start, start+C) of
+    ``slot`` hold the quantized chunk; everything else passes through (the
+    Pallas path aliases the cache buffers, so the write is in place).
+    """
+    mode = _mode()
+    if mode == "pallas":
+        return qchunk_attn_pallas(q, k_chunk, v_chunk, k_cache, v_cache,
+                                  k_n, v_n, slot, start)
+    if mode == "interpret":
+        return qchunk_attn_pallas(q, k_chunk, v_chunk, k_cache, v_cache,
+                                  k_n, v_n, slot, start, interpret=True)
+    return ref.qchunk_attn_ref(q, k_chunk, v_chunk, k_cache, v_cache,
+                               k_n, v_n, slot, start)

@@ -50,6 +50,41 @@ def qconv1d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
     )
 
 
+def qchunk_attn_ref(q, k_chunk, v_chunk, k_cache, v_cache, k_n, v_n,
+                    slot, start):
+    """Chunked-prefill attention oracle: quantize the chunk's K/V onto the
+    paper grid, write rows [start, start+C) of ``slot`` in the (B,S,Hkv,D)
+    int8 caches, then attend each chunk query c over positions <= start+c
+    (the slot's prefix plus the causally visible part of the chunk itself).
+
+    Returns (out (C, Hq, D), k_cache', v_cache') like the Pallas kernel.
+    """
+    c, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    k_n = jnp.asarray(k_n, jnp.int32)
+    v_n = jnp.asarray(v_n, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    k8 = qformat.quantize(k_chunk, k_n, 8)
+    v8 = qformat.quantize(v_chunk, v_n, 8)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k8[None], (slot, start, jnp.int32(0), jnp.int32(0)))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v8[None], (slot, start, jnp.int32(0), jnp.int32(0)))
+    kf = jax.lax.dynamic_index_in_dim(k_cache, slot, axis=0, keepdims=False)
+    vf = jax.lax.dynamic_index_in_dim(v_cache, slot, axis=0, keepdims=False)
+    kf = kf.astype(jnp.float32) * jnp.exp2(-k_n.astype(jnp.float32))
+    vf = vf.astype(jnp.float32) * jnp.exp2(-v_n.astype(jnp.float32))
+    qg = q.reshape(c, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("chgd,shd->hgcs", qg, kf) / (d ** 0.5)
+    pos = jnp.arange(s)[None, None, None, :]
+    visible = pos <= (start + jnp.arange(c))[None, None, :, None]
+    p = jax.nn.softmax(jnp.where(visible, scores, -1e30), axis=-1)
+    out = jnp.einsum("hgcs,shd->chgd", p, vf)
+    return out.reshape(c, hq, d).astype(q.dtype), k_cache, v_cache
+
+
 def qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len):
     """Dequantize-everything flash-free reference decode attention.
 

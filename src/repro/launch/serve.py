@@ -10,8 +10,15 @@ Both reproduce the paper's deployment flow (train fp → quantize → deploy) at
 the serving layer — now under realistic traffic instead of one lockstep batch.
 
 Policies:
-  scheduler  continuous batching (serve/scheduler.py): queued requests admit
-             into freed slots, per-slot EOS/length eviction
+  chunked    continuous batching with chunked-prefill admission: every tick
+             is ONE fused mixed step = all live decode slots + one
+             --chunk-size prompt chunk written in place into its slot's KV
+             slice.  Decode never stalls more than a chunk and every prompt
+             length shares one compile shape.  --token-budget caps per-tick
+             tokens (live slots + chunk; decode always runs)
+  scheduler  continuous batching with one-shot admission: a freed slot is
+             refilled by a stop-the-world batch-1 prefill + write_kv_slot
+             copy (every live slot stalls for the full prompt)
   restart    restart-the-batch baseline: lockstep generate() per gathered
              batch, everyone waits for the longest request
   lockstep   the legacy single-batch generate() (no queue; --requests is
@@ -52,12 +59,21 @@ def build_workload(args, vocab: int):
 
 def report(name: str, stats) -> None:
     s = stats.summary()
+    extra = ""
+    if s.get("p99_latency_ms"):
+        extra += (f" | latency p50/p99 {s['p50_latency_ms']:.1f}/"
+                  f"{s['p99_latency_ms']:.1f} ms")
+    if s.get("prefill_chunks"):
+        extra += (f" | chunks {s['prefill_chunks']} "
+                  f"(stalled {s['stalled_chunks']})")
+    if s.get("num_jit_compiles"):
+        extra += f" | jit shapes {s['num_jit_compiles']}"
     print(f"[{name}] warmup(compile) {s['compile_s']:.2f}s | "
           f"steady {s['steady_tok_s']:.1f} tok/s over {s['steady_s']:.3f}s | "
           f"occupancy {s['occupancy']:.2f} | "
           f"latency p50/p99 {s['p50_latency_steps']:.0f}/"
           f"{s['p99_latency_steps']:.0f} steps | "
-          f"cache {s['peak_cache_bytes']/1024:.0f} KiB")
+          f"cache {s['peak_cache_bytes']/1024:.0f} KiB{extra}")
 
 
 def main(argv=None):
@@ -73,10 +89,21 @@ def main(argv=None):
     ap.add_argument("--arrival-spacing", type=int, default=2,
                     help="decode-step ticks between request arrivals")
     ap.add_argument("--policy", default="scheduler",
-                    choices=["scheduler", "restart", "lockstep"])
+                    choices=["chunked", "scheduler", "restart", "lockstep"])
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="prefill chunk tokens per mixed step (chunked "
+                         "policy; the last chunk's padded rows must fit "
+                         "max_len, so keep it <= --prompt-len)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-tick token cap for chunked admission "
+                         "(0 = unbounded; must fit one chunk)")
+    ap.add_argument("--time-ticks", action="store_true",
+                    help="block per tick and report wall-clock p50/p99 "
+                         "request latency (ms)")
     ap.add_argument("--prompt-bucket", type=int, default=0,
                     help="round prompt lengths up to this multiple "
-                         "(0 = exact lengths; one jit compile per length)")
+                         "(0 = exact lengths; one jit compile per length; "
+                         "scheduler policy only)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop a slot when this token is sampled (-1 = off)")
     ap.add_argument("--wq", action="store_true")
@@ -123,9 +150,13 @@ def main(argv=None):
     else:
         sched = engine.scheduler(
             eos_id=None if args.eos_id < 0 else args.eos_id,
-            prompt_bucket=args.prompt_bucket or None)
-        results, stats = sched.run(reqs, seed=args.seed)
-        report("scheduler", stats)
+            prompt_bucket=args.prompt_bucket or None,
+            chunk_size=args.chunk_size if args.policy == "chunked" else None,
+            token_budget=(args.token_budget or None)
+            if args.policy == "chunked" else None)
+        results, stats = sched.run(reqs, seed=args.seed,
+                                   time_ticks=args.time_ticks)
+        report(args.policy, stats)
     first = results[min(results)]
     print(f"request {first.rid}: {len(first.tokens)} tokens, "
           f"first-10 {first.tokens[:10]}")

@@ -69,8 +69,19 @@ class CausalLM:
               cache: Optional[Dict[str, Any]] = None,
               positions: Optional[jax.Array] = None,
               decode: bool = False,
+              chunk=None,
+              logit_pos: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
-        """Returns (logits (B, S, vocab_padded), new_cache)."""
+        """Returns (logits (B, S, vocab_padded), new_cache).
+
+        ``chunk``: a KVChunk routing this forward as a chunked prefill into
+        one slot of a per-slot cache (serve/engine.make_mixed_step).
+        ``logit_pos``: compute logits at this single position only (returns
+        (B, 1, V)) — serving prefills sample exactly one token, and the LM
+        head over the padded vocab dwarfs the rest of a small-batch forward,
+        so slicing *before* the head is the admission-path win for one-shot
+        and chunked admission alike.
+        """
         ctx = ctx.scope(self.name)
         embedder = self._embed()
         if tokens is not None:
@@ -82,7 +93,11 @@ class CausalLM:
         x = ctx.constrain(x, "batch", "seq", None)
 
         x, new_cache = self.stack.apply(params["stack"], x, ctx, cache=cache,
-                                        positions=positions, decode=decode)
+                                        positions=positions, decode=decode,
+                                        chunk=chunk)
+        if logit_pos is not None:
+            x = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(logit_pos, jnp.int32), 1, axis=1)
         x = _final_norm(self.norm, self.d_model).apply(params["final_norm"], x, ctx)
 
         if self.tie_embeddings:
@@ -185,28 +200,39 @@ class EncDecLM:
 
     def decode_step(self, params: Params, tokens: jax.Array, enc: jax.Array,
                     ctx: Context, *, cache=None, positions=None, decode=False,
-                    ) -> Tuple[jax.Array, Any]:
+                    chunk=None, logit_pos=None) -> Tuple[jax.Array, Any]:
         ctx = ctx.scope(self.name)
         x = self._embed().apply(params["embed"], tokens, ctx)
         if positions is None:
-            positions = jnp.arange(tokens.shape[1])
+            if chunk is not None:
+                # chunked prefill: the chunk's tokens sit at absolute
+                # positions start..start+C-1 in the learned position table
+                positions = jnp.asarray(chunk.start, jnp.int32) \
+                    + jnp.arange(tokens.shape[1])
+            else:
+                positions = jnp.arange(tokens.shape[1])
         ptab = params["pos_embed"]["table"]
         x = x + jnp.take(ptab, jnp.clip(positions, 0, ptab.shape[0] - 1),
                          axis=0).astype(x.dtype)
         x, new_cache = self.decoder.apply(params["decoder"], x, ctx, cache=cache,
-                                          enc=enc, decode=decode)
+                                          enc=enc, decode=decode, chunk=chunk)
+        if logit_pos is not None:
+            x = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(logit_pos, jnp.int32), 1, axis=1)
         x = _final_norm(self.norm, self.d_model).apply(params["final_norm"], x, ctx)
         logits = self._embed().attend(params["embed"], x, ctx)
         logits = ctx.constrain(logits, "batch", None, "vocab")
         return logits.astype(jnp.float32), new_cache
 
     def apply(self, params: Params, tokens, ctx: Context, *, embeds=None,
-              cache=None, positions=None, decode=False, enc=None):
+              cache=None, positions=None, decode=False, enc=None, chunk=None,
+              logit_pos=None):
         """CausalLM-compatible signature; encodes unless `enc` is given."""
         if enc is None:
             enc = self.encode(params, embeds, ctx)
         return self.decode_step(params, tokens, enc, ctx, cache=cache,
-                                positions=positions, decode=decode)
+                                positions=positions, decode=decode,
+                                chunk=chunk, logit_pos=logit_pos)
 
     def loss(self, params: Params, batch: Dict[str, jax.Array], ctx: Context):
         logits, _ = self.apply(params, batch["tokens"], ctx,

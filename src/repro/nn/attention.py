@@ -291,15 +291,19 @@ def decode_attention(
     kv_len: jax.Array,
     *,
     k_n=None, v_n=None,  # int8 dequant exponents (paper Qm.n grid)
+    sharded: bool = False,
 ) -> jax.Array:
-    """Single-token decode over the full cache, SPMD-shardable on Skv.
+    """Single-token decode over the full cache.
 
-    Unlike the blocked scan, this is one einsum + masked softmax + einsum, so
-    the XLA partitioner can shard the cache-length axis over `model`
-    (KV/context parallelism): each chip reads only its cache slice from HBM —
-    the decode-bound roofline term divides by the TP degree — and combines
-    with two tiny all-reduces (softmax max + sum).  int8 caches dequantize
-    inline on the paper's pow2 grid (shift semantics, exact).
+    int8 caches route to the fused ``qdecode_attn`` kernel by default
+    (Pallas on TPU, the jnp oracle elsewhere — kernels/ops.py dispatch):
+    dequantization happens in VMEM right before the softmax update, so the
+    HBM read is half/quarter the float bytes — the paper's memory win at the
+    decode-bound roofline.  The einsum fallback below dequantizes the whole
+    cache to f32 first; it is kept for ``sharded=True``, where the XLA
+    partitioner shards the cache-length axis over `model` (KV/context
+    parallelism) and combines with two tiny all-reduces — the Pallas kernel
+    has no SPMD rule.  Float caches always take the einsum path.
 
     ``kv_len`` may be a scalar (lockstep batch) or a (B,) vector (per-slot
     continuous batching): each slot masks its own live prefix.
@@ -307,6 +311,12 @@ def decode_attention(
     b, _, hq, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
+    if k.dtype == jnp.int8 and not sharded:
+        from repro.kernels import ops as kops
+
+        out = kops.qdecode_attn(q[:, 0].astype(jnp.float32), k, v,
+                                k_n, v_n, kv_len)
+        return out[:, None].astype(q.dtype)
     if k.dtype == jnp.int8:
         kf = k.astype(jnp.float32) * jnp.exp2(-k_n.astype(jnp.float32))
         vf = v.astype(jnp.float32) * jnp.exp2(-v_n.astype(jnp.float32))
@@ -422,9 +432,123 @@ def write_kv_slot(big: Dict[str, Any], small: Dict[str, Any], slot: jax.Array,
         upd = jnp.full((ln.shape[0], 1), length, jnp.int32)
         ln = jax.lax.dynamic_update_slice_in_dim(ln, upd, slot, axis=1)
     else:
-        ln = jax.lax.dynamic_update_slice_in_dim(
-            ln, jnp.asarray(length, jnp.int32).reshape(1), slot, axis=0)
+        ln = set_kv_slot_len(ln, slot, length)
     return dict(big, k=k, v=v, len=ln)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVChunk:
+    """Chunked-prefill target: one prompt chunk headed for rows
+    [start, start+C) of batch slot ``slot`` in a per-slot cache.
+
+    ``length`` is the number of valid (non-pad) tokens in the chunk — C for
+    every chunk but the last, which may be partial.  All three are traced
+    int32 scalars inside the serve engine's jitted mixed step, so one compile
+    serves every slot, offset and prompt length (the whole point: no
+    per-prompt-length jit buckets).
+    """
+
+    slot: Any
+    start: Any
+    length: Any
+
+
+def set_kv_slot_len(ln: jax.Array, slot: jax.Array,
+                    new_len: jax.Array) -> jax.Array:
+    """len[slot] = new_len on a per-slot (B,) length vector, traced indices."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        ln, jnp.asarray(new_len, jnp.int32).reshape(1), slot, axis=0)
+
+
+def append_kv_chunk(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array,
+                    chunk: KVChunk) -> Dict[str, Any]:
+    """Write a (1, C, Hkv, D) prompt chunk in place into ``chunk.slot``'s
+    cache rows [start, start+C) and set len[slot] = start + chunk.length.
+
+    The pure-jnp sibling of the fused write inside ``kernels.qchunk_attn``
+    (int8 caches quantize-on-write onto the paper grid; float caches cast).
+    Unlike ``update_kv_cache`` this touches exactly one slot and sets its
+    length *absolutely*, so decode steps that bumped the mid-prefill slot's
+    length with masked junk rows are simply overwritten — the admission path
+    needs no batch-1 scratch cache and no ``write_kv_slot`` copy.
+    """
+    if cache["k"].dtype == jnp.int8:
+        k_new = qformat.quantize(k_new, cache["k_n"], 8)
+        v_new = qformat.quantize(v_new, cache["v_n"], 8)
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
+    zero = jnp.int32(0)
+    at = (jnp.asarray(chunk.slot, jnp.int32),
+          jnp.asarray(chunk.start, jnp.int32), zero, zero)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, at)
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, at)
+    ln = set_kv_slot_len(cache["len"], at[0], chunk.start + chunk.length)
+    return dict(cache, k=k, v=v, len=ln)
+
+
+def chunk_attention(q: jax.Array, cache: Dict[str, Any], slot: jax.Array,
+                    start: jax.Array, *, block_kv: int = 128) -> jax.Array:
+    """Chunk queries (1, C, Hq, D) over slot ``slot`` of a per-slot cache
+    whose rows [start, start+C) already hold the chunk (``append_kv_chunk``):
+    query c attends positions <= start + c — causal within the chunk, full
+    prefix before it.  Reads only the target slot's rows; int8 caches
+    dequantize on the paper's pow2 grid.  The jnp path behind
+    ``kernels.ops.qchunk_attn``'s fused version (float caches, sharded runs).
+
+    Blocked online softmax with a *dynamic* trip count: only KV blocks up to
+    the last visible row (start + C - 1) are visited, so a chunk's attention
+    work matches one-shot causal prefill (sums to P²/2 over a prompt)
+    instead of rescanning the whole max_len cache every chunk.
+    """
+    b, c, hq, d = q.shape
+    s, hkv = cache["k"].shape[1], cache["k"].shape[2]
+    g = hq // hkv
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    kc = jax.lax.dynamic_index_in_dim(cache["k"], slot, axis=0, keepdims=False)
+    vc = jax.lax.dynamic_index_in_dim(cache["v"], slot, axis=0, keepdims=False)
+    quantized = kc.dtype == jnp.int8
+    if quantized:
+        k_scale = jnp.exp2(-cache["k_n"].astype(jnp.float32))
+        v_scale = jnp.exp2(-cache["v_n"].astype(jnp.float32))
+    qg = q[0].reshape(c, hkv, g, d).transpose(1, 2, 0, 3).astype(jnp.float32) \
+        / math.sqrt(d)                                   # (Hkv, G, C, D)
+    qc_idx = jnp.arange(c)[None, None, :, None]
+    bkv = min(block_kv, s)
+    n_blocks = (start + c + bkv - 1) // bkv              # dynamic trip count
+
+    def body(state):
+        i, m, l, acc = state
+        # clamped offset keeps the slice in bounds; the >= i*bkv mask keeps
+        # re-read rows from being double-counted on the clamped last block
+        off = jnp.minimum(i * bkv, s - bkv)
+        kb = jax.lax.dynamic_slice_in_dim(kc, off, bkv, axis=0)
+        vb = jax.lax.dynamic_slice_in_dim(vc, off, bkv, axis=0)
+        if quantized:
+            kb = kb.astype(jnp.float32) * k_scale
+            vb = vb.astype(jnp.float32) * v_scale
+        else:
+            kb, vb = kb.astype(jnp.float32), vb.astype(jnp.float32)
+        pos = (off + jnp.arange(bkv))[None, None, None, :]
+        sb = jnp.einsum("hgcd,khd->hgck", qg, kb)
+        visible = (pos >= i * bkv) & (pos <= start + qc_idx)
+        sb = jnp.where(visible, sb, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sb, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sb - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("hgck,khd->hgcd", p, vb)
+        return i + 1, m_new, l_new, acc_new
+
+    m0 = jnp.full((hkv, g, c, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((hkv, g, c, 1), jnp.float32)
+    a0 = jnp.zeros((hkv, g, c, d), jnp.float32)
+    _, _, l, acc = jax.lax.while_loop(
+        lambda st: st[0] < n_blocks, body, (jnp.int32(0), m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)                    # (Hkv, G, C, D)
+    out = out.transpose(2, 0, 1, 3).reshape(1, c, hq, d)
+    return out.astype(q.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -479,6 +603,7 @@ class Attention:
         cache: Optional[Dict[str, Any]] = None,
         kv_source: Optional[jax.Array] = None,  # cross-attention
         decode: bool = False,
+        chunk: Optional[KVChunk] = None,
     ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
         ctx = ctx.scope(self.name)
         projs = self._projs()
@@ -495,7 +620,9 @@ class Attention:
         v = ctx.constrain(v, "batch", None, "kv_heads", None)
 
         if positions is None:
-            if cache is not None and decode:
+            if chunk is not None:          # chunk rows sit at start..start+C-1
+                positions = chunk.start + jnp.arange(s)
+            elif cache is not None and decode:
                 ln = cache["len"]
                 if jnp.ndim(ln) == 1:      # per-slot offsets -> (B, S)
                     positions = ln[:, None] + jnp.arange(s)[None, :]
@@ -509,28 +636,50 @@ class Attention:
 
         new_cache = None
         if cache is not None and kv_source is None:
-            new_cache = update_kv_cache(cache, k, v)
-            if decode and s == 1 and cache["k"].dtype == jnp.int8 \
-                    and ctx.mesh is None:
-                # single-device int8 serving: fused Pallas dequant-attention
+            if chunk is not None:
+                # chunked prefill: write the chunk in place into the target
+                # slot's rows, then attend over prefix + visible chunk — no
+                # batch-1 scratch cache, no write_kv_slot copy.
+                if jnp.ndim(cache["len"]) != 1:
+                    raise NotImplementedError(
+                        "chunked prefill targets a per-slot cache "
+                        "(init_cache(per_slot_len=True))")
                 from repro.kernels import ops as kops
 
-                out = kops.qdecode_attn(
-                    q[:, 0].astype(jnp.float32),
-                    new_cache["k"], new_cache["v"],
-                    new_cache["k_n"], new_cache["v_n"], new_cache["len"],
-                )[:, None]  # (B,1,Hq,D) back
-                out = out.reshape(b, 1, self.n_heads, self.head_dim)
+                if cache["k"].dtype == jnp.int8 and ctx.mesh is None \
+                        and kops._mode() != "ref":
+                    # fused Pallas path: quantize-on-write + flash in one
+                    # kernel; fp32 chunk K/V never reaches HBM.  The "ref"
+                    # backend (plain CPU) instead takes the blocked jnp path
+                    # below — qchunk_attn_ref is the full-scan oracle, not a
+                    # serving path.
+                    out, k8, v8 = kops.qchunk_attn(
+                        q[0].astype(jnp.float32), k[0].astype(jnp.float32),
+                        v[0].astype(jnp.float32), cache["k"], cache["v"],
+                        cache["k_n"], cache["v_n"], chunk.slot, chunk.start)
+                    out = out[None].astype(q.dtype)
+                    new_cache = dict(
+                        cache, k=k8, v=v8,
+                        len=set_kv_slot_len(cache["len"], chunk.slot,
+                                            chunk.start + chunk.length))
+                else:
+                    new_cache = append_kv_chunk(cache, k, v, chunk)
+                    out = chunk_attention(q, new_cache, chunk.slot,
+                                          chunk.start)
             elif decode and s == 1:
+                new_cache = update_kv_cache(cache, k, v)
                 out = decode_attention(
                     q, new_cache["k"], new_cache["v"], new_cache["len"],
                     k_n=new_cache.get("k_n"), v_n=new_cache.get("v_n"),
+                    sharded=ctx.mesh is not None,
                 ).astype(q.dtype)
             else:
                 if jnp.ndim(cache["len"]) == 1:
                     raise NotImplementedError(
-                        "multi-token prefill into a per-slot cache: admit via "
-                        "a batch-1 prefill + write_kv_slot (serve/scheduler)")
+                        "multi-token prefill into a per-slot cache: use the "
+                        "chunked path (chunk=KVChunk(...)) or admit via a "
+                        "batch-1 prefill + write_kv_slot (serve/scheduler)")
+                new_cache = update_kv_cache(cache, k, v)
                 kf = new_cache["k"]
                 vf = new_cache["v"]
                 if kf.dtype == jnp.int8:

@@ -161,7 +161,8 @@ class Block:
               cache: Optional[Dict[str, Any]] = None,
               enc: Optional[jax.Array] = None,
               positions: Optional[jax.Array] = None,
-              decode: bool = False) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+              decode: bool = False,
+              chunk=None) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
         ctx = ctx.scope(self.name)
         new_cache: Dict[str, Any] = {}
         h = self._norm("norm1").apply(params["norm1"], x, ctx)
@@ -169,7 +170,8 @@ class Block:
         if self.mixer == "attn":
             mix_out, kv = self._mixer().apply(
                 params["mixer"], h, ctx, positions=positions,
-                cache=None if cache is None else cache["kv"], decode=decode)
+                cache=None if cache is None else cache["kv"], decode=decode,
+                chunk=chunk)
             if kv is not None:
                 new_cache["kv"] = kv
         else:
@@ -265,7 +267,8 @@ class Stack:
               cache: Optional[Dict[str, Any]] = None,
               enc: Optional[jax.Array] = None,
               positions: Optional[jax.Array] = None,
-              decode: bool = False) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+              decode: bool = False,
+              chunk=None) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
         ctx = ctx.scope(self.name)
         new_cache: Dict[str, Any] = {} if cache is not None else None
 
@@ -273,7 +276,8 @@ class Stack:
             bctx = ctx.scope(f"pre{i}")
             x, nc = blk.apply(params["prelude"][i], x, bctx,
                               cache=None if cache is None else cache["prelude"][i],
-                              enc=enc, positions=positions, decode=decode)
+                              enc=enc, positions=positions, decode=decode,
+                              chunk=chunk)
             if new_cache is not None:
                 new_cache.setdefault("prelude", []).append(nc)
 
@@ -289,7 +293,8 @@ class Stack:
                     sctx = ctx.fork_for_scan()
                     bctx = sctx.scope(f"l{i}")
                     x2, nc = blk.apply(p, xc, bctx, cache=c, enc=enc,
-                                       positions=positions, decode=decode)
+                                       positions=positions, decode=decode,
+                                       chunk=chunk)
                     return x2, nc, sctx.stats, sctx.losses
 
                 if self.remat != "off":
@@ -314,7 +319,7 @@ class Stack:
                 xc, nc = blk.apply(
                     p_list[pos], xc, bctx,
                     cache=None if c_list is None else c_list[pos],
-                    enc=enc, positions=positions, decode=decode)
+                    enc=enc, positions=positions, decode=decode, chunk=chunk)
                 ncs.append(nc if nc is not None else {})
             return xc, (tuple(ncs), sctx.stats, sctx.losses)
 

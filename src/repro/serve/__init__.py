@@ -1,6 +1,6 @@
 from repro.serve.engine import (ServeEngine, make_decode_step,  # noqa: F401
-                                make_prefill_step, mask_vocab_tail,
-                                sample_tokens)
+                                make_mixed_step, make_prefill_step,
+                                mask_vocab_tail, sample_tokens)
 from repro.serve.scheduler import (Request, RequestResult,  # noqa: F401
                                    Scheduler, ServeStats,
                                    run_restart_batching)

@@ -47,16 +47,18 @@ def sample_tokens(logits: jax.Array, rng, vocab: int,
 
 
 def make_prefill_step(model, *, mesh=None, axis_rules=None,
-                      policy: Optional[QuantPolicy] = None,
-                      full_logits: bool = False) -> Callable:
+                      policy: Optional[QuantPolicy] = None) -> Callable:
     """(params, tokens, cache, [embeds/enc]) -> (logits, cache').
 
-    ``full_logits=False`` (lockstep default) returns the last position only;
-    ``full_logits=True`` returns (B, S, V) so a slot-targeted prefill over a
-    padded prompt bucket can gather its true last-token logits (scheduler).
+    Default: last-position logits (lockstep generate).  ``logit_pos``
+    (runtime arg) instead returns (B, 1, V) at that position, slicing the
+    hidden states *before* the LM head — admission prefills sample one
+    token, so the head (the dominant term at small batch) runs over 1
+    position, not S; a slot-targeted prefill over a padded prompt bucket
+    passes its true last-token position (scheduler).
     """
 
-    def prefill(params, tokens, cache, embeds=None, enc=None):
+    def prefill(params, tokens, cache, embeds=None, enc=None, logit_pos=None):
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
                       mesh=mesh, axis_rules=axis_rules)
         kw: Dict[str, Any] = {}
@@ -65,8 +67,11 @@ def make_prefill_step(model, *, mesh=None, axis_rules=None,
         if embeds is not None:
             kw["embeds"] = embeds
         logits, new_cache = model.apply(params, tokens, ctx, cache=cache,
-                                        decode=True, **kw)
-        return (logits if full_logits else logits[:, -1]), new_cache
+                                        decode=True, logit_pos=logit_pos,
+                                        **kw)
+        if logit_pos is not None:
+            return logits, new_cache          # (B, 1, V) at logit_pos
+        return logits[:, -1], new_cache
 
     return prefill
 
@@ -87,6 +92,48 @@ def make_decode_step(model, *, mesh=None, axis_rules=None,
         return nxt, new_cache
 
     return decode
+
+
+def make_mixed_step(model, *, mesh=None, axis_rules=None,
+                    policy: Optional[QuantPolicy] = None,
+                    temperature: float = 0.0) -> Callable:
+    """Chunked-prefill mixed step: one fused jitted computation that advances
+    *all* live decode slots by one token AND prefills one fixed-size prompt
+    chunk in place into a target slot's KV slice (nn KVChunk path — no
+    batch-1 scratch cache, no ``write_kv_slot`` copy, and because the chunk
+    shape is static there is exactly one compile regardless of prompt length).
+
+    (params, tok (B,1), cache, rng, chunk_tok (1,C), slot, start, length)
+      -> (next (B,1), first (1,1), cache')
+
+    ``length`` is the chunk's valid token count (< C only on the last,
+    padded chunk); ``first`` samples the logits at position length-1 and is
+    only meaningful on that last chunk (the prompt's first generated token).
+    The decode half runs first, so its per-slot cache append for the
+    mid-prefill slot lands exactly on the row the chunk then overwrites —
+    the scheduler's masking invariant (junk only at rows >= len) holds.
+    """
+    from repro.nn.attention import KVChunk
+
+    decode = make_decode_step(model, mesh=mesh, axis_rules=axis_rules,
+                              policy=policy, temperature=temperature)
+
+    def mixed(params, tok, cache, rng, chunk_tok, slot, start, length,
+              enc=None):
+        rng_d, rng_c = jax.random.split(rng)
+        nxt, cache = decode(params, tok, cache, rng_d, enc)
+        ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
+                      mesh=mesh, axis_rules=axis_rules)
+        kw = {"enc": enc} if enc is not None else {}
+        logits, cache = model.apply(
+            params, chunk_tok, ctx, cache=cache, decode=True,
+            chunk=KVChunk(slot=slot, start=start, length=length),
+            logit_pos=length - 1, **kw)
+        vocab = getattr(model, "vocab", logits.shape[-1])
+        first = sample_tokens(logits[:, 0], rng_c, vocab, temperature)
+        return nxt, first, cache
+
+    return mixed
 
 
 @dataclasses.dataclass

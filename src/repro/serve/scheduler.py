@@ -9,15 +9,31 @@ the same jitted prefill/decode steps:
 * **per-slot state** (live length, active flag, EOS hit) — the cache carries
   an int32 ``len`` *vector* (``per_slot_len=True``), so every slot advances
   and masks independently (nn/attention.py, kernels/qdecode_attn.py);
-* **admission**: a freed slot is refilled by a *slot-targeted prefill* — the
-  prompt runs through a fresh batch-1 cache, then ``write_kv_slot`` copies
-  that cache into the slot's KV slice while the other slots' device tensors
-  keep their static shapes (no batch-wide restart, no recompile);
+* **admission**, two policies:
+
+  - *one-shot* (``chunk_size=None``): a freed slot is refilled by a
+    slot-targeted prefill — the prompt runs through a fresh batch-1 cache,
+    then ``write_kv_slot`` copies that cache into the slot's KV slice.  The
+    prefill is a stop-the-world dispatch: every live decode slot stalls for
+    the full prompt length, and each distinct (bucketed) prompt length costs
+    a jit compile.
+  - *chunked* (``chunk_size=C``): each tick runs ONE fused jitted mixed step
+    (``engine.make_mixed_step``) = all live decode slots plus one C-token
+    chunk of the oldest queued prompt, written **in place** into the target
+    slot's KV slice (``append_kv_chunk`` / the fused ``qchunk_attn`` Pallas
+    kernel for int8 caches).  No batch-1 scratch cache, no copy, one compile
+    shape for every prompt length, and decode slots never stall more than
+    one chunk — the admission-tail-latency fix.  ``token_budget`` caps the
+    per-tick token count (live slots + C): when live decode alone exceeds
+    it, the chunk waits (decode tokens are never dropped);
+
 * **termination**: per-slot EOS/length checks; finished slots are evicted
   with an O(1) ``reset_kv_slot`` and emit pad tokens under a sampling mask
   until readmission;
 * a **stats tracker**: steady tok/s (compile excluded via ``warmup()``),
-  p50/p99 per-request latency in decode steps, mean slot occupancy.
+  p50/p99 per-request latency in decode steps (and in wall milliseconds
+  under ``run(time_ticks=True)``), mean slot occupancy, jit-compile and
+  admission-stall counters.
 
 Works for float *and* int8-quantized KV caches — the paper's memory win
 (cache bytes ÷2 vs bf16, ÷4 vs f32) exercised under realistic traffic.
@@ -34,8 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.nn.attention import reset_kv_slot, write_kv_slot
-from repro.serve.engine import (make_decode_step, make_prefill_step,
-                                sample_tokens)
+from repro.serve.engine import (make_decode_step, make_mixed_step,
+                                make_prefill_step, sample_tokens)
 
 
 # --------------------------------------------------------------------------
@@ -79,7 +95,15 @@ class ServeStats:
     tokens_out: int = 0
     occupancy_sum: float = 0.0
     latencies_steps: List[int] = dataclasses.field(default_factory=list)
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
     peak_cache_bytes: int = 0
+    num_jit_compiles: int = 0   # compiled entries across the run's jitted steps
+    prefill_chunks: int = 0     # chunked admission: mixed steps that carried a chunk
+    stalled_chunks: int = 0     # chunked admission: ticks the pending chunk sat
+    #                             out under token_budget (stall *duration*, not
+    #                             a count of distinct deferred chunks)
+    admission_stalls: int = 0   # one-shot admission: stop-the-world prefills
+    #                             dispatched while >= 1 other slot was live
 
     @property
     def steady_tok_s(self) -> float:
@@ -91,6 +115,7 @@ class ServeStats:
 
     def summary(self) -> Dict[str, Any]:
         lat = np.asarray(self.latencies_steps or [0])
+        lat_ms = np.asarray(self.latencies_s or [0.0]) * 1e3
         return {
             "steady_tok_s": round(self.steady_tok_s, 2),
             "compile_s": round(self.compile_s, 3),
@@ -100,7 +125,13 @@ class ServeStats:
             "occupancy": round(self.occupancy, 4),
             "p50_latency_steps": float(np.percentile(lat, 50)),
             "p99_latency_steps": float(np.percentile(lat, 99)),
+            "p50_latency_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_latency_ms": round(float(np.percentile(lat_ms, 99)), 3),
             "peak_cache_bytes": self.peak_cache_bytes,
+            "num_jit_compiles": self.num_jit_compiles,
+            "prefill_chunks": self.prefill_chunks,
+            "stalled_chunks": self.stalled_chunks,
+            "admission_stalls": self.admission_stalls,
         }
 
 
@@ -113,6 +144,17 @@ class _Slot:
     first: Any = None            # async mode: (1,1) device first token
     cols: List[int] = dataclasses.field(default_factory=list)
     # async mode: per emitted decode token, its column in the step matrix
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """Chunked-admission state: the one request currently being prefilled,
+    chunk by chunk, into its reserved (not yet live) slot."""
+
+    req: Request
+    slot: int
+    prompt: np.ndarray           # (P,) int32
+    next_start: int = 0          # first row of the next chunk
 
 
 # --------------------------------------------------------------------------
@@ -177,35 +219,40 @@ class Scheduler:
     prompt lengths share jit compilations; the true last-token logits are
     gathered at the unpadded position and the slot's live length is set to
     the true prompt length, so bucket padding never changes semantics.
+    ``chunk_size``: switch admission to chunked prefill (the mixed step);
+    the chunk grid subsumes prompt bucketing, so ``prompt_bucket`` is
+    ignored.  ``token_budget``: per-tick token cap for chunked admission
+    (must fit at least one chunk; live decode slots always run).
     """
 
     def __init__(self, engine, *, eos_id: Optional[int] = None,
-                 pad_id: int = 0, prompt_bucket: Optional[int] = None):
+                 pad_id: int = 0, prompt_bucket: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 token_budget: Optional[int] = None):
         self.engine = engine
         self.eos_id = eos_id
         self.pad_id = int(pad_id)
         self.prompt_bucket = prompt_bucket
+        self.chunk_size = chunk_size
+        self.token_budget = token_budget
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        if token_budget is not None:
+            if chunk_size is None:
+                raise ValueError("token_budget requires chunked admission "
+                                 "(chunk_size=...)")
+            if token_budget < chunk_size:
+                raise ValueError(
+                    f"token_budget {token_budget} < chunk_size {chunk_size}: "
+                    f"an idle batch could never admit a chunk")
 
         model = engine.model
         vocab = engine.vocab
         temperature = engine.temperature
-        prefill_full = make_prefill_step(
-            model, mesh=engine.mesh, axis_rules=engine.axis_rules,
-            full_logits=True)
         decode = make_decode_step(
             model, mesh=engine.mesh, axis_rules=engine.axis_rules,
             temperature=temperature)
         pad = jnp.int32(self.pad_id)
-
-        def slot_prefill(params, tokens, plen, rng):
-            """(1, P) prompt -> (first token (1,1), batch-1 prefilled cache)."""
-            cache = model.init_cache(
-                1, engine.max_len, quantized_kv=engine.quantized_kv,
-                kv_dtype=getattr(model, "dtype", jnp.float32))
-            logits, cache = prefill_full(params, tokens, cache)
-            last = jax.lax.dynamic_index_in_dim(logits, plen - 1, axis=1,
-                                                keepdims=False)
-            return sample_tokens(last, rng, vocab, temperature), cache
 
         def masked_decode(params, tok, cache, rng, active):
             nxt, cache = decode(params, tok, cache, rng)
@@ -215,11 +262,52 @@ class Scheduler:
             # traced slot index: one compile serves every slot
             return jax.lax.dynamic_update_slice(tok, first, (slot, 0))
 
-        self._slot_prefill = jax.jit(slot_prefill)
         self._masked_decode = jax.jit(masked_decode)
-        self._admit = jax.jit(admit_cache_slot)
         self._evict = jax.jit(evict_cache_slot)
         self._set_tok = jax.jit(set_tok)
+        self._jits = [self._masked_decode, self._evict, self._set_tok]
+
+        if chunk_size is None:
+            # one-shot admission: batch-1 prefill + write_kv_slot copy
+            prefill_full = make_prefill_step(
+                model, mesh=engine.mesh, axis_rules=engine.axis_rules)
+
+            def slot_prefill(params, tokens, plen, rng):
+                """(1, P) prompt -> (first token (1,1), batch-1 cache).
+                The LM head runs over the single true-last position only
+                (logit_pos), not the whole padded bucket."""
+                cache = model.init_cache(
+                    1, engine.max_len, quantized_kv=engine.quantized_kv,
+                    kv_dtype=getattr(model, "dtype", jnp.float32))
+                logits, cache = prefill_full(params, tokens, cache,
+                                             logit_pos=plen - 1)
+                return sample_tokens(logits[:, 0], rng, vocab,
+                                     temperature), cache
+
+            self._slot_prefill = jax.jit(slot_prefill)
+            self._admit = jax.jit(admit_cache_slot)
+            self._jits += [self._slot_prefill, self._admit]
+        else:
+            # chunked admission: one fused mixed step, one compile shape
+            mixed = make_mixed_step(
+                model, mesh=engine.mesh, axis_rules=engine.axis_rules,
+                temperature=temperature)
+
+            def masked_mixed(params, tok, cache, rng, active, chunk_tok,
+                             slot, start, length):
+                nxt, first, cache = mixed(params, tok, cache, rng, chunk_tok,
+                                          slot, start, length)
+                return jnp.where(active[:, None], nxt, pad), first, cache
+
+            self._masked_mixed = jax.jit(masked_mixed)
+            self._jits.append(self._masked_mixed)
+
+    def _count_jit_compiles(self) -> int:
+        """Compiled-entry count across this scheduler's jitted steps — the
+        bucket-explosion telltale: chunked admission stays O(1) no matter how
+        many distinct prompt lengths a run serves."""
+        return sum(f._cache_size() for f in self._jits
+                   if hasattr(f, "_cache_size"))
 
     # ---- prompt bucketing --------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -238,7 +326,12 @@ class Scheduler:
     # ---- warmup ------------------------------------------------------------
     def warmup(self, prompt_lens: Sequence[int], *, seed: int = 0) -> float:
         """Compile every step the run will need against throwaway state, so
-        the measured loop is pure steady state. Returns compile seconds."""
+        the measured loop is pure steady state. Returns compile seconds.
+
+        One-shot admission compiles one slot-prefill per distinct (bucketed)
+        prompt length; chunked admission compiles the mixed step once — its
+        chunk shape is static, so ``prompt_lens`` is irrelevant.
+        """
         eng = self.engine
         t0 = time.perf_counter()
         rng = jax.random.PRNGKey(seed)
@@ -246,12 +339,19 @@ class Scheduler:
         tok = jnp.full((eng.batch_slots, 1), self.pad_id, jnp.int32)
         active = jnp.ones((eng.batch_slots,), bool)
         slot0 = jnp.int32(0)
-        for p in sorted({self._bucket(int(p)) for p in prompt_lens}):
-            toks = jnp.full((1, p), self.pad_id, jnp.int32)
-            first, small = self._slot_prefill(eng.params, toks,
-                                              jnp.int32(p), rng)
-            cache = self._admit(cache, small, slot0, jnp.int32(p))
+        if self.chunk_size is not None:
+            ctok = jnp.full((1, self.chunk_size), self.pad_id, jnp.int32)
+            tok, first, cache = self._masked_mixed(
+                eng.params, tok, cache, rng, active, ctok, slot0,
+                jnp.int32(0), jnp.int32(self.chunk_size))
             tok = self._set_tok(tok, first, slot0)
+        else:
+            for p in sorted({self._bucket(int(p)) for p in prompt_lens}):
+                toks = jnp.full((1, p), self.pad_id, jnp.int32)
+                first, small = self._slot_prefill(eng.params, toks,
+                                                  jnp.int32(p), rng)
+                cache = self._admit(cache, small, slot0, jnp.int32(p))
+                tok = self._set_tok(tok, first, slot0)
         tok, cache = self._masked_decode(eng.params, tok, cache, rng, active)
         cache = self._evict(cache, slot0)
         jax.block_until_ready((tok, cache))
@@ -259,25 +359,41 @@ class Scheduler:
 
     # ---- the serving loop --------------------------------------------------
     def run(self, requests: Sequence[Request], *, seed: int = 0,
-            warmup: bool = True,
+            warmup: bool = True, time_ticks: bool = False,
             ) -> Tuple[Dict[int, RequestResult], ServeStats]:
         """Serve all requests to completion; returns ({rid: result}, stats).
 
-        Time is discrete: one tick per batched decode step.  Queued requests
-        become visible at their ``arrival`` tick and are admitted into the
-        lowest-numbered free slot in (arrival, rid) order.
+        Time is discrete: one tick per batched step.  Queued requests become
+        visible at their ``arrival`` tick and are admitted into the
+        lowest-numbered free slot in (arrival, rid) order — one-shot (a
+        stop-the-world batch-1 prefill between ticks) or, with
+        ``chunk_size`` set, chunked (each tick's fused mixed step carries one
+        prompt chunk alongside every live decode slot).
 
         Without an ``eos_id`` termination is length-only, so scheduling never
         needs token *values* mid-flight: the loop runs fully async (device
         tokens harvested once at the end), keeping the dispatch pipeline as
         full as lockstep ``generate()``.  With EOS enabled each step syncs
         one (B, 1) readback — the price of data-dependent eviction.
+
+        ``time_ticks=True`` blocks on each tick's tokens and records
+        per-request wall-clock latency (summary p50/p99_latency_ms): the
+        *step*-latency percentiles cannot see a stop-the-world prefill
+        (virtual time does not advance during it), wall time can.
         """
         eng = self.engine
         nslots = eng.batch_slots
+        C = self.chunk_size
         for r in requests:
             plen = int(np.asarray(r.prompt).reshape(-1).shape[0])
-            if self._bucket(plen) + r.max_new > eng.max_len:
+            if C is not None:
+                rows = -(-plen // C) * C   # last (padded) chunk's extent
+                if max(rows, plen + r.max_new) > eng.max_len:
+                    raise ValueError(
+                        f"request {r.rid}: prompt {plen} (chunk-padded to "
+                        f"{rows}) + max_new {r.max_new} exceeds cache "
+                        f"max_len {eng.max_len}")
+            elif self._bucket(plen) + r.max_new > eng.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt {plen} (+bucket) + max_new "
                     f"{r.max_new} exceeds cache max_len {eng.max_len}")
@@ -296,6 +412,7 @@ class Scheduler:
         results: Dict[int, RequestResult] = {}
         finished: List[Tuple[_Slot, int, int, bool]] = []  # slot, j, t, eos
         step_cols: List[jax.Array] = []    # async mode: one (B, 1) per step
+        arrival_wall: Dict[int, float] = {}
         cache = eng.new_cache(per_slot=True)
         stats.peak_cache_bytes = sum(
             l.size * l.dtype.itemsize
@@ -303,51 +420,108 @@ class Scheduler:
         tok = jnp.full((nslots, 1), self.pad_id, jnp.int32)
         rng = jax.random.PRNGKey(seed)
         active_host, active_dev = None, None
+        prefill: Optional[_Prefill] = None
         t = 0
 
         def finish(j: int, slot: _Slot, eos: bool):
             nonlocal cache
             finished.append((slot, j, t, eos))
             stats.latencies_steps.append(t - slot.req.arrival)
+            if time_ticks and slot.req.rid in arrival_wall:
+                stats.latencies_s.append(
+                    time.perf_counter() - arrival_wall[slot.req.rid])
             cache = self._evict(cache, jnp.int32(j))
             slots[j] = None
 
-        t0 = time.perf_counter()
-        while queue or any(s is not None for s in slots):
-            # -- admission: freed slots pull from the arrived queue ----------
-            free = [j for j in range(nslots) if slots[j] is None]
-            while free and queue and queue[0].arrival <= t:
-                j, r = free.pop(0), queue.popleft()
-                padded, plen = self._pad_prompt(r.prompt)
-                rng, sub = jax.random.split(rng)
-                first, small = self._slot_prefill(eng.params, padded,
-                                                  jnp.int32(plen), sub)
-                cache = self._admit(cache, small, jnp.int32(j),
-                                    jnp.int32(plen))
-                tok = self._set_tok(tok, first, jnp.int32(j))
-                slot = _Slot(req=r, admitted_at=t, emitted=1, first=first)
-                slots[j] = slot
-                stats.tokens_out += 1
-                if use_eos:
-                    first_id = int(np.asarray(first)[0, 0])
-                    slot.tokens.append(first_id)
-                    if first_id == self.eos_id or r.max_new == 1:
-                        finish(j, slot, first_id == self.eos_id)
-                elif r.max_new == 1:
-                    finish(j, slot, False)
+        def admit_live(j: int, r: Request, first):
+            """Slot j goes live holding its freshly sampled first token."""
+            slot = _Slot(req=r, admitted_at=t, emitted=1, first=first)
+            slots[j] = slot
+            stats.tokens_out += 1
+            if use_eos:
+                first_id = int(np.asarray(first)[0, 0])
+                slot.tokens.append(first_id)
+                if first_id == self.eos_id or r.max_new == 1:
+                    finish(j, slot, first_id == self.eos_id)
+            elif r.max_new == 1:
+                finish(j, slot, False)
 
-            if not any(s is not None for s in slots):
-                if queue:           # idle gap: jump to the next arrival
+        t0 = time.perf_counter()
+        while queue or prefill is not None \
+                or any(s is not None for s in slots):
+            if time_ticks:      # stamp the wall clock at each arrival tick
+                for r in queue:
+                    if r.arrival > t:
+                        break
+                    arrival_wall.setdefault(r.rid, time.perf_counter())
+
+            chunk_job: Optional[_Prefill] = None
+            if C is None:
+                # -- one-shot admission: freed slots pull from the queue ----
+                free = [j for j in range(nslots) if slots[j] is None]
+                while free and queue and queue[0].arrival <= t:
+                    j, r = free.pop(0), queue.popleft()
+                    if any(s is not None for s in slots):
+                        stats.admission_stalls += 1
+                    padded, plen = self._pad_prompt(r.prompt)
+                    rng, sub = jax.random.split(rng)
+                    first, small = self._slot_prefill(eng.params, padded,
+                                                      jnp.int32(plen), sub)
+                    cache = self._admit(cache, small, jnp.int32(j),
+                                        jnp.int32(plen))
+                    tok = self._set_tok(tok, first, jnp.int32(j))
+                    admit_live(j, r, first)
+            else:
+                # -- chunked admission: reserve a slot for the oldest
+                # arrived request; its chunks ride the mixed step ------------
+                if prefill is None and queue and queue[0].arrival <= t:
+                    free = [j for j in range(nslots) if slots[j] is None]
+                    if free:
+                        r = queue.popleft()
+                        prefill = _Prefill(
+                            req=r, slot=free[0],
+                            prompt=np.asarray(r.prompt, np.int32).reshape(-1))
+                if prefill is not None:
+                    n_live = sum(s is not None for s in slots)
+                    if self.token_budget is not None \
+                            and n_live + C > self.token_budget:
+                        stats.stalled_chunks += 1   # decode never waits
+                    else:
+                        chunk_job = prefill
+
+            if not any(s is not None for s in slots) and chunk_job is None:
+                if prefill is None and queue:  # idle gap: jump to next arrival
                     t = max(t + 1, queue[0].arrival)
                 continue
 
-            # -- one batched decode step; finished slots emit masked pads ----
+            # -- one batched step; finished slots emit masked pads -----------
             active = [s is not None for s in slots]
             if active != active_host:       # rebuild device mask only on change
                 active_host, active_dev = active, jnp.asarray(active)
             rng, sub = jax.random.split(rng)
-            tok, cache = self._masked_decode(eng.params, tok, cache, sub,
-                                             active_dev)
+            admitted = None                 # (slot, request, first) on last chunk
+            if chunk_job is not None:
+                start = chunk_job.next_start
+                plen = int(chunk_job.prompt.shape[0])
+                clen = min(C, plen - start)
+                ctok = np.full((1, C), self.pad_id, np.int32)
+                ctok[0, :clen] = chunk_job.prompt[start:start + clen]
+                tok, first, cache = self._masked_mixed(
+                    eng.params, tok, cache, sub, active_dev,
+                    jnp.asarray(ctok), jnp.int32(chunk_job.slot),
+                    jnp.int32(start), jnp.int32(clen))
+                stats.prefill_chunks += 1
+                chunk_job.next_start = start + clen
+                if chunk_job.next_start >= plen:
+                    tok = self._set_tok(tok, first,
+                                        jnp.int32(chunk_job.slot))
+                    admitted = (chunk_job.slot, chunk_job.req, first)
+                    prefill = None
+            else:
+                tok, cache = self._masked_decode(eng.params, tok, cache, sub,
+                                                 active_dev)
+            if time_ticks:
+                jax.block_until_ready(tok)
             t += 1
             stats.decode_steps += 1
             stats.occupancy_sum += sum(active) / nslots
@@ -369,7 +543,10 @@ class Scheduler:
                     slot.cols.append(len(step_cols) - 1)
                 if hit_eos or slot.emitted >= slot.req.max_new:
                     finish(j, slot, hit_eos)
+            if admitted is not None:
+                admit_live(*admitted)
         stats.steady_s = time.perf_counter() - t0
+        stats.num_jit_compiles = self._count_jit_compiles()
 
         # -- harvest: one device->host sync for the whole run (async mode) --
         if step_cols:

@@ -1,5 +1,6 @@
 """Flash attention (custom VJP) vs dense reference: fwd + grads, GQA,
-offsets, cache-length masking, decode path."""
+offsets, cache-length masking, decode path + int8 kernel dispatch,
+chunk-append cache API."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -110,3 +111,83 @@ def test_flash_bwd_memory_is_flat_in_seq():
             shape = getattr(var.aval, "shape", ())
             if len(shape) >= 2:
                 assert shape[-1] * shape[-2] < big * 0.9, (eqn.primitive, shape)
+
+
+# --------------------------------------------------------------------------
+# int8 decode dispatch + the chunk-append cache API
+# --------------------------------------------------------------------------
+
+def test_decode_attention_int8_routes_to_kernel(monkeypatch):
+    """int8 caches dispatch to kernels.ops.qdecode_attn (never the
+    dequantize-everything einsum) unless the run is sharded; float caches
+    keep the einsum path."""
+    from repro.kernels import ops as kops
+
+    calls = []
+    real = kops.qdecode_attn
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kops, "qdecode_attn", spy)
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16))
+    k8 = jax.random.randint(ks[1], (2, 32, 2, 16), -100, 100).astype(jnp.int8)
+    v8 = jax.random.randint(ks[2], (2, 32, 2, 16), -100, 100).astype(jnp.int8)
+    n = jnp.int32(4)
+
+    out = decode_attention(q, k8, v8, jnp.int32(20), k_n=n, v_n=n)
+    assert calls == [1]
+    # sharded decode keeps the einsum path (partitioner-friendly) and agrees
+    out_sharded = decode_attention(q, k8, v8, jnp.int32(20), k_n=n, v_n=n,
+                                   sharded=True)
+    assert calls == [1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_sharded),
+                               rtol=1e-5, atol=1e-5)
+    # float caches never touch the int8 kernel
+    decode_attention(q, jax.random.normal(ks[1], (2, 32, 2, 16)),
+                     jax.random.normal(ks[2], (2, 32, 2, 16)), jnp.int32(20))
+    assert calls == [1]
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["float", "int8"])
+def test_append_kv_chunk_writes_one_slot_absolute_len(quantized):
+    from repro.nn.attention import KVChunk, append_kv_chunk, init_kv_cache
+
+    cache = init_kv_cache(3, 12, 2, 4, quantized=quantized,
+                          dtype=jnp.float32, per_slot_len=True)
+    # slot 1 mid-prefill at row 4; a masked decode step junk-bumped its len
+    cache["len"] = jnp.asarray([2, 5, 0], jnp.int32)
+    k_new = jnp.ones((1, 4, 2, 4)) * 3.0
+    chunk = KVChunk(slot=jnp.int32(1), start=jnp.int32(4),
+                    length=jnp.int32(2))       # partial last chunk
+    out = append_kv_chunk(cache, k_new, k_new, chunk)
+    # absolute length: start + valid, junk bump overwritten
+    np.testing.assert_array_equal(np.asarray(out["len"]), [2, 6, 0])
+    kf = np.asarray(out["k"], np.float32)
+    assert (kf[1, 4:8] != 0).all()            # chunk rows written
+    assert (kf[1, :4] == 0).all()             # prefix untouched
+    assert (kf[0] == 0).all() and (kf[2] == 0).all()   # other slots untouched
+
+
+def test_chunk_attention_matches_flash_prefill():
+    """A full-prompt 'chunk' with empty prefix equals plain causal
+    attention — chunk_attention's masking (pos <= start + c) is exactly the
+    one-shot causal rule."""
+    from repro.nn.attention import (KVChunk, append_kv_chunk,
+                                    chunk_attention, init_kv_cache)
+
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    c, hq, hkv, d = 6, 4, 2, 16
+    q = jax.random.normal(ks[0], (1, c, hq, d))
+    k = jax.random.normal(ks[1], (1, c, hkv, d))
+    v = jax.random.normal(ks[2], (1, c, hkv, d))
+    cache = init_kv_cache(2, 8, hkv, d, quantized=False,
+                          dtype=jnp.float32, per_slot_len=True)
+    chunk = KVChunk(slot=jnp.int32(1), start=jnp.int32(0), length=jnp.int32(c))
+    got = chunk_attention(q, append_kv_chunk(cache, k, v, chunk),
+                          jnp.int32(1), jnp.int32(0))
+    want = ref_attn(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)

@@ -83,6 +83,60 @@ def test_qconv1d_matches_ref(b, w, c, f, ksize, stride, padding):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("c,g,hkv,d,s,bs,slot,start", [
+    (8, 2, 2, 32, 128, 64, 1, 32),     # chunk mid-cache
+    (16, 1, 4, 32, 256, 64, 0, 0),     # empty prefix (first chunk)
+    (5, 3, 2, 16, 96, 32, 2, 50),      # chunk straddles block boundaries
+    (1, 2, 2, 64, 128, 128, 1, 64),    # single-query chunk == decode shape
+    (6, 2, 2, 16, 70, 64, 1, 30),      # bs doesn't divide max_len (serve
+    #                                    geometry: prompt + odd horizon)
+])
+def test_qchunk_attn_matches_ref(c, g, hkv, d, s, bs, slot, start):
+    from repro.kernels.qchunk_attn import qchunk_attn_pallas
+
+    hq = g * hkv
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    q = jax.random.normal(ks[0], (c, hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (c, hkv, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (c, hkv, d), jnp.float32)
+    kcache = _rand_int(ks[3], (3, s, hkv, d), jnp.int8)
+    vcache = _rand_int(ks[4], (3, s, hkv, d), jnp.int8)
+    k_n, v_n = jnp.int32(5), jnp.int32(6)
+    ro, rk, rv = ref.qchunk_attn_ref(q, kc, vc, kcache, vcache, k_n, v_n,
+                                     slot, start)
+    go, gk, gv = qchunk_attn_pallas(q, kc, vc, kcache, vcache, k_n, v_n,
+                                    jnp.int32(slot), jnp.int32(start),
+                                    bs=bs, interpret=True)
+    # quantize-on-write is exact; only the target rows may change
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    untouched = np.delete(np.arange(3), slot)
+    np.testing.assert_array_equal(np.asarray(gk)[untouched],
+                                  np.asarray(kcache)[untouched])
+    np.testing.assert_allclose(np.asarray(go), np.asarray(ro),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_qchunk_attn_single_query_agrees_with_qdecode():
+    """A C=1 chunk over a prefix of length L is exactly a decode step at
+    kv_len = L+1 (after its own K/V row is appended)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    hkv, g, d, s, start = 2, 2, 32, 128, 40
+    q = jax.random.normal(ks[0], (1, g * hkv, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (1, hkv, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (1, hkv, d), jnp.float32)
+    kcache = _rand_int(ks[3], (2, s, hkv, d), jnp.int8)
+    vcache = _rand_int(ks[4], (2, s, hkv, d), jnp.int8)
+    k_n = v_n = jnp.int32(5)
+    out, k2, v2 = ref.qchunk_attn_ref(q, kc, vc, kcache, vcache, k_n, v_n,
+                                      1, start)
+    q_dec = jnp.broadcast_to(q, (2, g * hkv, d))   # (B, Hq, D) decode layout
+    dec = ref.qdecode_attn_ref(q_dec, k2, v2, k_n, v_n,
+                               jnp.asarray([0, start + 1], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(dec[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("b,hq,hkv,d,s,kv_len", [
     (2, 8, 2, 64, 256, 256),
     (1, 4, 4, 32, 128, 100),

@@ -94,6 +94,149 @@ def test_staggered_arrivals_and_prompt_bucketing(smoke_lm):
 
 
 # --------------------------------------------------------------------------
+# Chunked-prefill admission (the mixed step)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True],
+                         ids=["fp32", "int8kv"])
+@pytest.mark.parametrize("chunk", [4, 7])
+def test_chunked_prefill_token_identity(smoke_lm, quantized_kv, chunk):
+    """Chunked admission is token-identical to one-shot prefill admission —
+    per-slot prompt lengths, staggered arrivals, readmission into freed
+    slots, and chunk sizes that do NOT divide the prompt lengths."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, max_len=48, quantized_kv=quantized_kv)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=5 + 3 * i),
+                    max_new=6, arrival=i) for i in range(4)]
+    base, _ = eng.scheduler().run(reqs)
+    got, stats = eng.scheduler(chunk_size=chunk).run(reqs)
+    for i in range(4):
+        assert got[i].tokens == base[i].tokens, (quantized_kv, chunk, i)
+    # every prompt was really chunked: sum of per-request ceil(P/C) chunks
+    want_chunks = sum(-(-(5 + 3 * i) // chunk) for i in range(4))
+    assert stats.prefill_chunks == want_chunks
+    assert stats.admission_stalls == 0
+
+
+def test_chunked_matches_lockstep_generate(smoke_lm):
+    """Simultaneous equal-length arrivals through chunked admission still
+    reproduce lockstep generate() exactly (the PR 2 identity, now one more
+    admission policy deep)."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params)
+    prompts = (jnp.arange(2 * 8, dtype=jnp.int32).reshape(2, 8) * 7) % cfg.vocab
+    base = np.asarray(eng.generate(prompts, 10))
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new=10)
+            for i in range(2)]
+    results, _ = eng.scheduler(chunk_size=3).run(reqs)
+    for i in range(2):
+        assert results[i].tokens == list(base[i])
+
+
+def test_chunked_admission_compiles_o1_shapes(smoke_lm):
+    """The bucket-explosion regression PR 2 left open: one-shot admission
+    compiles one slot-prefill per distinct prompt length; chunked admission
+    compiles O(1) step shapes — the count over 7 distinct lengths equals the
+    count over 1 and stays a small constant."""
+    if not hasattr(jax.jit(lambda: 0), "_cache_size"):
+        pytest.skip("jax version does not expose jit cache sizes")
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(4)
+
+    def reqs_for(lens):
+        return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=p),
+                        max_new=3) for i, p in enumerate(lens)]
+
+    lens7 = [3, 5, 8, 11, 14, 17, 21]         # 7 distinct lengths
+
+    def chunked_compiles(lens):
+        _, st = _engine(model, params, max_len=64).scheduler(
+            chunk_size=8).run(reqs_for(lens))
+        return st.num_jit_compiles
+
+    n1, n7 = chunked_compiles([11]), chunked_compiles(lens7)
+    assert n7 == n1, (n1, n7)                 # O(1) in distinct lengths
+    assert n7 <= 8, n7                        # and a small constant
+
+    _, oneshot = _engine(model, params, max_len=64).scheduler().run(
+        reqs_for(lens7))
+    assert oneshot.num_jit_compiles >= len(lens7)   # one compile per length
+    assert n7 < oneshot.num_jit_compiles
+    assert oneshot.admission_stalls > 0       # the stop-the-world telltale
+
+
+def test_chunked_token_budget_defers_chunks(smoke_lm):
+    """token_budget below live-decode+chunk defers admission chunks (decode
+    tokens are never dropped) and the run still completes correctly."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, max_len=48, batch_slots=4)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=8) for i in range(6)]
+    base, _ = eng.scheduler().run(reqs)
+    # budget 4 == chunk_size: a chunk only rides when no slot decodes beside
+    # it, so every admission past the first defers at least once
+    got, stats = eng.scheduler(chunk_size=4, token_budget=4).run(reqs)
+    for i in range(6):
+        assert got[i].tokens == base[i].tokens
+    assert stats.stalled_chunks > 0
+
+    with pytest.raises(ValueError, match="token_budget"):
+        eng.scheduler(chunk_size=8, token_budget=4)
+    with pytest.raises(ValueError, match="chunk_size"):
+        eng.scheduler(token_budget=4)
+
+
+def test_chunked_int8_fused_kernel_path_identical(smoke_lm):
+    """End-to-end through the fused qchunk_attn Pallas kernel (interpret):
+    in-place quantize-on-write admission emits the same tokens as the
+    blocked-jnp chunk path."""
+    from repro.kernels import ops as kops
+
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, max_len=24, batch_slots=1,
+                  quantized_kv=True)
+    reqs = [Request(rid=0, prompt=np.arange(6, dtype=np.int32) + 2,
+                    max_new=3)]
+    base, _ = eng.scheduler(chunk_size=4).run(reqs)
+    assert kops.FORCE is None
+    kops.FORCE = "interpret"
+    try:
+        got, _ = eng.scheduler(chunk_size=4).run(reqs)
+    finally:
+        kops.FORCE = None
+    assert got[0].tokens == base[0].tokens
+
+
+def test_chunked_rejects_overlong_prompt(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, max_len=16)
+    sched = eng.scheduler(chunk_size=6)
+    # plen 13 pads to 18 chunk rows > max_len 16 even though 13 + 2 fits
+    with pytest.raises(ValueError, match="chunk-padded"):
+        sched.run([Request(rid=0, prompt=np.arange(13), max_new=2)])
+
+
+def test_chunked_eos_evicts_and_readmits(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, batch_slots=1)
+    prompt = np.arange(8, dtype=np.int32)
+    free_run, _ = eng.scheduler(chunk_size=3).run(
+        [Request(rid=0, prompt=prompt, max_new=8)])
+    eos = free_run[0].tokens[2]
+
+    reqs = [Request(rid=0, prompt=prompt, max_new=8),
+            Request(rid=1, prompt=prompt + 1, max_new=3)]
+    results, _ = eng.scheduler(eos_id=eos, chunk_size=3).run(reqs)
+    assert results[0].eos is True
+    assert results[0].tokens[-1] == eos
+    assert len(results[0].tokens) <= 3
+    assert results[1].admitted_at >= results[0].finished_at
+    assert len(results[1].tokens) == 3
+
+
+# --------------------------------------------------------------------------
 # EOS eviction mid-stream
 # --------------------------------------------------------------------------
 
