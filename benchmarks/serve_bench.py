@@ -22,17 +22,31 @@ latency in steps AND wall milliseconds (both scheduler policies run with
 time can; wall metrics are best-of-3 repeats — contention only adds time),
 jit-compile counts, chunk/stall counters, peak cache bytes and speedups.
 
-Two gates:
+A second sweep (``bench_paged``) compares the **paged KV cache** against the
+dense per-slot slabs on a mixed short/long-prompt workload:
+
+  * *identity*: a paged engine at dense parity (same slots, pool =
+    ``slots * ceil(max_len/page_size)`` pages) must emit token-identical
+    streams to the dense engine (fp32 and int8 KV) — asserted, not gated;
+  * *capacity*: a paged engine holding the **same KV pool tokens** but more
+    slots must reach >= ``--min-capacity-ratio`` (default 1.5) times the
+    dense run's peak concurrent requests (``peak_live_slots``) — short
+    requests reserve pages for their own extent instead of a full
+    ``max_len`` slab, which is the whole point of paging.
+
+Three gates:
 
   * always: the same-run relative gate — chunked must beat one-shot on p99
     wall latency and steady tok/s (``check_relative``; ratios are immune to
     runner weather);
+  * always: the paged capacity gate (``check_paged``) — deterministic for a
+    fixed seed, so effectively exact;
   * with ``--baseline``: steady tok/s and p99 latency in *steps* (the
     deterministic schedule metric) vs the checked-in
     ``benchmarks/baselines/serve_bench.json``, --tolerance (default 30%).
 
 To refresh the baseline after an intentional perf change, copy the new
-out-file over it (see README "Serving").
+out-file over it (see README "Serving" / docs/serving.md).
 """
 from __future__ import annotations
 
@@ -131,6 +145,79 @@ def bench_variant(model, params, kw, workload, *, max_len, slots, chunk,
     }
 
 
+def bench_paged(model, params, vocab, *, smoke=True, seed=0):
+    """Paged-vs-dense sweep: token identity at parity, capacity at equal
+    KV pool bytes, over a mixed short/long-prompt workload (3 short : 1
+    long — the spread where dense per-slot max_len reservation wastes the
+    most memory)."""
+    if smoke:
+        wl = dict(n_requests=16, short_p=64, long_p=384, max_new=32,
+                  spacing=2, slots=4, chunk=64, page=16, cap_slots=10)
+    else:
+        wl = dict(n_requests=32, short_p=128, long_p=768, max_new=48,
+                  spacing=2, slots=8, chunk=128, page=16, cap_slots=20)
+    max_len = wl["long_p"] + wl["max_new"]
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(
+                        0, vocab,
+                        size=wl["long_p"] if i % 4 == 3 else wl["short_p"],
+                        dtype=np.int32),
+                    max_new=wl["max_new"], arrival=i * wl["spacing"])
+            for i in range(wl["n_requests"])]
+    parity_pages = wl["slots"] * (-(-max_len // wl["page"]))
+    out = {"workload": {**wl, "max_len": max_len,
+                        "pool_pages": parity_pages,
+                        "pool_tokens": parity_pages * wl["page"]}}
+    for name in ("fp32", "qkv"):
+        kw = VARIANTS[name]
+        dense = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], **kw)
+        d_res, d_st = dense.scheduler(chunk_size=wl["chunk"]).run(reqs,
+                                                                  seed=seed)
+        # parity: same slots, pool tokens == the dense slab's rows
+        par = ServeEngine(model=model, params=params, max_len=max_len,
+                          batch_slots=wl["slots"], paged_kv=True,
+                          page_size=wl["page"], **kw)
+        p_res, p_st = par.scheduler(chunk_size=wl["chunk"]).run(reqs,
+                                                               seed=seed)
+        for r in reqs:                       # acceptance bar: identity
+            assert p_res[r.rid].tokens == d_res[r.rid].tokens, (
+                f"paged/dense token divergence: variant {name} rid {r.rid}")
+        # capacity: SAME pool tokens, 2.5x the slots — pages, not slots,
+        # bound admission now
+        cap = ServeEngine(model=model, params=params, max_len=max_len,
+                          batch_slots=wl["cap_slots"], paged_kv=True,
+                          page_size=wl["page"], kv_pool_pages=parity_pages,
+                          **kw)
+        c_res, c_st = cap.scheduler(chunk_size=wl["chunk"]).run(reqs,
+                                                                seed=seed)
+        assert sorted(c_res) == sorted(r.rid for r in reqs)
+        ratio = c_st.peak_live_slots / max(d_st.peak_live_slots, 1)
+        out[name] = {
+            "tokens_identical": True,
+            "dense_peak_live": d_st.peak_live_slots,
+            "paged_parity_peak_live": p_st.peak_live_slots,
+            "capacity_peak_live": c_st.peak_live_slots,
+            "capacity_ratio": round(ratio, 3),
+            "dense_tok_s": round(d_st.steady_tok_s, 2),
+            "paged_tok_s": round(p_st.steady_tok_s, 2),
+            "capacity_tok_s": round(c_st.steady_tok_s, 2),
+            "dense_cache_bytes": d_st.peak_cache_bytes,
+            "capacity_cache_bytes": c_st.peak_cache_bytes,
+            "capacity_page_stalls": c_st.page_stalls,
+            "capacity_page_occupancy": round(c_st.page_occupancy, 4),
+            "capacity_peak_pages": c_st.peak_pages_in_use,
+        }
+        print(f"paged/{name:5s} identity ok | peak live dense "
+              f"{d_st.peak_live_slots} vs paged {c_st.peak_live_slots} "
+              f"at equal pool tokens ({ratio:.2f}x) | page stalls "
+              f"{c_st.page_stalls} | fill {c_st.page_occupancy:.2f} | "
+              f"tok/s dense {d_st.steady_tok_s:.1f} paged "
+              f"{c_st.steady_tok_s:.1f}")
+    return out
+
+
 def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     cfg = get_config("smollm-135m-smoke")
     model = cfg.build(dtype=jnp.float32, remat="off")
@@ -165,6 +252,9 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
               f"p99 {s['p99_latency_ms']:7.1f} ms ({s['num_jit_compiles']}) "
               f"| p99 speedup {v['chunked_p99_speedup']:.2f}x | restart "
               f"{v['restart_tok_s']:7.1f} tok/s")
+
+    results["paged"] = bench_paged(model, params, cfg.vocab, smoke=smoke,
+                                   seed=seed)
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -209,6 +299,29 @@ def check_relative(results, *, min_p99_speedup: float = 1.0,
     if ok:
         print(f"ok relative gate: geomean p99 speedup {gm_p99:.2f}x, "
               f"tok/s ratio {gm_tok:.2f}x")
+    return ok
+
+
+def check_paged(results, *, min_capacity_ratio: float = 1.5) -> bool:
+    """The paged capacity gate: at equal KV pool tokens, paged serving must
+    hold >= ``min_capacity_ratio`` times the dense run's peak concurrent
+    requests.  Deterministic for a fixed seed (peak_live_slots counts a
+    virtual-time schedule), so there is no tolerance band — identity between
+    the paged and dense token streams was already asserted inside the run."""
+    ok = True
+    for name, v in results.get("paged", {}).items():
+        if name == "workload":
+            continue
+        r = v["capacity_ratio"]
+        if r < min_capacity_ratio:
+            print(f"REGRESSION paged/{name}: capacity ratio {r:.2f}x < "
+                  f"{min_capacity_ratio:.2f}x (dense peak "
+                  f"{v['dense_peak_live']}, paged {v['capacity_peak_live']})")
+            ok = False
+        else:
+            print(f"ok paged/{name}: capacity {r:.2f}x "
+                  f"({v['dense_peak_live']} -> {v['capacity_peak_live']} "
+                  f"peak live at equal pool tokens)")
     return ok
 
 
@@ -277,11 +390,16 @@ def main(argv=None):
     ap.add_argument("--min-tok-ratio", type=float, default=1.0,
                     help="relative-gate floor: geomean chunked-vs-one-shot "
                          "steady tok/s ratio across variants")
+    ap.add_argument("--min-capacity-ratio", type=float, default=1.5,
+                    help="paged gate floor: paged-vs-dense peak concurrent "
+                         "requests at equal KV pool tokens")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     results = run(smoke=args.smoke, seed=args.seed, out_path=args.out)
     ok = check_relative(results, min_p99_speedup=args.min_p99_speedup,
                         min_tok_ratio=args.min_tok_ratio)
+    ok = check_paged(results,
+                     min_capacity_ratio=args.min_capacity_ratio) and ok
     if args.baseline:
         ok = check_baseline(results, args.baseline, args.tolerance) and ok
     if not ok:

@@ -1,6 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's quantized hot spots + jnp oracles.
+
+Each kernel lives in its own module with a matching ``*_ref`` oracle in
+``ref.py``; ``ops.py`` is the public dispatch surface (Pallas on TPU, oracle
+elsewhere, ``FORCE``/``REPRO_KERNELS_FORCE=interpret`` to override).
+"""
 
 # The kernels target the modern Pallas surface (pltpu.CompilerParams); on
 # 0.4.x wheels that class is still spelled TPUCompilerParams — alias it once

@@ -5,11 +5,18 @@ interpret mode by the kernel tests); everywhere else the pure-jnp oracle from
 ``ref.py`` runs — it is the same math, so the framework is backend-portable
 exactly like the paper's "portable C library" claim for KerasCNN2C.
 
-Set ``repro.kernels.ops.FORCE`` to "pallas" / "ref" / "interpret" to override
-(used by tests and benchmarks).
+Debug override — two equivalent spellings:
+
+* in-process: set ``repro.kernels.ops.FORCE`` to ``"pallas"`` / ``"ref"`` /
+  ``"interpret"`` (what the kernel tests do);
+* from the shell: export ``REPRO_KERNELS_FORCE=interpret`` before launching —
+  the canonical way to debug a Pallas kernel end-to-end on a CPU box (the
+  interpreter runs the exact kernel logic, DMAs and scalar prefetch
+  included, just slowly).  See docs/serving.md "Debugging kernels".
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -23,9 +30,12 @@ from .qchunk_attn import qchunk_attn_pallas
 from .qconv1d import qconv1d_pallas
 from .qdecode_attn import qdecode_attn_pallas
 from .qmm import qmm_pallas, qmm_requant_pallas
+from .qpaged_attn import qpaged_chunk_attn_pallas, qpaged_decode_attn_pallas
 from .wq_matmul import wq_matmul_pallas
 
-FORCE: Optional[str] = None  # None | "pallas" | "ref" | "interpret"
+# None | "pallas" | "ref" | "interpret"; seeded from the environment so a
+# plain `REPRO_KERNELS_FORCE=interpret python -m ...` flips every dispatch.
+FORCE: Optional[str] = os.environ.get("REPRO_KERNELS_FORCE") or None
 
 
 def _mode() -> str:
@@ -54,6 +64,12 @@ def qmm(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def qmm_requant(x, w, shift, *, width: int = 8):
+    """Integer matmul + shift-only requantization to ``width``-bit storage.
+
+    x (..., K) int, w (K, N) int; ``shift`` >= 0 right-shifts the int32
+    accumulator (the paper's pow2 rescale), < 0 left-shifts.  Returns
+    (..., N) saturated to the Qm.n storage dtype.
+    """
     x2, lead = _2d(x)
     mode = _mode()
     if mode == "pallas":
@@ -94,6 +110,11 @@ def wq_matmul(x: jax.Array, w: QTensor, *, transpose: bool = False) -> jax.Array
 
 
 def fake_quant_fused(x, n, *, width: int = 8):
+    """Quantize-dequantize ``x`` on the pow2 grid 2^-n (QAT fake-quant).
+
+    One fused kernel instead of XLA's quantize + dequantize pair; shape and
+    dtype preserved.
+    """
     mode = _mode()
     if mode == "pallas":
         return fake_quant_pallas(x, n, width=width)
@@ -103,6 +124,11 @@ def fake_quant_fused(x, n, *, width: int = 8):
 
 
 def qconv1d(x, w, *, strides: int = 1, padding: str = "SAME"):
+    """Integer 1-D convolution with int32 accumulation.
+
+    x (B, W, C_in) int, w (K, C_in, C_out) int -> (B, W', C_out) int32 —
+    the paper's MCU conv path at TPU tile sizes.
+    """
     mode = _mode()
     if mode == "pallas":
         return qconv1d_pallas(x, w, stride=strides, padding=padding)
@@ -112,12 +138,58 @@ def qconv1d(x, w, *, strides: int = 1, padding: str = "SAME"):
 
 
 def qdecode_attn(q, k_cache, v_cache, k_n, v_n, kv_len):
+    """Decode attention over a dense int8 KV cache, dequant-in-VMEM.
+
+    q (B, Hq, D) f32; caches (B, S, Hkv, D) int8; k_n/v_n scalar int32 pow2
+    exponents; kv_len scalar or (B,) live lengths.  Returns (B, Hq, D).
+    """
     mode = _mode()
     if mode == "pallas":
         return qdecode_attn_pallas(q, k_cache, v_cache, k_n, v_n, kv_len)
     if mode == "interpret":
         return qdecode_attn_pallas(q, k_cache, v_cache, k_n, v_n, kv_len, interpret=True)
     return ref.qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len)
+
+
+def qpaged_decode_attn(q, k_pool, v_pool, k_n, v_n, page_table, kv_len):
+    """Paged decode attention: gather int8 K/V pages through a page table.
+
+    q (B, Hq, D) f32; pools (num_pages, page_size, Hkv, D) int8; page_table
+    (B, max_pages) int32 (-1 = unmapped); kv_len (B,) live lengths.  Returns
+    (B, Hq, D).  The Pallas path DMAs one pool page per grid step via a
+    scalar-prefetched table lookup; the ref path densifies per slot first.
+    """
+    mode = _mode()
+    if mode == "pallas":
+        return qpaged_decode_attn_pallas(q, k_pool, v_pool, k_n, v_n,
+                                         page_table, kv_len)
+    if mode == "interpret":
+        return qpaged_decode_attn_pallas(q, k_pool, v_pool, k_n, v_n,
+                                         page_table, kv_len, interpret=True)
+    return ref.qpaged_decode_attn_ref(q, k_pool, v_pool, k_n, v_n,
+                                      page_table, kv_len)
+
+
+def qpaged_chunk_attn(q, k_chunk, v_chunk, k_pool, v_pool, k_n, v_n,
+                      page_row, start):
+    """Paged chunked-prefill attention + fused int8 quantize-on-write.
+
+    Like :func:`qchunk_attn` but against a paged pool: ``page_row``
+    ((max_pages,) int32) is the target slot's page-table row, and logical
+    rows [start, start+C) of the slot receive the quantized chunk inside
+    their pool pages.  Returns (out (C, Hq, D), k_pool', v_pool'); the
+    Pallas path aliases the pool buffers so the write is in place.
+    """
+    mode = _mode()
+    if mode == "pallas":
+        return qpaged_chunk_attn_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
+                                        k_n, v_n, page_row, start)
+    if mode == "interpret":
+        return qpaged_chunk_attn_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
+                                        k_n, v_n, page_row, start,
+                                        interpret=True)
+    return ref.qpaged_chunk_attn_ref(q, k_chunk, v_chunk, k_pool, v_pool,
+                                     k_n, v_n, page_row, start)
 
 
 def qchunk_attn(q, k_chunk, v_chunk, k_cache, v_cache, k_n, v_n, slot, start):

@@ -18,6 +18,7 @@ def qmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def qmm_requant_ref(x, w, shift, *, width: int = 8):
+    """Integer matmul + shift-only requant, saturated to width-bit storage."""
     acc = qmm_ref(x, w)
     shift = jnp.asarray(shift, jnp.int32)
     shifted = jnp.where(
@@ -31,6 +32,7 @@ def qmm_requant_ref(x, w, shift, *, width: int = 8):
 
 
 def wq_matmul_ref(x, wq, scale, out_dtype=jnp.float32):
+    """Float x @ dequantized int8 weights (weight-only int8 GEMM oracle)."""
     w = wq.astype(jnp.float32) * jnp.broadcast_to(
         jnp.asarray(scale, jnp.float32), (wq.shape[1],)
     )
@@ -38,6 +40,7 @@ def wq_matmul_ref(x, wq, scale, out_dtype=jnp.float32):
 
 
 def fake_quant_ref(x, n, *, width: int = 8):
+    """Quantize-dequantize on the pow2 grid 2^-n (QAT fake-quant oracle)."""
     return qformat.quantize_dequantize(x, jnp.asarray(n, jnp.int32), width).astype(x.dtype)
 
 
@@ -83,6 +86,72 @@ def qchunk_attn_ref(q, k_chunk, v_chunk, k_cache, v_cache, k_n, v_n,
     p = jax.nn.softmax(jnp.where(visible, scores, -1e30), axis=-1)
     out = jnp.einsum("hgcs,shd->chgd", p, vf)
     return out.reshape(c, hq, d).astype(q.dtype), k_cache, v_cache
+
+
+def gather_pages_ref(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Densify a paged pool: (P, ps, H, D) + (B, max_pages) -> (B, S', H, D).
+
+    ``S' = max_pages * page_size``; unmapped (-1) table entries clamp to pool
+    page 0, whose junk rows every consumer masks via the live length.
+    """
+    n_pages, ps, h, d = pool.shape
+    pages = jnp.take(pool, jnp.maximum(page_table, 0), axis=0)
+    return pages.reshape(page_table.shape[0], page_table.shape[1] * ps, h, d)
+
+
+def qpaged_decode_attn_ref(q, k_pool, v_pool, k_n, v_n, page_table, kv_len):
+    """Paged decode-attention oracle: gather each slot's pages into a dense
+    (B, S', Hkv, D) view through the page table, then run the dense
+    dequantize-everything reference.  Same signature contract as
+    ``qpaged_attn.qpaged_decode_attn_pallas``.
+    """
+    k = gather_pages_ref(k_pool, page_table)
+    v = gather_pages_ref(v_pool, page_table)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                            (q.shape[0],))
+    return qdecode_attn_ref(q, k, v, k_n, v_n, lens)
+
+
+def qpaged_chunk_attn_ref(q, k_chunk, v_chunk, k_pool, v_pool, k_n, v_n,
+                          page_row, start):
+    """Paged chunked-prefill oracle: quantize the chunk onto the paper grid,
+    scatter its rows into the pool pages named by the slot's ``page_row``,
+    then attend each chunk query c over logical positions <= start + c.
+
+    Returns (out (C, Hq, D), k_pool', v_pool') like the Pallas kernel.
+    """
+    c, hq, d = q.shape
+    n_pages, ps, hkv, _ = k_pool.shape
+    g = hq // hkv
+    k_n = jnp.asarray(k_n, jnp.int32)
+    v_n = jnp.asarray(v_n, jnp.int32)
+    row = jnp.asarray(page_row, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    k8 = qformat.quantize(k_chunk, k_n, 8)
+    v8 = qformat.quantize(v_chunk, v_n, 8)
+    # flat scatter: logical row start+i -> pool row page*ps + (start+i) % ps;
+    # unmapped (-1) or out-of-table positions redirect to an out-of-bounds
+    # sentinel (dropped) — same contract as nn.attention.paged_flat_index.
+    pos = start + jnp.arange(c)
+    page = jnp.take(row, jnp.minimum(pos // ps, row.shape[0] - 1), axis=0)
+    valid = (pos // ps < row.shape[0]) & (page >= 0)
+    flat = jnp.where(valid, page * ps + pos % ps, n_pages * ps)
+    k_pool = k_pool.reshape(n_pages * ps, hkv, d).at[flat].set(
+        k8, mode="drop").reshape(k_pool.shape)
+    v_pool = v_pool.reshape(n_pages * ps, hkv, d).at[flat].set(
+        v8, mode="drop").reshape(v_pool.shape)
+    kf = gather_pages_ref(k_pool, row[None])[0]          # (S', Hkv, D)
+    vf = gather_pages_ref(v_pool, row[None])[0]
+    kf = kf.astype(jnp.float32) * jnp.exp2(-k_n.astype(jnp.float32))
+    vf = vf.astype(jnp.float32) * jnp.exp2(-v_n.astype(jnp.float32))
+    s = kf.shape[0]
+    qg = q.reshape(c, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("chgd,shd->hgcs", qg, kf) / (d ** 0.5)
+    vis = jnp.arange(s)[None, None, None, :] \
+        <= (start + jnp.arange(c))[None, None, :, None]
+    p = jax.nn.softmax(jnp.where(vis, scores, -1e30), axis=-1)
+    out = jnp.einsum("hgcs,shd->chgd", p, vf)
+    return out.reshape(c, hq, d).astype(q.dtype), k_pool, v_pool
 
 
 def qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len):

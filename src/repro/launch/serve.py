@@ -24,6 +24,12 @@ Policies:
   lockstep   the legacy single-batch generate() (no queue; --requests is
              clamped to --slots)
 
+--paged (chunked only) swaps the dense per-slot KV slabs for a shared page
+pool + per-slot page tables: admission block-allocates ceil(extent /
+--page-size) pages and defers on exhaustion instead of crashing;
+--pool-pages sizes the pool (default dense parity).  docs/serving.md walks
+the geometry and the knobs.
+
 Timing is reported as warmup/compile seconds and steady-state tok/s
 *separately* — jit compile no longer pollutes the throughput figure.
 """
@@ -68,6 +74,10 @@ def report(name: str, stats) -> None:
                   f"(stalled {s['stalled_chunks']})")
     if s.get("num_jit_compiles"):
         extra += f" | jit shapes {s['num_jit_compiles']}"
+    if s.get("peak_pages_in_use"):
+        extra += (f" | pages peak {s['peak_pages_in_use']} "
+                  f"(stalls {s['page_stalls']}, "
+                  f"fill {s['page_occupancy']:.2f})")
     print(f"[{name}] warmup(compile) {s['compile_s']:.2f}s | "
           f"steady {s['steady_tok_s']:.1f} tok/s over {s['steady_s']:.3f}s | "
           f"occupancy {s['occupancy']:.2f} | "
@@ -97,6 +107,16 @@ def main(argv=None):
     ap.add_argument("--token-budget", type=int, default=0,
                     help="per-tick token cap for chunked admission "
                          "(0 = unbounded; must fit one chunk)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: shared page pool + per-slot page "
+                         "tables with block-allocated admission (chunked "
+                         "policy only; see docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="KV pool pages shared by all slots (0 = dense "
+                         "parity: slots * ceil(max_len/page_size)); smaller "
+                         "pools trade headroom for more slots per byte")
     ap.add_argument("--time-ticks", action="store_true",
                     help="block per tick and report wall-clock p50/p99 "
                          "request latency (ms)")
@@ -115,10 +135,15 @@ def main(argv=None):
     cfg = get_config(args.arch)
     model = cfg.build(dtype=jnp.float32, remat="off")
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.paged and args.policy != "chunked":
+        raise SystemExit("--paged requires --policy chunked (block-allocated "
+                         "admission rides the mixed step)")
     engine = ServeEngine(model=model, params=params,
                          max_len=args.prompt_len + args.max_new,
                          batch_slots=args.slots, quantized_kv=args.qkv,
-                         weight_quant=args.wq, temperature=args.temperature)
+                         weight_quant=args.wq, temperature=args.temperature,
+                         paged_kv=args.paged, page_size=args.page_size,
+                         kv_pool_pages=args.pool_pages or None)
 
     if args.policy == "lockstep":
         import time

@@ -58,10 +58,13 @@ class CausalLM:
         return p
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool = False,
-                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False):
+                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
+                   page_size: Optional[int] = None,
+                   num_pages: Optional[int] = None):
         return self.stack.init_cache(batch, max_len, quantized_kv=quantized_kv,
                                      kv_dtype=kv_dtype,
-                                     per_slot_len=per_slot_len)
+                                     per_slot_len=per_slot_len,
+                                     page_size=page_size, num_pages=num_pages)
 
     # ---- forward -----------------------------------------------------------
     def apply(self, params: Params, tokens: Optional[jax.Array], ctx: Context, *,
@@ -181,10 +184,13 @@ class EncDecLM:
         }
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool = False,
-                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False):
+                   kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
+                   page_size: Optional[int] = None,
+                   num_pages: Optional[int] = None):
         return self.decoder.init_cache(batch, max_len, quantized_kv=quantized_kv,
                                        kv_dtype=kv_dtype,
-                                       per_slot_len=per_slot_len)
+                                       per_slot_len=per_slot_len,
+                                       page_size=page_size, num_pages=num_pages)
 
     def encode(self, params: Params, embeds: jax.Array, ctx: Context) -> jax.Array:
         ctx = ctx.scope(self.name)

@@ -9,6 +9,11 @@ Three entry modes:
     (dequant-in-VMEM, half the HBM bytes — DESIGN.md §2),
   * cross-attention (whisper decoder): kv from encoder output, no causal mask.
 
+Two serving cache geometries share one dict contract (see the KV-cache
+section below): dense per-slot slabs and the paged pool + page-table layout
+(``init_paged_kv_cache``); update/append/attention dispatch on
+``is_paged_cache``, and docs/serving.md diagrams the whole thing.
+
 TP: head dims shard over the `model` mesh axis via sharding constraints on
 the (B, S, H, D) activations (heads-per-device = H / tp).
 """
@@ -333,9 +338,166 @@ def decode_attention(
     return out.reshape(b, 1, hq, d)
 
 
+def paged_decode_attention(q: jax.Array, cache: Dict[str, Any],
+                           *, sharded: bool = False) -> jax.Array:
+    """Single-token decode over a paged cache (q (B, 1, Hq, D)).
+
+    int8 pools route to the ``qpaged_decode_attn`` kernel (Pallas on TPU,
+    the gather-dense oracle elsewhere — kernels/ops.py dispatch), which DMAs
+    one pool page per grid step through a scalar-prefetched page-table
+    lookup.  Float pools — and sharded meshes, where the Pallas kernel has
+    no SPMD rule — densify each slot's pages with a table gather and fall
+    through to the dense einsum path.
+    """
+    table, ln = cache["page_table"], cache["len"]
+    if cache["k"].dtype == jnp.int8 and not sharded:
+        from repro.kernels import ops as kops
+
+        out = kops.qpaged_decode_attn(q[:, 0].astype(jnp.float32),
+                                      cache["k"], cache["v"],
+                                      cache["k_n"], cache["v_n"], table, ln)
+        return out[:, None].astype(q.dtype)
+    b = q.shape[0]
+    mp, ps = table.shape[1], cache["k"].shape[1]
+    sh = (b, mp * ps) + cache["k"].shape[2:]
+    kd = jnp.take(cache["k"], jnp.maximum(table, 0), axis=0).reshape(sh)
+    vd = jnp.take(cache["v"], jnp.maximum(table, 0), axis=0).reshape(sh)
+    return decode_attention(q, kd, vd, ln, k_n=cache.get("k_n"),
+                            v_n=cache.get("v_n"), sharded=True)
+
+
 # --------------------------------------------------------------------------
-# KV cache (float or paper-quantized int8)
+# KV cache (float or paper-quantized int8; dense slab or paged pool)
 # --------------------------------------------------------------------------
+#
+# Two geometries share one dict-pytree contract (so the scheduler's cache-tree
+# walks, scan stacking and jit donation treat them alike):
+#
+#   dense:  k/v (slots, max_len, Hkv, D); len scalar or (slots,)
+#   paged:  k/v (num_pages, page_size, Hkv, D) shared pools,
+#           page_table (slots, max_pages) int32 pool indices (-1 = unmapped),
+#           len (slots,)
+#
+# A paged slot's logical row p lives in pool page table[slot, p // page_size]
+# at row p % page_size.  The serve-side block allocator (serve/paging.py)
+# owns which pool pages belong to which slot; everything here just reads or
+# writes *through* the table.  ``is_paged_cache`` is the dispatch predicate
+# used by update/append/attention below.
+
+
+def init_paged_kv_cache(
+    slots: int, max_pages: int, page_size: int, num_pages: int,
+    n_kv_heads: int, head_dim: int,
+    *, quantized: bool, dtype=jnp.bfloat16, cache_n: int = 3,
+) -> Dict[str, Any]:
+    """The PagedKVCache pytree: a shared K/V page pool plus per-slot tables.
+
+    Args:
+      slots: batch slots (page-table rows) — cheap, unlike dense slots.
+      max_pages: table width = the per-slot logical length ceiling in pages
+        (``ceil(max_len / page_size)``).
+      page_size: tokens per page.
+      num_pages: pool pages *shared by all slots* — the real capacity knob:
+        ``num_pages * page_size`` total resident tokens, vs the dense slab's
+        ``slots * max_len`` reserved ones.
+      n_kv_heads / head_dim: KV geometry per page row.
+      quantized: int8 pool on the paper's Qm.n grid (k_n/v_n exponents) vs
+        ``dtype`` float pool.
+      dtype: float pool dtype when not quantized.
+      cache_n: frozen fractional-bit exponent for the int8 grid.
+
+    Returns:
+      dict with ``k``/``v`` pools ``(num_pages, page_size, Hkv, D)``,
+      ``page_table`` ``(slots, max_pages)`` int32 initialized to -1
+      (unmapped), ``len`` ``(slots,)`` int32, and ``k_n``/``v_n`` when
+      quantized — always per-slot (continuous batching is the point).
+    """
+    shape = (num_pages, page_size, n_kv_heads, head_dim)
+    base = {
+        "page_table": jnp.full((slots, max_pages), -1, jnp.int32),
+        "len": jnp.zeros((slots,), jnp.int32),
+    }
+    if quantized:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_n": jnp.int32(cache_n), "v_n": jnp.int32(cache_n), **base}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype), **base}
+
+
+def is_paged_cache(cache: Dict[str, Any]) -> bool:
+    """True when ``cache`` is a paged pool dict (has a ``page_table``)."""
+    return "page_table" in cache
+
+
+def gather_kv_pages(cache: Dict[str, Any], slot: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Densify one slot's K/V: pool pages -> (max_pages*page_size, Hkv, D).
+
+    Unmapped (-1) table entries clamp to pool page 0; the junk rows they
+    produce sit past the slot's live length, which every consumer masks.
+    """
+    row = jax.lax.dynamic_index_in_dim(cache["page_table"],
+                                       jnp.asarray(slot, jnp.int32),
+                                       axis=0, keepdims=False)
+    mp = row.shape[0]
+    ps = cache["k"].shape[1]
+    k = jnp.take(cache["k"], jnp.maximum(row, 0), axis=0)
+    v = jnp.take(cache["v"], jnp.maximum(row, 0), axis=0)
+    sh = (mp * ps,) + cache["k"].shape[2:]
+    return k.reshape(sh), v.reshape(sh)
+
+
+def paged_flat_index(row: jax.Array, pos: jax.Array, page_size: int,
+                     num_pages: int) -> jax.Array:
+    """Flat pool row indices for logical positions ``pos`` of one slot.
+
+    ``row``: (max_pages,) int32 page-table row; ``pos``: (N,) int32 logical
+    rows.  Position p maps to ``row[p // page_size] * page_size +
+    p % page_size``; positions past the table or on unmapped (-1) entries
+    map to the out-of-bounds sentinel ``num_pages * page_size``, which
+    scatter-with-``mode="drop"`` discards — negative indices would *wrap*,
+    so the sentinel must be positive.  The single source of truth for the
+    layout (kernels/ref.py mirrors the same contract in its standalone
+    oracle).
+    """
+    mp = row.shape[0]
+    pslot = pos // page_size
+    page = jnp.take(row, jnp.minimum(pslot, mp - 1))
+    valid = (pslot < mp) & (page >= 0)
+    return jnp.where(valid, page * page_size + pos % page_size,
+                     num_pages * page_size)
+
+
+def _paged_scatter_rows(pool: jax.Array, rows: jax.Array,
+                        flat: jax.Array) -> jax.Array:
+    """Scatter (N, Hkv, D) rows into a (P, ps, Hkv, D) pool at flat row
+    indices from ``paged_flat_index``; out-of-range indices are dropped."""
+    n_pool, ps = pool.shape[0], pool.shape[1]
+    flat2 = pool.reshape((n_pool * ps,) + pool.shape[2:])
+    return flat2.at[flat].set(rows, mode="drop").reshape(pool.shape)
+
+
+def set_page_row(cache: Dict[str, Any], slot: jax.Array, row: jax.Array,
+                 *, layer_axis: bool = False) -> Dict[str, Any]:
+    """Install a slot's page-table row (the allocator's admission write).
+
+    ``row``: (max_pages,) int32 pool indices, -1 past the allocated extent.
+    ``layer_axis``: the table is (L, slots, max_pages) (scan-stacked layers)
+    — every layer gets the same logical assignment.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    table = cache["page_table"]
+    row = jnp.asarray(row, jnp.int32)
+    if layer_axis:
+        upd = jnp.broadcast_to(row[None, None], (table.shape[0], 1,
+                                                 row.shape[0]))
+        table = jax.lax.dynamic_update_slice(table, upd,
+                                             (jnp.int32(0), slot, jnp.int32(0)))
+    else:
+        table = jax.lax.dynamic_update_slice(table, row[None],
+                                             (slot, jnp.int32(0)))
+    return dict(cache, page_table=table)
+
 
 def init_kv_cache(
     batch: int, max_len: int, n_kv_heads: int, head_dim: int,
@@ -385,6 +547,11 @@ def update_kv_cache(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array):
     With a per-slot ``len`` vector each slot writes at its own live offset
     (writes past ``max_len`` clamp to the last row — harmless: only inactive
     slots ever run off the end, and their output is masked by the scheduler).
+    Paged caches take the single-token scatter path below: each slot's new
+    row lands in pool page ``table[slot, len//ps]``; slots whose write
+    position maps to an unmapped (-1) page — evicted slots whose ``len``
+    keeps ticking under the decode mask — are *dropped*, not clamped, so
+    they can never corrupt another slot's pages.
     """
     idx = cache["len"]
     if cache["k"].dtype == jnp.int8:
@@ -393,6 +560,18 @@ def update_kv_cache(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array):
     else:
         k_new = k_new.astype(cache["k"].dtype)
         v_new = v_new.astype(cache["v"].dtype)
+    if is_paged_cache(cache):
+        if k_new.shape[1] != 1:
+            raise NotImplementedError(
+                "multi-token insert into a paged cache: admission goes "
+                "through the chunked path (append_kv_chunk)")
+        n_pool, ps = cache["k"].shape[0], cache["k"].shape[1]
+        flat = jax.vmap(
+            lambda row, ln: paged_flat_index(row, ln[None], ps, n_pool)[0]
+        )(cache["page_table"], idx)                    # (B,) per-slot rows
+        k = _paged_scatter_rows(cache["k"], k_new[:, 0], flat)
+        v = _paged_scatter_rows(cache["v"], v_new[:, 0], flat)
+        return dict(cache, k=k, v=v, len=idx + 1)
     k = _insert_rows(cache["k"], k_new, idx)
     v = _insert_rows(cache["v"], v_new, idx)
     return dict(cache, k=k, v=v, len=idx + k_new.shape[1])
@@ -405,10 +584,23 @@ def reset_kv_slot(cache: Dict[str, Any], slot: jax.Array,
     The stale K/V rows stay in place — every consumer masks positions
     ``>= len``, and the next admission overwrites them — so eviction is O(1),
     not O(S·H·D).  ``layer_axis``: len is (L, B) (scan-stacked layers).
+
+    Paged caches additionally unmap the slot's page-table row (all entries
+    back to -1): the pool pages themselves go back to the host-side
+    allocator's free list (serve/paging.py) — the device never touches their
+    contents, and decode writes to an unmapped slot are dropped.
     """
     ln = cache["len"]
     ln = ln.at[:, slot].set(0) if layer_axis else ln.at[slot].set(0)
-    return dict(cache, len=ln)
+    out = dict(cache, len=ln)
+    if is_paged_cache(cache):
+        table = cache["page_table"]
+        if layer_axis:
+            table = table.at[:, slot, :].set(-1)
+        else:
+            table = table.at[slot, :].set(-1)
+        out["page_table"] = table
+    return out
 
 
 def write_kv_slot(big: Dict[str, Any], small: Dict[str, Any], slot: jax.Array,
@@ -478,12 +670,26 @@ def append_kv_chunk(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array,
     else:
         k_new = k_new.astype(cache["k"].dtype)
         v_new = v_new.astype(cache["v"].dtype)
-    zero = jnp.int32(0)
-    at = (jnp.asarray(chunk.slot, jnp.int32),
-          jnp.asarray(chunk.start, jnp.int32), zero, zero)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new, at)
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new, at)
-    ln = set_kv_slot_len(cache["len"], at[0], chunk.start + chunk.length)
+    slot = jnp.asarray(chunk.slot, jnp.int32)
+    start = jnp.asarray(chunk.start, jnp.int32)
+    if is_paged_cache(cache):
+        # scatter the chunk's rows through the slot's page-table row; rows
+        # landing on unmapped pages redirect to an out-of-bounds sentinel
+        # (never the case for admitted slots — the allocator covers the
+        # chunk-padded extent — but droppable junk beats silent corruption).
+        row = jax.lax.dynamic_index_in_dim(cache["page_table"], slot,
+                                           axis=0, keepdims=False)
+        n_pool, ps = cache["k"].shape[0], cache["k"].shape[1]
+        flat = paged_flat_index(row, start + jnp.arange(k_new.shape[1]),
+                                ps, n_pool)
+        k = _paged_scatter_rows(cache["k"], k_new[0], flat)
+        v = _paged_scatter_rows(cache["v"], v_new[0], flat)
+    else:
+        zero = jnp.int32(0)
+        at = (slot, start, zero, zero)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, at)
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, at)
+    ln = set_kv_slot_len(cache["len"], slot, chunk.start + chunk.length)
     return dict(cache, k=k, v=v, len=ln)
 
 
@@ -500,14 +706,23 @@ def chunk_attention(q: jax.Array, cache: Dict[str, Any], slot: jax.Array,
     the last visible row (start + C - 1) are visited, so a chunk's attention
     work matches one-shot causal prefill (sums to P²/2 over a prompt)
     instead of rescanning the whole max_len cache every chunk.
+
+    Paged caches densify the target slot first (``gather_kv_pages``) and run
+    the same loop over the gathered view — one slot's pages, not the pool.
     """
     b, c, hq, d = q.shape
-    s, hkv = cache["k"].shape[1], cache["k"].shape[2]
+    hkv = cache["k"].shape[2]
     g = hq // hkv
     slot = jnp.asarray(slot, jnp.int32)
     start = jnp.asarray(start, jnp.int32)
-    kc = jax.lax.dynamic_index_in_dim(cache["k"], slot, axis=0, keepdims=False)
-    vc = jax.lax.dynamic_index_in_dim(cache["v"], slot, axis=0, keepdims=False)
+    if is_paged_cache(cache):
+        kc, vc = gather_kv_pages(cache, slot)
+    else:
+        kc = jax.lax.dynamic_index_in_dim(cache["k"], slot, axis=0,
+                                          keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(cache["v"], slot, axis=0,
+                                          keepdims=False)
+    s = kc.shape[0]
     quantized = kc.dtype == jnp.int8
     if quantized:
         k_scale = jnp.exp2(-cache["k_n"].astype(jnp.float32))
@@ -651,12 +866,26 @@ class Attention:
                     # fused Pallas path: quantize-on-write + flash in one
                     # kernel; fp32 chunk K/V never reaches HBM.  The "ref"
                     # backend (plain CPU) instead takes the blocked jnp path
-                    # below — qchunk_attn_ref is the full-scan oracle, not a
-                    # serving path.
-                    out, k8, v8 = kops.qchunk_attn(
-                        q[0].astype(jnp.float32), k[0].astype(jnp.float32),
-                        v[0].astype(jnp.float32), cache["k"], cache["v"],
-                        cache["k_n"], cache["v_n"], chunk.slot, chunk.start)
+                    # below — the *_ref oracles are full-scan correctness
+                    # contracts, not serving paths.  Paged caches pass the
+                    # target slot's page-table row as kernel metadata.
+                    if is_paged_cache(cache):
+                        row = jax.lax.dynamic_index_in_dim(
+                            cache["page_table"],
+                            jnp.asarray(chunk.slot, jnp.int32),
+                            axis=0, keepdims=False)
+                        out, k8, v8 = kops.qpaged_chunk_attn(
+                            q[0].astype(jnp.float32),
+                            k[0].astype(jnp.float32),
+                            v[0].astype(jnp.float32), cache["k"], cache["v"],
+                            cache["k_n"], cache["v_n"], row, chunk.start)
+                    else:
+                        out, k8, v8 = kops.qchunk_attn(
+                            q[0].astype(jnp.float32),
+                            k[0].astype(jnp.float32),
+                            v[0].astype(jnp.float32), cache["k"], cache["v"],
+                            cache["k_n"], cache["v_n"], chunk.slot,
+                            chunk.start)
                     out = out[None].astype(q.dtype)
                     new_cache = dict(
                         cache, k=k8, v=v8,
@@ -668,11 +897,16 @@ class Attention:
                                           chunk.start)
             elif decode and s == 1:
                 new_cache = update_kv_cache(cache, k, v)
-                out = decode_attention(
-                    q, new_cache["k"], new_cache["v"], new_cache["len"],
-                    k_n=new_cache.get("k_n"), v_n=new_cache.get("v_n"),
-                    sharded=ctx.mesh is not None,
-                ).astype(q.dtype)
+                if is_paged_cache(cache):
+                    out = paged_decode_attention(
+                        q, new_cache, sharded=ctx.mesh is not None,
+                    ).astype(q.dtype)
+                else:
+                    out = decode_attention(
+                        q, new_cache["k"], new_cache["v"], new_cache["len"],
+                        k_n=new_cache.get("k_n"), v_n=new_cache.get("v_n"),
+                        sharded=ctx.mesh is not None,
+                    ).astype(q.dtype)
             else:
                 if jnp.ndim(cache["len"]) == 1:
                     raise NotImplementedError(

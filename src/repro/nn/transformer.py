@@ -133,10 +133,23 @@ class Block:
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool,
                    kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
+                   page_size: Optional[int] = None,
+                   num_pages: Optional[int] = None,
                    ) -> Dict[str, Any]:
         if self.mixer == "attn":
-            from repro.nn.attention import init_kv_cache
+            from repro.nn.attention import init_kv_cache, init_paged_kv_cache
 
+            if page_size is not None:
+                if not per_slot_len:
+                    raise ValueError(
+                        "paged KV caches are per-slot by construction: pass "
+                        "per_slot_len=True alongside page_size/num_pages")
+                max_pages = -(-max_len // page_size)
+                return {"kv": init_paged_kv_cache(
+                    batch, max_pages, page_size,
+                    num_pages if num_pages is not None else batch * max_pages,
+                    self.n_kv_heads, self.head_dim, quantized=quantized_kv,
+                    dtype=kv_dtype)}
             return {"kv": init_kv_cache(batch, max_len, self.n_kv_heads,
                                         self.head_dim, quantized=quantized_kv,
                                         dtype=kv_dtype,
@@ -243,9 +256,12 @@ class Stack:
 
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool,
                    kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
+                   page_size: Optional[int] = None,
+                   num_pages: Optional[int] = None,
                    ) -> Dict[str, Any]:
         kw = dict(quantized_kv=quantized_kv, kv_dtype=kv_dtype,
-                  per_slot_len=per_slot_len)
+                  per_slot_len=per_slot_len, page_size=page_size,
+                  num_pages=num_pages)
         c: Dict[str, Any] = {}
         if self.prelude:
             c["prelude"] = [blk.init_cache(batch, max_len, **kw)

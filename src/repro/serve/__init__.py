@@ -1,6 +1,14 @@
+"""Serving layer: jitted step engine, continuous-batching scheduler, paging.
+
+``ServeEngine`` owns the jitted prefill/decode/mixed steps and the cache
+geometry (dense slabs or a paged pool); ``Scheduler`` owns batch policy
+(admission, eviction, page allocation); ``PageAllocator`` is the host-side
+free list behind paged admission.  See docs/serving.md for the architecture.
+"""
 from repro.serve.engine import (ServeEngine, make_decode_step,  # noqa: F401
                                 make_mixed_step, make_prefill_step,
                                 mask_vocab_tail, sample_tokens)
+from repro.serve.paging import PageAllocator  # noqa: F401
 from repro.serve.scheduler import (Request, RequestResult,  # noqa: F401
                                    Scheduler, ServeStats,
                                    run_restart_batching)

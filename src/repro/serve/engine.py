@@ -157,8 +157,20 @@ class ServeEngine:
     temperature: float = 0.0
     mesh: Any = None
     axis_rules: Any = None
+    # -- paged KV cache (serving only; lockstep generate() stays dense) ------
+    # paged_kv=True makes new_cache(per_slot=True) a shared page pool + per-
+    # slot page tables instead of (slots, max_len) slabs; the Scheduler then
+    # block-allocates pages per request (serve/paging.py).  kv_pool_pages is
+    # the capacity knob: None = dense parity (slots * ceil(max_len/page_size)
+    # pages); smaller pools trade worst-case headroom for more slots at the
+    # same bytes — the continuous-batching capacity lever.
+    paged_kv: bool = False
+    page_size: int = 16
+    kv_pool_pages: Optional[int] = None
 
     def __post_init__(self):
+        if self.paged_kv and self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
         if self.weight_quant:
             self.params = integerize_weights_only(self.params)
         self._prefill = jax.jit(make_prefill_step(
@@ -169,14 +181,36 @@ class ServeEngine:
 
     @property
     def vocab(self) -> int:
+        """True vocab size for tail masking (0 = no padded tail known)."""
         return getattr(self.model, "vocab",
                        getattr(self.model, "vocab_padded", 0))
 
+    @property
+    def kv_max_pages(self) -> int:
+        """Page-table width: the per-slot logical length ceiling in pages."""
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def kv_num_pages(self) -> int:
+        """Pool pages actually allocated (kv_pool_pages or dense parity)."""
+        if self.kv_pool_pages is not None:
+            return self.kv_pool_pages
+        return self.batch_slots * self.kv_max_pages
+
     def new_cache(self, *, per_slot: bool = False, batch: Optional[int] = None):
+        """A fresh serving cache tree for this engine's geometry.
+
+        ``per_slot=True`` is the scheduler's cache (per-slot ``len`` vector;
+        paged when ``paged_kv``); the default is the lockstep ``generate()``
+        slab.  ``batch`` overrides ``batch_slots`` (slot-targeted prefills).
+        """
         dt = getattr(self.model, "dtype", jnp.float32)
+        kw = {}
+        if self.paged_kv and per_slot:
+            kw = dict(page_size=self.page_size, num_pages=self.kv_num_pages)
         return self.model.init_cache(batch or self.batch_slots, self.max_len,
                                      quantized_kv=self.quantized_kv,
-                                     kv_dtype=dt, per_slot_len=per_slot)
+                                     kv_dtype=dt, per_slot_len=per_slot, **kw)
 
     def cache_bytes(self) -> int:
         """Device bytes of one full serving cache (the paper's memory win:

@@ -1,0 +1,78 @@
+"""Host-side block allocator for the paged KV cache.
+
+The device side of paging is dumb on purpose: pools + page tables
+(nn/attention.py ``init_paged_kv_cache``) and kernels that read *through*
+the table (kernels/qpaged_attn.py).  All policy — which pool pages belong to
+which request, when admission must wait for memory — lives here, in plain
+Python, because it runs once per admission/eviction, not per token.
+
+The Scheduler (serve/scheduler.py) drives one :class:`PageAllocator` per
+``run()``:
+
+* on admission it asks for ``ceil(request_extent / page_size)`` pages; a
+  ``None`` answer defers the request in the queue (``page_stalls`` in the
+  stats) instead of crashing — the paged analog of the token-budget stall;
+* on eviction it returns the slot's pages, which the very next admission may
+  reuse (no compaction: pages are fixed-size, so external fragmentation is
+  zero by construction; internal fragmentation is bounded by one page per
+  request and reported via the stats' ``page_occupancy``).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class PageAllocator:
+    """Free-list allocator over a pool of ``num_pages`` fixed-size pages.
+
+    Pages are identified by their pool index (0..num_pages-1).  ``alloc``
+    is all-or-nothing: a request that cannot get its full extent gets
+    nothing (and the caller defers it), so a half-admitted request can never
+    strand pages.  A held-set guards against double-free in case a caller's
+    slot bookkeeping goes wrong — better a loud ValueError than silent page
+    aliasing between two live requests.
+    """
+
+    def __init__(self, num_pages: int):
+        """Create an allocator with all ``num_pages`` pages free."""
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = num_pages
+        # LIFO free list: freshly freed pages are reused first, which keeps
+        # the working set of pool pages small (cache-friendlier on device).
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._held: set = set()
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        """Pages currently available to alloc()."""
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pages currently held by live requests."""
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages off the free list; None if fewer than n remain.
+
+        All-or-nothing: on None the free list is untouched, so the caller
+        can simply retry at the next tick (admission deferral).
+        """
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        """Return pages to the free list (eviction); double-free raises."""
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"free of page {p} not currently held")
+            self._held.discard(p)
+            self._free.append(p)

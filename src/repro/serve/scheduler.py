@@ -27,13 +27,25 @@ the same jitted prefill/decode steps:
     per-tick token count (live slots + C): when live decode alone exceeds
     it, the chunk waits (decode tokens are never dropped);
 
+* **paged KV** (``ServeEngine(paged_kv=True)``): the per-slot cache becomes
+  a shared page pool + per-slot page tables (nn/attention.py), and the
+  scheduler runs a host-side block allocator (serve/paging.py): admission
+  allocates ``ceil(extent / page_size)`` pages and installs the slot's
+  page-table row; page exhaustion *defers* the admission in the queue
+  (composing with the ``token_budget`` stall, decode never waits); eviction
+  returns the pages.  Requires chunked admission — docs/serving.md has the
+  full geometry;
 * **termination**: per-slot EOS/length checks; finished slots are evicted
   with an O(1) ``reset_kv_slot`` and emit pad tokens under a sampling mask
   until readmission;
 * a **stats tracker**: steady tok/s (compile excluded via ``warmup()``),
   p50/p99 per-request latency in decode steps (and in wall milliseconds
-  under ``run(time_ticks=True)``), mean slot occupancy, jit-compile and
-  admission-stall counters.
+  under ``run(time_ticks=True)``), mean slot occupancy, jit-compile,
+  admission-stall and page-allocator counters.
+
+The jitted steps donate their cache (and, outside async-harvest mode, their
+token) arguments, so per-tick cache updates are true in-place buffer reuse
+at the XLA level rather than a whole-cache copy per tick.
 
 Works for float *and* int8-quantized KV caches — the paper's memory win
 (cache bytes ÷2 vs bf16, ÷4 vs f32) exercised under realistic traffic.
@@ -49,9 +61,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn.attention import reset_kv_slot, write_kv_slot
+from repro.nn.attention import reset_kv_slot, set_page_row, write_kv_slot
 from repro.serve.engine import (make_decode_step, make_mixed_step,
                                 make_prefill_step, sample_tokens)
+from repro.serve.paging import PageAllocator
 
 
 # --------------------------------------------------------------------------
@@ -71,6 +84,10 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
+    """Everything the scheduler knows about one finished request: the
+    generated ids and the (arrival, admitted, finished) tick timeline the
+    latency percentiles are computed from."""
+
     rid: int
     tokens: List[int]           # generated ids (includes EOS if hit)
     prompt_len: int
@@ -104,16 +121,39 @@ class ServeStats:
     #                             a count of distinct deferred chunks)
     admission_stalls: int = 0   # one-shot admission: stop-the-world prefills
     #                             dispatched while >= 1 other slot was live
+    page_stalls: int = 0        # paged KV: ticks the head-of-queue request
+    #                             sat deferred because the allocator could not
+    #                             serve its full page extent
+    peak_pages_in_use: int = 0  # paged KV: allocator high-water mark
+    peak_live_slots: int = 0    # max concurrent requests resident (live
+    #                             decode slots + a mid-prefill reservation) —
+    #                             the effective-capacity metric serve_bench
+    #                             compares paged vs dense on
+    page_util_sum: float = 0.0  # paged KV: per-tick live tokens / resident
+    page_util_ticks: int = 0    # pool tokens (internal-fragmentation gauge)
 
     @property
     def steady_tok_s(self) -> float:
+        """Post-warmup tokens per wall second."""
         return self.tokens_out / self.steady_s if self.steady_s > 0 else 0.0
 
     @property
     def occupancy(self) -> float:
+        """Mean fraction of batch slots live per decode step."""
         return self.occupancy_sum / max(self.decode_steps, 1)
 
+    @property
+    def page_occupancy(self) -> float:
+        """Paged KV: mean live-token fill of the pages held by requests.
+
+        1.0 = every resident pool token is a live K/V row; the gap is
+        internal fragmentation (last-page waste + decode headroom reserved
+        but not yet generated).  0.0 when the run was not paged.
+        """
+        return self.page_util_sum / max(self.page_util_ticks, 1)
+
     def summary(self) -> Dict[str, Any]:
+        """The dict serve_bench.py persists (rates, percentiles, counters)."""
         lat = np.asarray(self.latencies_steps or [0])
         lat_ms = np.asarray(self.latencies_s or [0.0]) * 1e3
         return {
@@ -132,6 +172,10 @@ class ServeStats:
             "prefill_chunks": self.prefill_chunks,
             "stalled_chunks": self.stalled_chunks,
             "admission_stalls": self.admission_stalls,
+            "page_stalls": self.page_stalls,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "peak_live_slots": self.peak_live_slots,
+            "page_occupancy": round(self.page_occupancy, 4),
         }
 
 
@@ -201,9 +245,21 @@ def admit_cache_slot(big_cache, small_cache, slot, length):
 
 
 def evict_cache_slot(cache, slot):
-    """O(1) per-slot eviction: live length to zero, rows left for overwrite."""
+    """O(1) per-slot eviction: live length to zero, rows left for overwrite.
+
+    Paged caches additionally unmap the slot's page-table row; the host-side
+    allocator reclaims the pages (Scheduler.run's ``finish``).
+    """
     return _map_slot_op(
         cache, lambda kv, la: reset_kv_slot(kv, slot, layer_axis=la))
+
+
+def set_cache_page_row(cache, slot, row):
+    """Install a page-table row for ``slot`` in every layer of a paged cache
+    tree (all layers share one logical page assignment — the allocator hands
+    out pool indices once per request, not per layer)."""
+    return _map_slot_op(
+        cache, lambda kv, la: set_page_row(kv, slot, row, layer_axis=la))
 
 
 # --------------------------------------------------------------------------
@@ -223,20 +279,38 @@ class Scheduler:
     the chunk grid subsumes prompt bucketing, so ``prompt_bucket`` is
     ignored.  ``token_budget``: per-tick token cap for chunked admission
     (must fit at least one chunk; live decode slots always run).
+
+    Paged engines (``engine.paged_kv``) require chunked admission: the
+    one-shot path prefills into a dense batch-1 scratch cache and block-copies
+    it, which has no paged analog (and no reason for one — the mixed step
+    writes through the page table directly).
+
+    All jitted steps donate their cache argument — and their token argument
+    outside async-harvest mode (no ``eos_id``), where per-step token columns
+    must stay alive until the end-of-run harvest — so on backends with
+    donation support each tick updates the KV buffers in place instead of
+    copying the whole cache through HBM.
     """
 
     def __init__(self, engine, *, eos_id: Optional[int] = None,
                  pad_id: int = 0, prompt_bucket: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None):
+        """Bind the scheduler's jitted steps to ``engine`` (see class doc)."""
         self.engine = engine
         self.eos_id = eos_id
         self.pad_id = int(pad_id)
         self.prompt_bucket = prompt_bucket
         self.chunk_size = chunk_size
         self.token_budget = token_budget
+        self.paged = bool(getattr(engine, "paged_kv", False))
         if chunk_size is not None and chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
+        if self.paged and chunk_size is None:
+            raise ValueError(
+                "paged KV (engine.paged_kv) requires chunked admission: "
+                "pass chunk_size=... (one-shot admission block-copies a "
+                "dense scratch cache, which has no paged analog)")
         if token_budget is not None:
             if chunk_size is None:
                 raise ValueError("token_budget requires chunked admission "
@@ -262,10 +336,31 @@ class Scheduler:
             # traced slot index: one compile serves every slot
             return jax.lax.dynamic_update_slice(tok, first, (slot, 0))
 
-        self._masked_decode = jax.jit(masked_decode)
-        self._evict = jax.jit(evict_cache_slot)
-        self._set_tok = jax.jit(set_tok)
+        # Donation: cache always; tok only in sync (EOS) mode — async mode
+        # retains every step's token column until the end-of-run harvest, so
+        # donating tok there would invalidate retained buffers.
+        sync = eos_id is not None
+
+        # The module-level tree ops get a per-instance closure before jit:
+        # jax keys its compile cache on the underlying callable, so jitting
+        # the shared function directly would make num_jit_compiles count
+        # every OTHER engine's cache shapes too (the bucket-explosion
+        # telltale must be per-scheduler to mean anything).
+        def evict(cache, slot):
+            return evict_cache_slot(cache, slot)
+
+        self._masked_decode = jax.jit(masked_decode,
+                                      donate_argnums=(1, 2) if sync else (2,))
+        self._evict = jax.jit(evict, donate_argnums=(0,))
+        self._set_tok = jax.jit(set_tok,
+                                donate_argnums=(0,) if sync else ())
         self._jits = [self._masked_decode, self._evict, self._set_tok]
+        if self.paged:
+            def set_pages(cache, slot, row):
+                return set_cache_page_row(cache, slot, row)
+
+            self._set_pages = jax.jit(set_pages, donate_argnums=(0,))
+            self._jits.append(self._set_pages)
 
         if chunk_size is None:
             # one-shot admission: batch-1 prefill + write_kv_slot copy
@@ -284,8 +379,11 @@ class Scheduler:
                 return sample_tokens(logits[:, 0], rng, vocab,
                                      temperature), cache
 
+            def admit(big, small, slot, length):
+                return admit_cache_slot(big, small, slot, length)
+
             self._slot_prefill = jax.jit(slot_prefill)
-            self._admit = jax.jit(admit_cache_slot)
+            self._admit = jax.jit(admit, donate_argnums=(0,))
             self._jits += [self._slot_prefill, self._admit]
         else:
             # chunked admission: one fused mixed step, one compile shape
@@ -299,7 +397,9 @@ class Scheduler:
                                           slot, start, length)
                 return jnp.where(active[:, None], nxt, pad), first, cache
 
-            self._masked_mixed = jax.jit(masked_mixed)
+            self._masked_mixed = jax.jit(masked_mixed,
+                                         donate_argnums=(1, 2) if sync
+                                         else (2,))
             self._jits.append(self._masked_mixed)
 
     def _count_jit_compiles(self) -> int:
@@ -308,6 +408,22 @@ class Scheduler:
         many distinct prompt lengths a run serves."""
         return sum(f._cache_size() for f in self._jits
                    if hasattr(f, "_cache_size"))
+
+    # ---- paged admission sizing -------------------------------------------
+    def _pages_needed(self, plen: int, max_new: int) -> int:
+        """Pages covering a request's full extent: the chunk-padded prompt
+        rows (the last chunk writes C rows even when partially valid) or
+        prompt+decode tokens, whichever is larger — allocated once at
+        admission so decode can never hit page exhaustion mid-request."""
+        c = self.chunk_size
+        extent = max(-(-plen // c) * c, plen + max_new)
+        return -(-extent // self.engine.page_size)
+
+    def _page_row(self, pages: List[int]) -> jax.Array:
+        """A (max_pages,) device row: allocated pool indices then -1s."""
+        row = np.full((self.engine.kv_max_pages,), -1, np.int32)
+        row[:len(pages)] = pages
+        return jnp.asarray(row)
 
     # ---- prompt bucketing --------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -340,6 +456,13 @@ class Scheduler:
         active = jnp.ones((eng.batch_slots,), bool)
         slot0 = jnp.int32(0)
         if self.chunk_size is not None:
+            if self.paged:
+                # throwaway page assignment for slot 0 (no allocator: warmup
+                # state is discarded, only the compiles matter)
+                n = min(self._pages_needed(self.chunk_size, 1),
+                        eng.kv_num_pages)
+                cache = self._set_pages(cache, slot0,
+                                        self._page_row(list(range(n))))
             ctok = jnp.full((1, self.chunk_size), self.pad_id, jnp.int32)
             tok, first, cache = self._masked_mixed(
                 eng.params, tok, cache, rng, active, ctok, slot0,
@@ -384,19 +507,34 @@ class Scheduler:
         eng = self.engine
         nslots = eng.batch_slots
         C = self.chunk_size
+        plen_of: Dict[int, int] = {}
         for r in requests:
             plen = int(np.asarray(r.prompt).reshape(-1).shape[0])
+            plen_of[r.rid] = plen
             if C is not None:
                 rows = -(-plen // C) * C   # last (padded) chunk's extent
-                if max(rows, plen + r.max_new) > eng.max_len:
+                # paged slots are bounded by their page-table capacity
+                # (max_len rounded up to whole pages), not max_len itself —
+                # chunk padding only has to fit allocatable pages
+                cap = eng.kv_max_pages * eng.page_size if self.paged \
+                    else eng.max_len
+                if max(rows, plen + r.max_new) > cap:
                     raise ValueError(
                         f"request {r.rid}: prompt {plen} (chunk-padded to "
                         f"{rows}) + max_new {r.max_new} exceeds cache "
-                        f"max_len {eng.max_len}")
+                        f"capacity {cap} (max_len {eng.max_len})")
             elif self._bucket(plen) + r.max_new > eng.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt {plen} (+bucket) + max_new "
                     f"{r.max_new} exceeds cache max_len {eng.max_len}")
+            if self.paged:
+                need = self._pages_needed(plen, r.max_new)
+                if need > eng.kv_num_pages:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} pages but the pool "
+                        f"holds {eng.kv_num_pages} — it could never be "
+                        f"admitted (raise kv_pool_pages or shrink the "
+                        f"request)")
             if r.max_new < 1:
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
 
@@ -421,6 +559,8 @@ class Scheduler:
         rng = jax.random.PRNGKey(seed)
         active_host, active_dev = None, None
         prefill: Optional[_Prefill] = None
+        alloc = PageAllocator(eng.kv_num_pages) if self.paged else None
+        slot_pages: Dict[int, List[int]] = {}
         t = 0
 
         def finish(j: int, slot: _Slot, eos: bool):
@@ -431,6 +571,8 @@ class Scheduler:
                 stats.latencies_s.append(
                     time.perf_counter() - arrival_wall[slot.req.rid])
             cache = self._evict(cache, jnp.int32(j))
+            if alloc is not None and j in slot_pages:
+                alloc.free(slot_pages.pop(j))
             slots[j] = None
 
         def admit_live(j: int, r: Request, first):
@@ -472,15 +614,34 @@ class Scheduler:
                     tok = self._set_tok(tok, first, jnp.int32(j))
                     admit_live(j, r, first)
             else:
-                # -- chunked admission: reserve a slot for the oldest
-                # arrived request; its chunks ride the mixed step ------------
+                # -- chunked admission: reserve a slot (and, when paged, the
+                # request's full page extent) for the oldest arrived
+                # request; its chunks ride the mixed step --------------------
                 if prefill is None and queue and queue[0].arrival <= t:
                     free = [j for j in range(nslots) if slots[j] is None]
                     if free:
-                        r = queue.popleft()
-                        prefill = _Prefill(
-                            req=r, slot=free[0],
-                            prompt=np.asarray(r.prompt, np.int32).reshape(-1))
+                        r = queue[0]
+                        pages = None
+                        if alloc is not None:
+                            pages = alloc.alloc(self._pages_needed(
+                                plen_of[r.rid], r.max_new))
+                            if pages is None:
+                                # page exhaustion defers the admission in
+                                # the queue; eviction frees pages, so the
+                                # retry eventually lands (decode never waits)
+                                stats.page_stalls += 1
+                        if alloc is None or pages is not None:
+                            queue.popleft()
+                            if pages is not None:
+                                slot_pages[free[0]] = pages
+                                cache = self._set_pages(
+                                    cache, jnp.int32(free[0]),
+                                    self._page_row(pages))
+                                stats.peak_pages_in_use = alloc.peak_in_use
+                            prefill = _Prefill(
+                                req=r, slot=free[0],
+                                prompt=np.asarray(r.prompt,
+                                                  np.int32).reshape(-1))
                 if prefill is not None:
                     n_live = sum(s is not None for s in slots)
                     if self.token_budget is not None \
@@ -496,6 +657,9 @@ class Scheduler:
 
             # -- one batched step; finished slots emit masked pads -----------
             active = [s is not None for s in slots]
+            stats.peak_live_slots = max(
+                stats.peak_live_slots,
+                sum(active) + (1 if prefill is not None else 0))
             if active != active_host:       # rebuild device mask only on change
                 active_host, active_dev = active, jnp.asarray(active)
             rng, sub = jax.random.split(rng)
@@ -525,6 +689,16 @@ class Scheduler:
             t += 1
             stats.decode_steps += 1
             stats.occupancy_sum += sum(active) / nslots
+            if alloc is not None and alloc.pages_in_use:
+                # internal-fragmentation gauge: live K/V rows per resident
+                # pool token (mid-prefill slots count their written rows)
+                used = sum(plen_of[s_.req.rid] + s_.emitted
+                           for s_ in slots if s_ is not None)
+                if prefill is not None:
+                    used += prefill.next_start
+                stats.page_util_sum += used / (alloc.pages_in_use
+                                               * eng.page_size)
+                stats.page_util_ticks += 1
             tok_host = np.asarray(tok) if use_eos else None
             if not use_eos:
                 step_cols.append(tok)

@@ -1,0 +1,373 @@
+"""Paged KV cache tests: the block allocator (exhaustion deferral, churn
+reuse), the paged nn primitives and Pallas kernels vs their oracles, paged
+vs dense scheduler token identity (fp32 and int8 KV, non-page-aligned
+prompts), and the donated jitted steps' in-place buffer reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config
+from repro.serve import PageAllocator, Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("batch_slots", 2)
+    return ServeEngine(model=model, params=params, **kw)
+
+
+# --------------------------------------------------------------------------
+# PageAllocator
+# --------------------------------------------------------------------------
+
+def test_allocator_alloc_free_exhaustion():
+    a = PageAllocator(4)
+    p1 = a.alloc(3)
+    assert p1 is not None and len(p1) == 3 and a.free_pages == 1
+    assert a.alloc(2) is None          # all-or-nothing: free list untouched
+    assert a.free_pages == 1
+    p2 = a.alloc(1)
+    assert p2 is not None and a.free_pages == 0 and a.pages_in_use == 4
+    a.free(p1)
+    assert a.free_pages == 3
+    with pytest.raises(ValueError, match="not currently held"):
+        a.free(p1)                     # double-free is loud, not silent
+    assert a.peak_in_use == 4
+
+
+def test_allocator_no_leak_over_200_request_churn():
+    a = PageAllocator(16)
+    rng = np.random.default_rng(0)
+    held = []
+    for _ in range(200):
+        n = int(rng.integers(1, 6))
+        got = a.alloc(n)
+        if got is None:                # exhausted: free the oldest and retry
+            a.free(held.pop(0))
+            got = a.alloc(n)
+            assert got is not None
+        assert len(set(got)) == n      # never hands out a page twice
+        for h in held:
+            assert not set(got) & set(h)
+        held.append(got)
+        if len(held) > 3:
+            a.free(held.pop(0))
+    for h in held:
+        a.free(h)
+    assert a.free_pages == 16 and a.pages_in_use == 0   # everything returned
+
+
+# --------------------------------------------------------------------------
+# Paged kernels vs oracles (interpret mode)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ps,n_pool,mp", [(4, 10, 5), (8, 8, 3)])
+def test_qpaged_decode_matches_ref(ps, n_pool, mp):
+    from repro.kernels import ref
+    from repro.kernels.qpaged_attn import qpaged_decode_attn_pallas
+
+    rng = jax.random.PRNGKey(0)
+    b, hq, hkv, d = 3, 4, 2, 8
+    q = jax.random.normal(rng, (b, hq, d), jnp.float32)
+    kp = jax.random.randint(jax.random.fold_in(rng, 1),
+                            (n_pool, ps, hkv, d), -100, 100, jnp.int8)
+    vp = jax.random.randint(jax.random.fold_in(rng, 2),
+                            (n_pool, ps, hkv, d), -100, 100, jnp.int8)
+    perm = np.random.default_rng(1).permutation(n_pool)
+    table = np.full((b, mp), -1, np.int32)
+    table[0, :3] = perm[:3]            # fragmented, out-of-order pages
+    table[1, :1] = perm[3:4]
+    table[2, :mp] = perm[4:4 + mp]
+    table = jnp.asarray(table)
+    lens = jnp.asarray([2 * ps + 3, 2, mp * ps], jnp.int32)
+    want = ref.qpaged_decode_attn_ref(q, kp, vp, 3, 3, table, lens)
+    got = qpaged_decode_attn_pallas(q, kp, vp, jnp.int32(3), jnp.int32(3),
+                                    table, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("c,start", [(4, 0), (4, 5), (6, 7), (3, 17)])
+def test_qpaged_chunk_matches_ref(c, start):
+    from repro.kernels import ref
+    from repro.kernels.qpaged_attn import qpaged_chunk_attn_pallas
+
+    rng = jax.random.PRNGKey(2)
+    hq, hkv, d, ps, n_pool, mp = 4, 2, 8, 4, 12, 6
+    q = jax.random.normal(rng, (c, hq, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(rng, 1), (c, hkv, d))
+    vc = jax.random.normal(jax.random.fold_in(rng, 2), (c, hkv, d))
+    kp = jax.random.randint(jax.random.fold_in(rng, 3),
+                            (n_pool, ps, hkv, d), -100, 100, jnp.int8)
+    vp = jax.random.randint(jax.random.fold_in(rng, 4),
+                            (n_pool, ps, hkv, d), -100, 100, jnp.int8)
+    row = jnp.asarray([7, 2, 9, 0, 5, 11], jnp.int32)   # scattered pool pages
+    ro, rk, rv = ref.qpaged_chunk_attn_ref(q, kc, vc, kp, vp, 3, 3, row, start)
+    go, gk, gv = qpaged_chunk_attn_pallas(q, kc, vc, kp, vp, jnp.int32(3),
+                                          jnp.int32(3), row,
+                                          jnp.int32(start), interpret=True)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    np.testing.assert_allclose(np.asarray(go), np.asarray(ro),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qpaged_chunk_out_of_table_rows_dropped():
+    """Chunk rows past the page-table extent are dropped, never clamped
+    into another logical position's page (ref oracle and Pallas agree)."""
+    from repro.kernels import ref
+    from repro.kernels.qpaged_attn import qpaged_chunk_attn_pallas
+
+    rng = jax.random.PRNGKey(6)
+    c, hq, hkv, d, ps, n_pool = 4, 4, 2, 8, 4, 8
+    q = jax.random.normal(rng, (c, hq, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(rng, 1), (c, hkv, d))
+    kp = jax.random.randint(jax.random.fold_in(rng, 2),
+                            (n_pool, ps, hkv, d), -100, 100, jnp.int8)
+    row = jnp.asarray([5, 6], jnp.int32)       # table covers 8 logical rows
+    start = 6                                  # rows 8..9 fall off the table
+    _, rk, _ = ref.qpaged_chunk_attn_ref(q, kc, kc, kp, kp, 3, 3, row, start)
+    _, gk, _ = qpaged_chunk_attn_pallas(q, kc, kc, kp, kp, jnp.int32(3),
+                                        jnp.int32(3), row, jnp.int32(start),
+                                        interpret=True)
+    # page 6 rows 0..1 (logical rows 8..9's clamp target) must be untouched
+    np.testing.assert_array_equal(np.asarray(rk[6, :2]),
+                                  np.asarray(kp[6, :2]))
+    np.testing.assert_array_equal(np.asarray(gk[6, :2]),
+                                  np.asarray(kp[6, :2]))
+
+
+def test_qpaged_chunk_untouched_pages_pass_through():
+    """Pool pages not owned by the slot survive the fused write bit-exactly
+    (the in-place aliasing contract other live slots depend on)."""
+    from repro.kernels import ref
+
+    rng = jax.random.PRNGKey(5)
+    c, hq, hkv, d, ps, n_pool = 4, 4, 2, 8, 4, 8
+    q = jax.random.normal(rng, (c, hq, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(rng, 1), (c, hkv, d))
+    kp = jax.random.randint(jax.random.fold_in(rng, 2),
+                            (n_pool, ps, hkv, d), -100, 100, jnp.int8)
+    row = jnp.asarray([3, 6, -1, -1], jnp.int32)
+    _, k2, _ = ref.qpaged_chunk_attn_ref(q, kc, kc, kp, kp, 3, 3, row, 2)
+    owned = {3, 6}
+    for p in range(n_pool):
+        if p not in owned:
+            np.testing.assert_array_equal(np.asarray(k2[p]),
+                                          np.asarray(kp[p]), err_msg=str(p))
+
+
+# --------------------------------------------------------------------------
+# Paged nn primitives
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["float", "int8"])
+def test_paged_update_matches_dense(quantized):
+    from repro.nn import attention as A
+
+    b, ml, h, d, ps = 2, 16, 2, 4, 4
+    dense = A.init_kv_cache(b, ml, h, d, quantized=quantized,
+                            dtype=jnp.float32, per_slot_len=True)
+    paged = A.init_paged_kv_cache(b, ml // ps, ps, b * ml // ps, h, d,
+                                  quantized=quantized, dtype=jnp.float32)
+    paged = A.set_page_row(paged, 0, jnp.asarray([4, 5, 6, 7], jnp.int32))
+    paged = A.set_page_row(paged, 1, jnp.asarray([0, 1, 2, 3], jnp.int32))
+    # slot 1 sits exactly at a page boundary (len 4, ps 4)
+    dense["len"] = jnp.asarray([2, 4], jnp.int32)
+    paged["len"] = jnp.asarray([2, 4], jnp.int32)
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, d))
+    d2 = A.update_kv_cache(dense, k, k)
+    p2 = A.update_kv_cache(paged, k, k)
+    np.testing.assert_array_equal(np.asarray(d2["len"]), np.asarray(p2["len"]))
+    for slot in range(b):
+        kd, _ = np.asarray(d2["k"][slot]), None
+        kp, _ = A.gather_kv_pages(p2, slot)
+        np.testing.assert_array_equal(kd[:5], np.asarray(kp)[:5])
+
+
+def test_paged_evicted_slot_writes_are_dropped():
+    """A slot whose pages were unmapped keeps ticking under the decode mask;
+    its writes must never land in another slot's pages."""
+    from repro.nn import attention as A
+
+    b, h, d, ps = 2, 2, 4, 4
+    paged = A.init_paged_kv_cache(b, 2, ps, 4, h, d, quantized=False,
+                                  dtype=jnp.float32)
+    paged = A.set_page_row(paged, 1, jnp.asarray([0, 1], jnp.int32))
+    paged["len"] = jnp.asarray([3, 1], jnp.int32)   # slot 0 evicted (row -1)
+    k = jnp.ones((b, 1, h, d))
+    p2 = A.update_kv_cache(paged, k, k)
+    pool = np.asarray(p2["k"])
+    assert pool[0, 1].max() == 1.0                  # slot 1 wrote its row
+    assert pool[0, 3].max() == 0.0                  # slot 0's write vanished
+    assert pool[1:, :].max() <= 1.0
+
+
+# --------------------------------------------------------------------------
+# Scheduler: paged vs dense token identity + allocator behavior under load
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True],
+                         ids=["fp32", "int8kv"])
+def test_paged_scheduler_token_identical_to_dense(smoke_lm, quantized_kv):
+    """Paged chunked admission emits exactly the dense chunked stream —
+    staggered arrivals, readmission, prompt lengths that divide neither the
+    chunk size nor the page size."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=5 + 3 * i),
+                    max_new=6, arrival=i) for i in range(4)]
+    dense = _engine(model, params, quantized_kv=quantized_kv)
+    base, _ = dense.scheduler(chunk_size=7).run(reqs)
+    paged = _engine(model, params, quantized_kv=quantized_kv,
+                    paged_kv=True, page_size=8)
+    got, stats = paged.scheduler(chunk_size=7).run(reqs)
+    for i in range(4):
+        assert got[i].tokens == base[i].tokens, (quantized_kv, i)
+    assert stats.page_stalls == 0          # dense-parity pool never defers
+    assert stats.peak_pages_in_use > 0
+    assert 0.0 < stats.page_occupancy <= 1.0
+
+
+def test_paged_int8_fused_kernel_path_identical(smoke_lm):
+    """End-to-end through the fused qpaged_chunk_attn + qpaged_decode_attn
+    Pallas kernels (interpret): same tokens as the gather-dense jnp path."""
+    from repro.kernels import ops as kops
+
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, max_len=24, batch_slots=1, quantized_kv=True,
+                  paged_kv=True, page_size=8)
+    reqs = [Request(rid=0, prompt=np.arange(6, dtype=np.int32) + 2,
+                    max_new=3)]
+    base, _ = eng.scheduler(chunk_size=4).run(reqs)
+    assert kops.FORCE is None
+    kops.FORCE = "interpret"
+    try:
+        got, _ = eng.scheduler(chunk_size=4).run(reqs)
+    finally:
+        kops.FORCE = None
+    assert got[0].tokens == base[0].tokens
+
+
+def test_page_exhaustion_defers_admission(smoke_lm):
+    """A pool smaller than the workload's concurrent demand defers
+    admissions (page_stalls > 0) instead of crashing, and every request
+    still completes correctly once pages free up."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=8) for i in range(5)]
+    dense = _engine(model, params, batch_slots=4)
+    base, _ = dense.scheduler(chunk_size=4).run(reqs)
+    # each request needs ceil(16/8) = 2 pages; pool of 3 fits ONE live
+    # request plus nothing — admissions must wait for evictions
+    eng = _engine(model, params, batch_slots=4, paged_kv=True, page_size=8,
+                  kv_pool_pages=3)
+    got, stats = eng.scheduler(chunk_size=4).run(reqs)
+    assert stats.page_stalls > 0
+    assert stats.peak_pages_in_use <= 3
+    assert sorted(got) == list(range(5))
+    for i in range(5):
+        assert len(got[i].tokens) == 8
+        # pages (not slots) were the bottleneck, so scheduling differs from
+        # dense — but each request's *content* is identical (same slot-0
+        # rng column semantics don't apply; tokens are deterministic given
+        # the prompt prefix for temperature=0)
+        assert got[i].tokens == base[i].tokens
+
+
+def test_paged_scheduler_churn_reuses_pages(smoke_lm):
+    """A long request churn through a pool that only holds ~2 live requests:
+    completion of all requests proves freed pages are recycled; the
+    allocator must end empty (no leak)."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=6),
+                    max_new=2, arrival=i) for i in range(24)]
+    eng = _engine(model, params, batch_slots=2, paged_kv=True, page_size=4,
+                  kv_pool_pages=4)                 # 16 tokens resident max
+    sched = eng.scheduler(chunk_size=6)
+    got, stats = sched.run(reqs)
+    assert sorted(got) == list(range(24))
+    assert all(len(got[i].tokens) == 2 for i in range(24))
+    assert stats.peak_pages_in_use <= 4
+
+
+def test_paged_requires_chunked_admission(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, paged_kv=True)
+    with pytest.raises(ValueError, match="chunked admission"):
+        eng.scheduler()
+
+
+def test_paged_rejects_request_larger_than_pool(smoke_lm):
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, paged_kv=True, page_size=8, kv_pool_pages=2)
+    sched = eng.scheduler(chunk_size=4)
+    with pytest.raises(ValueError, match="pool"):
+        sched.run([Request(rid=0, prompt=np.arange(20), max_new=8)])
+
+
+def test_paged_token_budget_composes_with_page_stalls(smoke_lm):
+    """token_budget deferral and page deferral are independent gates on the
+    same chunk stream; with both tight the run still completes."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=6) for i in range(4)]
+    eng = _engine(model, params, batch_slots=4, paged_kv=True, page_size=8,
+                  kv_pool_pages=4)
+    got, stats = eng.scheduler(chunk_size=4, token_budget=4).run(reqs)
+    assert sorted(got) == list(range(4))
+    assert all(len(got[i].tokens) == 6 for i in range(4))
+    assert stats.stalled_chunks > 0
+
+
+# --------------------------------------------------------------------------
+# Buffer donation: per-tick cache updates are in place at the XLA level
+# --------------------------------------------------------------------------
+
+def test_scheduler_steps_donate_cache_buffers(smoke_lm):
+    """The jitted decode step consumes (donates) its cache argument; where
+    the backend supports donation the output KV buffers are the *same*
+    device memory (pointer identity), not a copy."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params)
+    sched = eng.scheduler(chunk_size=4)
+    cache = eng.new_cache(per_slot=True)
+    tok = jnp.full((eng.batch_slots, 1), 0, jnp.int32)
+    active = jnp.ones((eng.batch_slots,), bool)
+    rng = jax.random.PRNGKey(0)
+    leaves_in = [l for l in jax.tree_util.tree_leaves(cache)
+                 if l.size > 1024]                 # the big K/V buffers
+    ptrs_in = {l.unsafe_buffer_pointer() for l in leaves_in}
+    tok2, cache2 = sched._masked_decode(eng.params, tok, cache, rng, active)
+    # donation invalidates the inputs regardless of backend buffer reuse
+    assert all(l.is_deleted() for l in leaves_in)
+    leaves_out = [l for l in jax.tree_util.tree_leaves(cache2)
+                  if l.size > 1024]
+    ptrs_out = {l.unsafe_buffer_pointer() for l in leaves_out}
+    reused = ptrs_in & ptrs_out
+    if jax.default_backend() in ("cpu", "tpu", "gpu"):
+        assert reused, "no cache buffer was reused in place"
+
+
+def test_async_harvest_mode_does_not_donate_tok(smoke_lm):
+    """Async mode (no eos_id) retains each step's token column until the
+    end-of-run harvest — the tok argument must NOT be donated there (and the
+    run must still produce correct full-length outputs)."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params)
+    reqs = [Request(rid=i, prompt=np.arange(6, dtype=np.int32) + i,
+                    max_new=5) for i in range(2)]
+    results, _ = eng.scheduler(chunk_size=3).run(reqs)   # async: no eos_id
+    assert all(len(results[i].tokens) == 5 for i in range(2))

@@ -1,0 +1,55 @@
+"""Markdown link checker for the CI docs lane.
+
+Scans the given markdown files (default: README.md and docs/**/*.md) for
+inline links/images and verifies that every *relative* target exists on
+disk (anchors are stripped; http(s)/mailto links are skipped — CI must not
+depend on external sites being up).  Exits 1 listing the dead links.
+
+    python tools/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links [text](target) and images ![alt](target); stops at the first
+# closing paren, which is fine for repo-relative paths
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def check_file(path: Path, root: Path) -> list:
+    """Return (file, target) pairs whose relative targets do not exist."""
+    dead = []
+    for m in _LINK.finditer(path.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:          # pure in-page anchor
+            continue
+        base = root if target.startswith("/") else path.parent
+        if not (base / target.lstrip("/")).exists():
+            dead.append((str(path), target))
+    return dead
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in argv] if argv else (
+        [root / "README.md"] + sorted((root / "docs").glob("**/*.md")))
+    dead = []
+    for f in files:
+        dead += check_file(f, root)
+    for src, target in dead:
+        print(f"DEAD LINK {src}: {target}")
+    if not dead:
+        print(f"ok: {len(files)} file(s), no dead relative links")
+    return 1 if dead else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
