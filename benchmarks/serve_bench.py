@@ -34,16 +34,28 @@ dense per-slot slabs on a mixed short/long-prompt workload:
     requests reserve pages for their own extent instead of a full
     ``max_len`` slab, which is the whole point of paging.
 
-Three gates:
+A third sweep (``bench_shared``) measures **prefix sharing over the paged
+pool**: N requests spread over K distinct system prompts, with divergent
+per-request suffixes and continuations.  Token identity of the shared run
+vs the unshared paged run vs dense is asserted (fp32 and int8 KV), then at
+an equal (tight) pool the shared run must admit ``--min-shared-ratio``
+times the unshared run's peak concurrent requests, or hold >= 30% fewer
+peak pages at the roomy parity pool (``check_shared``).
 
-  * always: the same-run relative gate — chunked must beat one-shot on p99
+CI-enforced gates (all deterministic or same-run relative):
+
+  * the same-run relative gate — chunked must beat one-shot on p99
     wall latency and steady tok/s (``check_relative``; ratios are immune to
     runner weather);
-  * always: the paged capacity gate (``check_paged``) — deterministic for a
+  * the paged capacity gate (``check_paged``) — deterministic for a
     fixed seed, so effectively exact;
-  * with ``--baseline``: steady tok/s and p99 latency in *steps* (the
-    deterministic schedule metric) vs the checked-in
-    ``benchmarks/baselines/serve_bench.json``, --tolerance (default 30%).
+  * the shared-prefix capacity gate (``check_shared``) — deterministic too.
+
+With ``--baseline``, steady tok/s and p99 latency are also compared against
+the checked-in ``benchmarks/baselines/serve_bench.json`` at --tolerance —
+**warn-only by default** (absolute wall-clock numbers vary across machine
+classes far beyond any sane tolerance; the relative/capacity gates above
+are the enforced signals).  ``--strict-baseline`` restores the hard gate.
 
 To refresh the baseline after an intentional perf change, copy the new
 out-file over it (see README "Serving" / docs/serving.md).
@@ -218,6 +230,99 @@ def bench_paged(model, params, vocab, *, smoke=True, seed=0):
     return out
 
 
+def bench_shared(model, params, vocab, *, smoke=True, seed=0):
+    """Prefix-sharing sweep: N requests over K distinct system prompts.
+
+    Three runs per variant at a roomy parity pool — dense, paged unshared,
+    paged shared — must be token-identical (the suffixes diverge after the
+    shared prefix, so this also pins COW and divergence-page handling).
+    Then the tight-pool pair (equal pool bytes, sharing on vs off) yields
+    the capacity ratio ``check_shared`` gates: shared admissions map the
+    resident prefix instead of allocating it, so the same pool holds more
+    concurrent requests.
+    """
+    if smoke:
+        wl = dict(n_requests=12, n_prompts=2, sys_len=96, suffix=16,
+                  max_new=16, spacing=1, slots=10, chunk=32, page=16,
+                  tight_pages=28)
+    else:
+        wl = dict(n_requests=24, n_prompts=3, sys_len=192, suffix=32,
+                  max_new=24, spacing=1, slots=16, chunk=64, page=16,
+                  tight_pages=84)
+    plen = wl["sys_len"] + wl["suffix"]
+    max_len = plen + wl["max_new"]
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, vocab, size=wl["sys_len"], dtype=np.int32)
+                   for _ in range(wl["n_prompts"])]
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompts[i % wl["n_prompts"]],
+                         rng.integers(0, vocab, size=wl["suffix"],
+                                      dtype=np.int32)]),
+                    max_new=wl["max_new"], arrival=i * wl["spacing"])
+            for i in range(wl["n_requests"])]
+    parity_pages = wl["slots"] * (-(-max_len // wl["page"]))
+    out = {"workload": {**wl, "prompt_len": plen, "max_len": max_len,
+                        "parity_pages": parity_pages}}
+    for name in ("fp32", "qkv"):
+        kw = VARIANTS[name]
+        dense = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], **kw)
+        d_res, _ = dense.scheduler(chunk_size=wl["chunk"]).run(reqs, seed=seed)
+        par = ServeEngine(model=model, params=params, max_len=max_len,
+                          batch_slots=wl["slots"], paged_kv=True,
+                          page_size=wl["page"], **kw)
+        u_res, u_st = par.scheduler(chunk_size=wl["chunk"],
+                                    prefix_sharing=False).run(reqs, seed=seed)
+        s_res, s_st = par.scheduler(chunk_size=wl["chunk"]).run(reqs,
+                                                                seed=seed)
+        for r in reqs:  # acceptance bar: identity incl. divergent suffixes
+            assert s_res[r.rid].tokens == d_res[r.rid].tokens, (
+                f"shared/dense token divergence: variant {name} rid {r.rid}")
+            assert u_res[r.rid].tokens == d_res[r.rid].tokens, (
+                f"unshared/dense token divergence: variant {name} "
+                f"rid {r.rid}")
+        assert s_st.prefix_hits > 0, "workload produced no prefix hits"
+        # capacity: the SAME tight pool, sharing on vs off
+        tight = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], paged_kv=True,
+                            page_size=wl["page"],
+                            kv_pool_pages=wl["tight_pages"], **kw)
+        cs_res, cs_st = tight.scheduler(chunk_size=wl["chunk"]).run(reqs,
+                                                                    seed=seed)
+        cu_res, cu_st = tight.scheduler(
+            chunk_size=wl["chunk"], prefix_sharing=False).run(reqs, seed=seed)
+        for r in reqs:   # tight pools reorder the schedule, not the tokens
+            assert cs_res[r.rid].tokens == d_res[r.rid].tokens, (name, r.rid)
+            assert cu_res[r.rid].tokens == d_res[r.rid].tokens, (name, r.rid)
+        ratio = cs_st.peak_live_slots / max(cu_st.peak_live_slots, 1)
+        page_cut = 1.0 - s_st.peak_pages_in_use / max(u_st.peak_pages_in_use,
+                                                      1)
+        out[name] = {
+            "tokens_identical": True,
+            "prefix_hits": s_st.prefix_hits,
+            "shared_pages_mapped": s_st.shared_pages_mapped,
+            "cow_copies": s_st.cow_copies,
+            "parity_peak_pages_unshared": u_st.peak_pages_in_use,
+            "parity_peak_pages_shared": s_st.peak_pages_in_use,
+            "parity_page_reduction": round(page_cut, 3),
+            "tight_peak_live_shared": cs_st.peak_live_slots,
+            "tight_peak_live_unshared": cu_st.peak_live_slots,
+            "shared_capacity_ratio": round(ratio, 3),
+            "tight_page_stalls_shared": cs_st.page_stalls,
+            "tight_page_stalls_unshared": cu_st.page_stalls,
+            "shared_tok_s": round(cs_st.steady_tok_s, 2),
+            "unshared_tok_s": round(cu_st.steady_tok_s, 2),
+        }
+        print(f"shared/{name:5s} identity ok | tight-pool peak live "
+              f"{cu_st.peak_live_slots} -> {cs_st.peak_live_slots} "
+              f"({ratio:.2f}x) | parity peak pages "
+              f"{u_st.peak_pages_in_use} -> {s_st.peak_pages_in_use} "
+              f"(-{page_cut:.0%}) | hits {s_st.prefix_hits} "
+              f"cow {s_st.cow_copies}")
+    return out
+
+
 def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     cfg = get_config("smollm-135m-smoke")
     model = cfg.build(dtype=jnp.float32, remat="off")
@@ -255,6 +360,8 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
 
     results["paged"] = bench_paged(model, params, cfg.vocab, smoke=smoke,
                                    seed=seed)
+    results["shared_prefix"] = bench_shared(model, params, cfg.vocab,
+                                            smoke=smoke, seed=seed)
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -325,17 +432,44 @@ def check_paged(results, *, min_capacity_ratio: float = 1.5) -> bool:
     return ok
 
 
-def check_baseline(results, baseline_path: str, tolerance: float) -> bool:
-    """Per variant x policy: fail on a steady-tok/s drop OR a >tolerance
-    p99-latency regression vs the checked-in baseline.
+def check_shared(results, *, min_shared_ratio: float = 1.5,
+                 min_page_reduction: float = 0.30) -> bool:
+    """The prefix-sharing gate: at equal (tight) pool bytes, sharing must
+    admit >= ``min_shared_ratio`` times the unshared run's peak concurrent
+    requests — or, at the roomy parity pool where both admit everything,
+    hold >= ``min_page_reduction`` fewer peak pages.  Deterministic for a
+    fixed seed; token identity was already asserted inside the run."""
+    ok = True
+    for name, v in results.get("shared_prefix", {}).items():
+        if name == "workload":
+            continue
+        r, cut = v["shared_capacity_ratio"], v["parity_page_reduction"]
+        if r >= min_shared_ratio or cut >= min_page_reduction:
+            print(f"ok shared/{name}: capacity {r:.2f}x "
+                  f"({v['tight_peak_live_unshared']} -> "
+                  f"{v['tight_peak_live_shared']} peak live), parity pages "
+                  f"-{cut:.0%}")
+        else:
+            print(f"REGRESSION shared/{name}: capacity ratio {r:.2f}x < "
+                  f"{min_shared_ratio:.2f}x AND parity page reduction "
+                  f"{cut:.0%} < {min_page_reduction:.0%}")
+            ok = False
+    return ok
 
-    The p99 gate uses ``p99_latency_steps`` — with a fixed seed the tick
-    schedule is deterministic, so any movement is a real scheduling
-    regression, immune to runner weather.  Wall-clock p99 is recorded in
-    the JSON and gated *within* a run by ``check_relative`` (absolute wall
-    numbers across machines/runs swing far beyond any sane tolerance)."""
+
+def check_baseline(results, baseline_path: str, tolerance: float,
+                   *, strict: bool = False) -> bool:
+    """Per variant x policy: compare steady tok/s and p99 latency (in
+    deterministic *steps*) against the checked-in baseline.
+
+    Warn-only unless ``strict``: the absolute floors fire spuriously across
+    machine classes (a laptop baseline vs a shared CI runner easily moves
+    2x), so a miss prints a WARN and the function still passes.  The
+    enforced regression signals are the same-run relative gate and the
+    paged/shared capacity gates — see module docstring."""
     with open(baseline_path) as f:
         baseline = json.load(f)
+    tag = "REGRESSION" if strict else "WARN (not gated)"
     ok = True
     for name, base in baseline["variants"].items():
         cur = results["variants"].get(name)
@@ -353,21 +487,21 @@ def check_baseline(results, baseline_path: str, tolerance: float) -> bool:
                 continue
             floor = b["steady_tok_s"] * (1.0 - tolerance)
             if c["steady_tok_s"] < floor:
-                print(f"REGRESSION {name}/{policy}: steady "
+                print(f"{tag} {name}/{policy}: steady "
                       f"{c['steady_tok_s']:.1f} tok/s < floor {floor:.1f} "
                       f"(baseline {b['steady_tok_s']:.1f}, -{tolerance:.0%})")
-                ok = False
+                ok = ok and not strict
             else:
                 print(f"ok {name}/{policy}: {c['steady_tok_s']:.1f} tok/s "
                       f">= floor {floor:.1f}")
             if b.get("p99_latency_steps"):
                 ceil = b["p99_latency_steps"] * (1.0 + tolerance)
                 if c.get("p99_latency_steps", 0.0) > ceil:
-                    print(f"REGRESSION {name}/{policy}: p99 "
+                    print(f"{tag} {name}/{policy}: p99 "
                           f"{c['p99_latency_steps']:.1f} steps > ceiling "
                           f"{ceil:.1f} (baseline "
                           f"{b['p99_latency_steps']:.1f}, +{tolerance:.0%})")
-                    ok = False
+                    ok = ok and not strict
                 else:
                     print(f"ok {name}/{policy}: p99 "
                           f"{c['p99_latency_steps']:.1f} steps <= ceiling "
@@ -393,6 +527,13 @@ def main(argv=None):
     ap.add_argument("--min-capacity-ratio", type=float, default=1.5,
                     help="paged gate floor: paged-vs-dense peak concurrent "
                          "requests at equal KV pool tokens")
+    ap.add_argument("--min-shared-ratio", type=float, default=1.5,
+                    help="prefix-sharing gate floor: shared-vs-unshared "
+                         "peak concurrent requests at equal pool bytes")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="make the absolute --baseline comparison a hard "
+                         "gate again (default: warn-only — cross-machine "
+                         "absolute numbers are weather)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     results = run(smoke=args.smoke, seed=args.seed, out_path=args.out)
@@ -400,8 +541,11 @@ def main(argv=None):
                         min_tok_ratio=args.min_tok_ratio)
     ok = check_paged(results,
                      min_capacity_ratio=args.min_capacity_ratio) and ok
+    ok = check_shared(results,
+                      min_shared_ratio=args.min_shared_ratio) and ok
     if args.baseline:
-        ok = check_baseline(results, args.baseline, args.tolerance) and ok
+        ok = check_baseline(results, args.baseline, args.tolerance,
+                            strict=args.strict_baseline) and ok
     if not ok:
         raise SystemExit(1)
     print("serve_bench ok")

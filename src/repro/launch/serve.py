@@ -27,8 +27,11 @@ Policies:
 --paged (chunked only) swaps the dense per-slot KV slabs for a shared page
 pool + per-slot page tables: admission block-allocates ceil(extent /
 --page-size) pages and defers on exhaustion instead of crashing;
---pool-pages sizes the pool (default dense parity).  docs/serving.md walks
-the geometry and the knobs.
+--pool-pages sizes the pool (default dense parity).  Prefix sharing is on
+by default in paged mode: requests whose prompt prefix matches resident
+pages map them (refcounted, copy-on-write at the divergence page) instead
+of allocating copies — --no-prefix-sharing measures the unshared baseline.
+docs/serving.md walks the geometry and the knobs.
 
 Timing is reported as warmup/compile seconds and steady-state tok/s
 *separately* — jit compile no longer pollutes the throughput figure.
@@ -78,6 +81,10 @@ def report(name: str, stats) -> None:
         extra += (f" | pages peak {s['peak_pages_in_use']} "
                   f"(stalls {s['page_stalls']}, "
                   f"fill {s['page_occupancy']:.2f})")
+    if s.get("prefix_hits"):
+        extra += (f" | prefix hits {s['prefix_hits']} "
+                  f"(shared {s['shared_pages_mapped']} pages, "
+                  f"cow {s['cow_copies']})")
     print(f"[{name}] warmup(compile) {s['compile_s']:.2f}s | "
           f"steady {s['steady_tok_s']:.1f} tok/s over {s['steady_s']:.3f}s | "
           f"occupancy {s['occupancy']:.2f} | "
@@ -117,6 +124,10 @@ def main(argv=None):
                     help="KV pool pages shared by all slots (0 = dense "
                          "parity: slots * ceil(max_len/page_size)); smaller "
                          "pools trade headroom for more slots per byte")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable prompt-prefix page sharing in paged mode "
+                         "(on by default: same-prefix requests map the same "
+                         "pool pages, COW at the divergence page)")
     ap.add_argument("--time-ticks", action="store_true",
                     help="block per tick and report wall-clock p50/p99 "
                          "request latency (ms)")
@@ -178,7 +189,8 @@ def main(argv=None):
             prompt_bucket=args.prompt_bucket or None,
             chunk_size=args.chunk_size if args.policy == "chunked" else None,
             token_budget=(args.token_budget or None)
-            if args.policy == "chunked" else None)
+            if args.policy == "chunked" else None,
+            prefix_sharing=not args.no_prefix_sharing)
         results, stats = sched.run(reqs, seed=args.seed,
                                    time_ticks=args.time_ticks)
         report(args.policy, stats)

@@ -204,6 +204,42 @@ class EncDecLM:
         x, _ = self.encoder.apply(params["encoder"], x, ctx)
         return _final_norm(self.norm, self.d_model).apply(params["enc_norm"], x, ctx)
 
+    def _decoder_len(self, cache):
+        """Live length of the decoder's self-attention cache (first KV leaf).
+
+        Scan-stacked decoder caches carry a leading layer axis on ``len``
+        whose rows are identical (one logical length per slot), so the first
+        layer's row stands for all.  Stackedness is decided by *where* the
+        leaf was found: prelude entries are never stacked, body entries are
+        iff the Stack scans its layers — a prelude without any KV cache
+        (non-attention mixers) must not hide a stacked body leaf.
+        Returns None when the tree holds no KV dict (stateless decoders).
+        """
+        def find(node):
+            if isinstance(node, dict):
+                if "k" in node and "len" in node:
+                    return node["len"]
+                for v in node.values():
+                    out = find(v)
+                    if out is not None:
+                        return out
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    out = find(v)
+                    if out is not None:
+                        return out
+            return None
+
+        if isinstance(cache, dict):
+            ln = find(cache.get("prelude"))
+            if ln is not None:
+                return ln
+        ln = find(cache.get("body") if isinstance(cache, dict) else cache)
+        if ln is None:
+            return None
+        stacked = self.decoder.scan_layers and self.decoder.n_periods > 1
+        return ln[0] if stacked else ln
+
     def decode_step(self, params: Params, tokens: jax.Array, enc: jax.Array,
                     ctx: Context, *, cache=None, positions=None, decode=False,
                     chunk=None, logit_pos=None) -> Tuple[jax.Array, Any]:
@@ -215,6 +251,18 @@ class EncDecLM:
                 # positions start..start+C-1 in the learned position table
                 positions = jnp.asarray(chunk.start, jnp.int32) \
                     + jnp.arange(tokens.shape[1])
+            elif decode and cache is not None:
+                # incremental decode: new rows sit at the cache's live
+                # length, NOT at 0..S-1 — without this every generated token
+                # read the position-0 embedding (per-slot ``len`` vectors
+                # give each batch slot its own offset)
+                ln = self._decoder_len(cache)
+                if ln is None:
+                    positions = jnp.arange(tokens.shape[1])
+                elif jnp.ndim(ln) == 1:
+                    positions = ln[:, None] + jnp.arange(tokens.shape[1])[None, :]
+                else:
+                    positions = ln + jnp.arange(tokens.shape[1])
             else:
                 positions = jnp.arange(tokens.shape[1])
         ptab = params["pos_embed"]["table"]

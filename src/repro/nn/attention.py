@@ -477,6 +477,29 @@ def _paged_scatter_rows(pool: jax.Array, rows: jax.Array,
     return flat2.at[flat].set(rows, mode="drop").reshape(pool.shape)
 
 
+def copy_kv_page(cache: Dict[str, Any], src: jax.Array, dst: jax.Array,
+                 *, layer_axis: bool = False) -> Dict[str, Any]:
+    """Copy pool page ``src`` onto pool page ``dst`` (K and V; COW primitive).
+
+    The copy-on-write half of prefix sharing: when an admission would write
+    into a page mapped by more than one slot (serve/scheduler.py tracks
+    refcounts host-side), it allocates a private page, copies the shared
+    page's rows here, and remaps its table row via :func:`set_page_row` —
+    the shared original is never written.  ``layer_axis``: pools are
+    ``(L, num_pages, page_size, Hkv, D)`` (scan-stacked layers); every layer
+    copies the same pool page, mirroring the shared logical assignment.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    axis = 1 if layer_axis else 0
+
+    def cp(pool):
+        page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=axis)
+        return jax.lax.dynamic_update_slice_in_dim(pool, page, dst, axis=axis)
+
+    return dict(cache, k=cp(cache["k"]), v=cp(cache["v"]))
+
+
 def set_page_row(cache: Dict[str, Any], slot: jax.Array, row: jax.Array,
                  *, layer_axis: bool = False) -> Dict[str, Any]:
     """Install a slot's page-table row (the allocator's admission write).
@@ -677,6 +700,11 @@ def append_kv_chunk(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array,
         # landing on unmapped pages redirect to an out-of-bounds sentinel
         # (never the case for admitted slots — the allocator covers the
         # chunk-padded extent — but droppable junk beats silent corruption).
+        # Prefix-sharing invariant: every page this write touches must be
+        # privately mapped (refcount 1).  Refcounts live host-side, so the
+        # scheduler asserts it at the dispatch site (_assert_private_write)
+        # after copy-on-write has remapped any shared divergence page
+        # (copy_kv_page + set_page_row).
         row = jax.lax.dynamic_index_in_dim(cache["page_table"], slot,
                                            axis=0, keepdims=False)
         n_pool, ps = cache["k"].shape[0], cache["k"].shape[1]

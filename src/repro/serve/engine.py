@@ -112,6 +112,11 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
     The decode half runs first, so its per-slot cache append for the
     mid-prefill slot lands exactly on the row the chunk then overwrites —
     the scheduler's masking invariant (junk only at rows >= len) holds.
+
+    ``enc`` (EncDec serving): per-slot encoder outputs ``(B, S_enc, D)``.
+    The decode half cross-attends each slot to its own row; the batch-1
+    chunk half slices the target slot's row — handing it the full batch
+    would shape-mismatch (and silently decode against the wrong context).
     """
     from repro.nn.attention import KVChunk
 
@@ -124,7 +129,10 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
         nxt, cache = decode(params, tok, cache, rng_d, enc)
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
                       mesh=mesh, axis_rules=axis_rules)
-        kw = {"enc": enc} if enc is not None else {}
+        kw = {}
+        if enc is not None:
+            kw["enc"] = jax.lax.dynamic_index_in_dim(
+                enc, jnp.asarray(slot, jnp.int32), axis=0, keepdims=True)
         logits, cache = model.apply(
             params, chunk_tok, ctx, cache=cache, decode=True,
             chunk=KVChunk(slot=slot, start=start, length=length),

@@ -1,36 +1,47 @@
-"""Host-side block allocator for the paged KV cache.
+"""Host-side block allocator + prefix index for the paged KV cache.
 
 The device side of paging is dumb on purpose: pools + page tables
 (nn/attention.py ``init_paged_kv_cache``) and kernels that read *through*
 the table (kernels/qpaged_attn.py).  All policy — which pool pages belong to
-which request, when admission must wait for memory — lives here, in plain
-Python, because it runs once per admission/eviction, not per token.
+which request, when admission must wait for memory, which pages two requests
+may *share* — lives here, in plain Python, because it runs once per
+admission/eviction, not per token.
 
-The Scheduler (serve/scheduler.py) drives one :class:`PageAllocator` per
-``run()``:
+The Scheduler (serve/scheduler.py) drives one :class:`PageAllocator` (and,
+with prefix sharing enabled, one :class:`PrefixIndex`) per ``run()``:
 
 * on admission it asks for ``ceil(request_extent / page_size)`` pages; a
   ``None`` answer defers the request in the queue (``page_stalls`` in the
   stats) instead of crashing — the paged analog of the token-budget stall;
-* on eviction it returns the slot's pages, which the very next admission may
-  reuse (no compaction: pages are fixed-size, so external fragmentation is
-  zero by construction; internal fragmentation is bounded by one page per
-  request and reported via the stats' ``page_occupancy``).
+* a request whose prompt prefix matches pages already resident (the index)
+  maps those pages into its own table and bumps their refcount
+  (:meth:`PageAllocator.share`) instead of allocating copies — the
+  copy-on-write prefix-sharing path (docs/serving.md "Prefix sharing");
+* on eviction it returns the slot's pages; each page goes back to the free
+  list only when its refcount hits zero, so a prefix another live request
+  still maps survives its original owner.  Reused pages mean external
+  fragmentation stays zero by construction; internal fragmentation is
+  bounded by one page per request and reported via ``page_occupancy``.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import hashlib
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 
 class PageAllocator:
-    """Free-list allocator over a pool of ``num_pages`` fixed-size pages.
+    """Refcounting free-list allocator over ``num_pages`` fixed-size pages.
 
     Pages are identified by their pool index (0..num_pages-1).  ``alloc``
     is all-or-nothing: a request that cannot get its full extent gets
     nothing (and the caller defers it), so a half-admitted request can never
-    strand pages.  A held-set guards against double-free in case a caller's
-    slot bookkeeping goes wrong — better a loud ValueError than silent page
-    aliasing between two live requests.
+    strand pages.  ``share`` bumps the refcount of already-held pages (prefix
+    sharing maps one pool page into several slots' tables); ``free``
+    decrements, and a page re-enters the free list only at refcount zero.
+    Freeing a page more times than it was alloc'd/shared raises — better a
+    loud ValueError than silent page aliasing between two live requests.
     """
 
     def __init__(self, num_pages: int):
@@ -41,7 +52,7 @@ class PageAllocator:
         # LIFO free list: freshly freed pages are reused first, which keeps
         # the working set of pool pages small (cache-friendlier on device).
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
-        self._held: set = set()
+        self._ref: Dict[int, int] = {}
         self.peak_in_use = 0
 
     @property
@@ -51,28 +62,130 @@ class PageAllocator:
 
     @property
     def pages_in_use(self) -> int:
-        """Pages currently held by live requests."""
+        """Pages currently held (refcount > 0) by live requests."""
         return self.num_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        """How many slots currently map ``page`` (0 = free)."""
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Take ``n`` pages off the free list; None if fewer than n remain.
 
         All-or-nothing: on None the free list is untouched, so the caller
-        can simply retry at the next tick (admission deferral).
+        can simply retry at the next tick (admission deferral).  Each
+        returned page starts at refcount 1.
         """
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._held.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return pages
 
-    def free(self, pages: List[int]) -> None:
-        """Return pages to the free list (eviction); double-free raises."""
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one reference to each of ``pages`` (prefix-sharing admission).
+
+        Every page must currently be held — sharing a free page would alias
+        whatever the free list hands out next, so that raises instead.
+        """
         for p in pages:
-            if p not in self._held:
+            if self._ref.get(p, 0) < 1:
+                raise ValueError(f"share of page {p} not currently held")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns the pages actually released.
+
+        A page re-enters the free list only when its refcount reaches zero
+        (a shared prefix outlives its original owner).  The returned
+        released-list is what the caller must retire from any side index
+        (:meth:`PrefixIndex.drop_pages`).  Over-freeing raises.
+        """
+        released: List[int] = []
+        for p in pages:
+            if self._ref.get(p, 0) < 1:
                 raise ValueError(f"free of page {p} not currently held")
-            self._held.discard(p)
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+                released.append(p)
+        return released
+
+
+class PrefixIndex:
+    """Longest-prefix index over *full* prompt pages, keyed by token hashes.
+
+    Maps the cumulative hash of a prompt's first ``k * page_size`` tokens to
+    the pool page holding page ``k-1`` of some live request's prompt.
+    Cumulative (not per-page) hashing means a page matches only when the
+    *entire prefix* up to and including it matches — identical middle pages
+    under different openings can never alias.
+
+    Only pages fully covered by prompt tokens are ever registered: a page
+    holding a prompt tail plus decode rows diverges immediately, and decode
+    rows must never be shared.  The Scheduler inserts a request's full
+    prompt pages once its prefill completes and drops entries when the
+    allocator reports their page released (refcount zero) — while *any*
+    sharer is live the entry stays valid, because the page still holds
+    exactly the hashed tokens' K/V.
+    """
+
+    def __init__(self, page_size: int):
+        """Index prompts at ``page_size``-token page granularity."""
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self._page_of: Dict[bytes, int] = {}    # cumulative hash -> pool page
+        self._key_of: Dict[int, bytes] = {}     # pool page -> its index key
+
+    def _keys(self, prompt) -> List[bytes]:
+        """Cumulative sha1 digests, one per *full* prompt page."""
+        arr = np.asarray(prompt, np.int32).reshape(-1)
+        ps = self.page_size
+        h = hashlib.sha1()
+        out: List[bytes] = []
+        for i in range(arr.shape[0] // ps):
+            h.update(arr[i * ps:(i + 1) * ps].tobytes())
+            out.append(h.digest())
+        return out
+
+    def match(self, prompt) -> List[int]:
+        """Longest chain of resident pool pages holding this prompt's prefix.
+
+        Returns pool page indices for full prompt pages 0..m-1 where every
+        page up to m matched; the caller maps them (and ``share``s their
+        refcounts) into the new slot's table.
+        """
+        pages: List[int] = []
+        for key in self._keys(prompt):
+            page = self._page_of.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def insert(self, prompt, pages: Sequence[int]) -> None:
+        """Register ``prompt``'s full prompt pages (after its prefill).
+
+        ``pages`` is the owning slot's page-table row prefix (one pool page
+        per full prompt page).  First writer wins: a prefix already indexed
+        keeps its existing page, so concurrent identical prompts converge on
+        one shared copy.
+        """
+        for key, page in zip(self._keys(prompt), pages):
+            if key not in self._page_of:
+                self._page_of[key] = page
+                self._key_of[page] = key
+
+    def drop_pages(self, pages: Sequence[int]) -> None:
+        """Retire index entries whose pages the allocator just released."""
+        for p in pages:
+            key = self._key_of.pop(p, None)
+            if key is not None and self._page_of.get(key) == p:
+                del self._page_of[key]

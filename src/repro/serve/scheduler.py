@@ -35,6 +35,16 @@ the same jitted prefill/decode steps:
   (composing with the ``token_budget`` stall, decode never waits); eviction
   returns the pages.  Requires chunked admission — docs/serving.md has the
   full geometry;
+* **prefix sharing** (paged, default on): an admission whose prompt prefix
+  matches resident pages (serve/paging.py ``PrefixIndex``) maps them into
+  its own table (refcounted), prefills only from the divergence point, and
+  privatizes a shared divergence page by copy-on-write before any write —
+  N same-system-prompt requests hold one copy of the prefix, the
+  per-pool-byte capacity win serve_bench gates;
+* **EncDec serving** (chunked only): each request carries its encoder
+  output (``Request.enc``); the scheduler keeps a per-slot encoder buffer
+  and threads it through the jitted decode/mixed steps, so every slot
+  cross-attends its own context;
 * **termination**: per-slot EOS/length checks; finished slots are evicted
   with an O(1) ``reset_kv_slot`` and emit pad tokens under a sampling mask
   until readmission;
@@ -61,10 +71,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn.attention import reset_kv_slot, set_page_row, write_kv_slot
+from repro.nn.attention import (copy_kv_page, reset_kv_slot, set_kv_slot_len,
+                                set_page_row, write_kv_slot)
 from repro.serve.engine import (make_decode_step, make_mixed_step,
                                 make_prefill_step, sample_tokens)
-from repro.serve.paging import PageAllocator
+from repro.serve.paging import PageAllocator, PrefixIndex
 
 
 # --------------------------------------------------------------------------
@@ -80,6 +91,9 @@ class Request:
     prompt: Any                 # (P,) int32 token ids (list / np / jnp)
     max_new: int
     arrival: int = 0
+    enc: Any = None             # EncDec serving: this request's encoder
+    #                             output (S_enc, D) or (1, S_enc, D); None
+    #                             for decoder-only models
 
 
 @dataclasses.dataclass
@@ -124,6 +138,12 @@ class ServeStats:
     page_stalls: int = 0        # paged KV: ticks the head-of-queue request
     #                             sat deferred because the allocator could not
     #                             serve its full page extent
+    prefix_hits: int = 0        # prefix sharing: admissions that mapped >= 1
+    #                             resident page instead of allocating it
+    shared_pages_mapped: int = 0  # prefix sharing: total page mappings served
+    #                             from the index (pool pages NOT allocated)
+    cow_copies: int = 0         # prefix sharing: divergence pages privatized
+    #                             by copy-on-write before their first write
     peak_pages_in_use: int = 0  # paged KV: allocator high-water mark
     peak_live_slots: int = 0    # max concurrent requests resident (live
     #                             decode slots + a mid-prefill reservation) —
@@ -148,7 +168,9 @@ class ServeStats:
 
         1.0 = every resident pool token is a live K/V row; the gap is
         internal fragmentation (last-page waste + decode headroom reserved
-        but not yet generated).  0.0 when the run was not paged.
+        but not yet generated).  0.0 when the run was not paged.  Prefix
+        sharing can push it past 1.0 — several requests' live logical rows
+        backed by one resident page is exactly the capacity win.
         """
         return self.page_util_sum / max(self.page_util_ticks, 1)
 
@@ -176,6 +198,9 @@ class ServeStats:
             "peak_pages_in_use": self.peak_pages_in_use,
             "peak_live_slots": self.peak_live_slots,
             "page_occupancy": round(self.page_occupancy, 4),
+            "prefix_hits": self.prefix_hits,
+            "shared_pages_mapped": self.shared_pages_mapped,
+            "cow_copies": self.cow_copies,
         }
 
 
@@ -262,6 +287,34 @@ def set_cache_page_row(cache, slot, row):
         cache, lambda kv, la: set_page_row(kv, slot, row, layer_axis=la))
 
 
+def copy_cache_page(cache, src, dst):
+    """Copy pool page ``src`` onto ``dst`` in every layer of a paged cache
+    tree — the device half of copy-on-write (the host half is the refcount
+    bookkeeping in serve/paging.py)."""
+    return _map_slot_op(
+        cache, lambda kv, la: copy_kv_page(kv, src, dst, layer_axis=la))
+
+
+def set_cache_slot_len(cache, slot, length):
+    """Set ``len[slot] = length`` in every layer of a per-slot cache tree.
+
+    Prefix-sharing admission starts a slot at its shared-prefix length so
+    the decode half's per-tick junk append for the still-prefilling slot
+    lands in the slot's private divergence region — at len 0 it would write
+    through the shared prefix mapping (see Scheduler admission).
+    """
+    def op(kv, la):
+        ln = kv["len"]
+        if la:
+            upd = jnp.full((ln.shape[0], 1), length, jnp.int32)
+            ln = jax.lax.dynamic_update_slice_in_dim(ln, upd, slot, axis=1)
+        else:
+            ln = set_kv_slot_len(ln, slot, length)
+        return dict(kv, len=ln)
+
+    return _map_slot_op(cache, op)
+
+
 # --------------------------------------------------------------------------
 # The scheduler
 # --------------------------------------------------------------------------
@@ -285,6 +338,19 @@ class Scheduler:
     it, which has no paged analog (and no reason for one — the mixed step
     writes through the page table directly).
 
+    ``prefix_sharing`` (paged only, default on): requests whose prompt
+    prefix matches pages already resident map those pages into their own
+    table (refcounted in serve/paging.py) and prefill only from the
+    divergence point; a shared divergence page is privatized by
+    copy-on-write before its first write.  Disable to measure the unshared
+    baseline (serve_bench's shared-prefix gate does exactly that).
+
+    EncDec models (anything with an ``encode`` method) serve through the
+    chunked path only, with every request carrying its own encoder output
+    (``Request.enc``); the scheduler keeps a per-slot ``(slots, S_enc, D)``
+    encoder buffer and threads it through the jitted steps — decoding
+    without it silently drops the encoder context and emits garbage.
+
     All jitted steps donate their cache argument — and their token argument
     outside async-harvest mode (no ``eos_id``), where per-step token columns
     must stay alive until the end-of-run harvest — so on backends with
@@ -295,7 +361,8 @@ class Scheduler:
     def __init__(self, engine, *, eos_id: Optional[int] = None,
                  pad_id: int = 0, prompt_bucket: Optional[int] = None,
                  chunk_size: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefix_sharing: bool = True):
         """Bind the scheduler's jitted steps to ``engine`` (see class doc)."""
         self.engine = engine
         self.eos_id = eos_id
@@ -304,6 +371,8 @@ class Scheduler:
         self.chunk_size = chunk_size
         self.token_budget = token_budget
         self.paged = bool(getattr(engine, "paged_kv", False))
+        self.prefix_sharing = bool(prefix_sharing) and self.paged
+        self.encdec = hasattr(engine.model, "encode")
         if chunk_size is not None and chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         if self.paged and chunk_size is None:
@@ -311,6 +380,12 @@ class Scheduler:
                 "paged KV (engine.paged_kv) requires chunked admission: "
                 "pass chunk_size=... (one-shot admission block-copies a "
                 "dense scratch cache, which has no paged analog)")
+        if self.encdec and chunk_size is None:
+            raise NotImplementedError(
+                "EncDec serving requires chunked admission (chunk_size=...): "
+                "the one-shot slot prefill does not thread the request's "
+                "encoder output through its jitted step, so it would decode "
+                "without encoder context")
         if token_budget is not None:
             if chunk_size is None:
                 raise ValueError("token_budget requires chunked admission "
@@ -328,8 +403,8 @@ class Scheduler:
             temperature=temperature)
         pad = jnp.int32(self.pad_id)
 
-        def masked_decode(params, tok, cache, rng, active):
-            nxt, cache = decode(params, tok, cache, rng)
+        def masked_decode(params, tok, cache, rng, active, enc=None):
+            nxt, cache = decode(params, tok, cache, rng, enc)
             return jnp.where(active[:, None], nxt, pad), cache
 
         def set_tok(tok, first, slot):
@@ -361,6 +436,24 @@ class Scheduler:
 
             self._set_pages = jax.jit(set_pages, donate_argnums=(0,))
             self._jits.append(self._set_pages)
+        if self.prefix_sharing:
+            def copy_page(cache, src, dst):
+                return copy_cache_page(cache, src, dst)
+
+            def set_len(cache, slot, length):
+                return set_cache_slot_len(cache, slot, length)
+
+            self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
+            self._set_len = jax.jit(set_len, donate_argnums=(0,))
+            self._jits += [self._copy_page, self._set_len]
+        if self.encdec:
+            def set_enc(buf, row, slot):
+                return jax.lax.dynamic_update_slice(
+                    buf, row.astype(buf.dtype), (slot, jnp.int32(0),
+                                                 jnp.int32(0)))
+
+            self._set_enc = jax.jit(set_enc, donate_argnums=(0,))
+            self._jits.append(self._set_enc)
 
         if chunk_size is None:
             # one-shot admission: batch-1 prefill + write_kv_slot copy
@@ -392,9 +485,9 @@ class Scheduler:
                 temperature=temperature)
 
             def masked_mixed(params, tok, cache, rng, active, chunk_tok,
-                             slot, start, length):
+                             slot, start, length, enc=None):
                 nxt, first, cache = mixed(params, tok, cache, rng, chunk_tok,
-                                          slot, start, length)
+                                          slot, start, length, enc)
                 return jnp.where(active[:, None], nxt, pad), first, cache
 
             self._masked_mixed = jax.jit(masked_mixed,
@@ -425,6 +518,65 @@ class Scheduler:
         row[:len(pages)] = pages
         return jnp.asarray(row)
 
+    def _plan_admission(self, r: Request, plen: int, alloc: PageAllocator,
+                        index: Optional[PrefixIndex]):
+        """Page plan for admitting ``r``: match, share, allocate, COW — or
+        None when the pool cannot serve the fresh-page balance (page stall).
+
+        With sharing, the request maps the longest resident prefix chain
+        (full prompt pages only) and prefills from the divergence point
+        ``next_start``.  A matched page the request must still write —
+        only the final prompt page, when the *whole* prompt is resident and
+        the last token is re-run for its first-token logits — is privatized
+        up front: a fresh page is allocated, the shared page's rows are
+        copied, and the table row points at the copy (copy-on-write; eager
+        because the write is certain, and pre-reserving keeps admission
+        all-or-nothing so decode can never exhaust the pool mid-request).
+
+        Returns ``(row_pages, copies, n_share, next_start)``: the table row
+        in logical order, the (src, dst) device copies to enqueue, how many
+        row entries are shared mappings, and the first prompt row to prefill.
+        """
+        ps = self.engine.page_size
+        C = self.chunk_size
+        matched = index.match(r.prompt) if index is not None else []
+        s0 = len(matched) * ps
+        # always prefill >= 1 token: the last chunk's logits sample the
+        # request's first generated token
+        next_start = min(s0, plen - 1)
+        # pages covering the padded chunk writes and the decode horizon
+        # (chunks write C rows from next_start, so the write extent shifts
+        # with the shared prefix); rows past the table are sentinel-dropped,
+        # so the plan never exceeds the table width
+        chunk_end = next_start + -(-(plen - next_start) // C) * C
+        extent = max(chunk_end, plen + r.max_new)
+        total = min(-(-extent // ps), self.engine.kv_max_pages)
+        first_write_page = next_start // ps
+        n_share = min(len(matched), first_write_page)
+        copies_src = matched[n_share:]          # divergence page(s) to COW
+        fresh_n = total - n_share               # COW targets + fresh tail
+        got = alloc.alloc(fresh_n)
+        if got is None:
+            return None
+        alloc.share(matched[:n_share])
+        row_pages = matched[:n_share] + got
+        copies = list(zip(copies_src, got[:len(copies_src)]))
+        return row_pages, copies, n_share, next_start
+
+    def _assert_private_write(self, pages: List[int], lo: int, hi: int,
+                              alloc: PageAllocator) -> None:
+        """The chunk-write invariant: rows [lo, hi) of a slot mapping
+        ``pages`` must touch only privately mapped (refcount <= 1) pages —
+        a write through a shared mapping would corrupt every other slot
+        reading that page.  COW at admission makes this structurally true;
+        this is the loud regression net in front of the device scatter."""
+        ps = self.engine.page_size
+        for pi in range(lo // ps, min(-(-hi // ps), len(pages))):
+            rc = alloc.refcount(pages[pi])
+            assert rc <= 1, (
+                f"chunk write into shared page {pages[pi]} (refcount {rc}) "
+                f"— copy-on-write must privatize it first")
+
     # ---- prompt bucketing --------------------------------------------------
     def _bucket(self, plen: int) -> int:
         if self.prompt_bucket is None:
@@ -440,13 +592,15 @@ class Scheduler:
         return jnp.asarray(padded), plen
 
     # ---- warmup ------------------------------------------------------------
-    def warmup(self, prompt_lens: Sequence[int], *, seed: int = 0) -> float:
+    def warmup(self, prompt_lens: Sequence[int], *, seed: int = 0,
+               enc: Any = None) -> float:
         """Compile every step the run will need against throwaway state, so
         the measured loop is pure steady state. Returns compile seconds.
 
         One-shot admission compiles one slot-prefill per distinct (bucketed)
         prompt length; chunked admission compiles the mixed step once — its
-        chunk shape is static, so ``prompt_lens`` is irrelevant.
+        chunk shape is static, so ``prompt_lens`` is irrelevant.  ``enc`` is
+        the run's per-slot encoder buffer shape-alike (EncDec serving).
         """
         eng = self.engine
         t0 = time.perf_counter()
@@ -455,6 +609,8 @@ class Scheduler:
         tok = jnp.full((eng.batch_slots, 1), self.pad_id, jnp.int32)
         active = jnp.ones((eng.batch_slots,), bool)
         slot0 = jnp.int32(0)
+        if enc is not None:
+            enc = self._set_enc(jnp.zeros_like(enc), enc[:1], slot0)
         if self.chunk_size is not None:
             if self.paged:
                 # throwaway page assignment for slot 0 (no allocator: warmup
@@ -463,10 +619,14 @@ class Scheduler:
                         eng.kv_num_pages)
                 cache = self._set_pages(cache, slot0,
                                         self._page_row(list(range(n))))
+                if self.prefix_sharing:
+                    cache = self._copy_page(cache, jnp.int32(0),
+                                            jnp.int32(n - 1))
+                    cache = self._set_len(cache, slot0, jnp.int32(0))
             ctok = jnp.full((1, self.chunk_size), self.pad_id, jnp.int32)
             tok, first, cache = self._masked_mixed(
                 eng.params, tok, cache, rng, active, ctok, slot0,
-                jnp.int32(0), jnp.int32(self.chunk_size))
+                jnp.int32(0), jnp.int32(self.chunk_size), enc)
             tok = self._set_tok(tok, first, slot0)
         else:
             for p in sorted({self._bucket(int(p)) for p in prompt_lens}):
@@ -475,7 +635,8 @@ class Scheduler:
                                                   jnp.int32(p), rng)
                 cache = self._admit(cache, small, slot0, jnp.int32(p))
                 tok = self._set_tok(tok, first, slot0)
-        tok, cache = self._masked_decode(eng.params, tok, cache, rng, active)
+        tok, cache = self._masked_decode(eng.params, tok, cache, rng, active,
+                                         enc)
         cache = self._evict(cache, slot0)
         jax.block_until_ready((tok, cache))
         return time.perf_counter() - t0
@@ -511,6 +672,15 @@ class Scheduler:
         for r in requests:
             plen = int(np.asarray(r.prompt).reshape(-1).shape[0])
             plen_of[r.rid] = plen
+            if self.encdec and r.enc is None:
+                raise ValueError(
+                    f"request {r.rid}: EncDec serving needs the request's "
+                    f"encoder output (Request.enc) — decoding without it "
+                    f"drops the encoder context entirely")
+            if not self.encdec and r.enc is not None:
+                raise ValueError(
+                    f"request {r.rid}: Request.enc given but the model has "
+                    f"no encoder")
             if C is not None:
                 rows = -(-plen // C) * C   # last (padded) chunk's extent
                 # paged slots are bounded by their page-table capacity
@@ -537,12 +707,38 @@ class Scheduler:
                         f"request)")
             if r.max_new < 1:
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            if plen < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
+
+        enc_buf = None
+        enc_of: Dict[int, jax.Array] = {}
+        if self.encdec:
+            for r in requests:
+                row = jnp.asarray(r.enc)
+                if row.ndim == 2:
+                    row = row[None]
+                if row.ndim != 3 or row.shape[0] != 1:
+                    raise ValueError(
+                        f"request {r.rid}: enc must be (S_enc, D) or "
+                        f"(1, S_enc, D), got {row.shape}")
+                enc_of[r.rid] = row
+            shapes = {v.shape for v in enc_of.values()}
+            if len(shapes) != 1:
+                raise ValueError(
+                    f"all requests must share one encoder shape per run "
+                    f"(one jitted step signature), got {sorted(shapes)}")
+            (one,) = shapes
+            # keep the encoder's own dtype: an f32 buffer would silently
+            # promote a bf16 model's cross-attention (and its residual
+            # stream) and diverge from the generate() baseline
+            enc_buf = jnp.zeros((nslots,) + one[1:],
+                                next(iter(enc_of.values())).dtype)
 
         stats = ServeStats()
         if warmup:
             stats.compile_s = self.warmup(
                 [np.asarray(r.prompt).reshape(-1).shape[0]
-                 for r in requests], seed=seed)
+                 for r in requests], seed=seed, enc=enc_buf)
 
         use_eos = self.eos_id is not None
         queue = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
@@ -560,6 +756,7 @@ class Scheduler:
         active_host, active_dev = None, None
         prefill: Optional[_Prefill] = None
         alloc = PageAllocator(eng.kv_num_pages) if self.paged else None
+        index = PrefixIndex(eng.page_size) if self.prefix_sharing else None
         slot_pages: Dict[int, List[int]] = {}
         t = 0
 
@@ -570,9 +767,20 @@ class Scheduler:
             if time_ticks and slot.req.rid in arrival_wall:
                 stats.latencies_s.append(
                     time.perf_counter() - arrival_wall[slot.req.rid])
+            # ORDER MATTERS: enqueue the device-side page-table unmap
+            # (evict_cache_slot) BEFORE returning the pages to the host
+            # allocator.  The very next admission may be handed these pages
+            # (LIFO free list) and install them in another slot's row; its
+            # writes are sequenced after this unmap through the cache
+            # value's data dependency — freeing first would let a reused
+            # page be mapped by two rows at once (aliasing/double-free).
             cache = self._evict(cache, jnp.int32(j))
             if alloc is not None and j in slot_pages:
-                alloc.free(slot_pages.pop(j))
+                released = alloc.free(slot_pages.pop(j))
+                if index is not None:
+                    # shared prefixes outlive their owner: only pages whose
+                    # refcount hit zero leave the index
+                    index.drop_pages(released)
             slots[j] = None
 
         def admit_live(j: int, r: Request, first):
@@ -580,6 +788,12 @@ class Scheduler:
             slot = _Slot(req=r, admitted_at=t, emitted=1, first=first)
             slots[j] = slot
             stats.tokens_out += 1
+            if index is not None and j in slot_pages:
+                # prefill complete: this slot's full prompt pages become
+                # donor candidates for later same-prefix admissions
+                index.insert(r.prompt,
+                             slot_pages[j][:plen_of[r.rid]
+                                           // eng.page_size])
             if use_eos:
                 first_id = int(np.asarray(first)[0, 0])
                 slot.tokens.append(first_id)
@@ -621,27 +835,52 @@ class Scheduler:
                     free = [j for j in range(nslots) if slots[j] is None]
                     if free:
                         r = queue[0]
-                        pages = None
+                        plan = None
                         if alloc is not None:
-                            pages = alloc.alloc(self._pages_needed(
-                                plen_of[r.rid], r.max_new))
-                            if pages is None:
+                            plan = self._plan_admission(r, plen_of[r.rid],
+                                                        alloc, index)
+                            if plan is None:
                                 # page exhaustion defers the admission in
                                 # the queue; eviction frees pages, so the
                                 # retry eventually lands (decode never waits)
                                 stats.page_stalls += 1
-                        if alloc is None or pages is not None:
+                        if alloc is None or plan is not None:
                             queue.popleft()
-                            if pages is not None:
-                                slot_pages[free[0]] = pages
+                            j = free[0]
+                            start0 = 0
+                            if plan is not None:
+                                row_pages, copies, n_share, start0 = plan
+                                slot_pages[j] = list(row_pages)
+                                if n_share or copies:
+                                    stats.prefix_hits += 1
+                                    stats.shared_pages_mapped += n_share
+                                    stats.cow_copies += len(copies)
+                                # device order: privatize divergence pages
+                                # (COW copy) BEFORE installing the row that
+                                # points at the copies, then park the slot's
+                                # live length at the shared-prefix boundary
+                                # so the decode half's junk append for this
+                                # still-prefilling slot lands in the private
+                                # region, never through a shared mapping
+                                for src, dst in copies:
+                                    cache = self._copy_page(
+                                        cache, jnp.int32(src), jnp.int32(dst))
                                 cache = self._set_pages(
-                                    cache, jnp.int32(free[0]),
-                                    self._page_row(pages))
+                                    cache, jnp.int32(j),
+                                    self._page_row(row_pages))
+                                if start0:
+                                    cache = self._set_len(
+                                        cache, jnp.int32(j),
+                                        jnp.int32(start0))
                                 stats.peak_pages_in_use = alloc.peak_in_use
+                            if enc_buf is not None:
+                                enc_buf = self._set_enc(
+                                    enc_buf, enc_of[r.rid], jnp.int32(j))
                             prefill = _Prefill(
-                                req=r, slot=free[0],
+                                req=r, slot=j,
                                 prompt=np.asarray(r.prompt,
-                                                  np.int32).reshape(-1))
+                                                  np.int32).reshape(-1),
+                                next_start=start0)
                 if prefill is not None:
                     n_live = sum(s is not None for s in slots)
                     if self.token_budget is not None \
@@ -670,10 +909,15 @@ class Scheduler:
                 clen = min(C, plen - start)
                 ctok = np.full((1, C), self.pad_id, np.int32)
                 ctok[0, :clen] = chunk_job.prompt[start:start + clen]
+                if alloc is not None:
+                    # the fused chunk write covers C (padded) rows: none may
+                    # go through a shared mapping (COW ran at admission)
+                    self._assert_private_write(
+                        slot_pages[chunk_job.slot], start, start + C, alloc)
                 tok, first, cache = self._masked_mixed(
                     eng.params, tok, cache, sub, active_dev,
                     jnp.asarray(ctok), jnp.int32(chunk_job.slot),
-                    jnp.int32(start), jnp.int32(clen))
+                    jnp.int32(start), jnp.int32(clen), enc_buf)
                 stats.prefill_chunks += 1
                 chunk_job.next_start = start + clen
                 if chunk_job.next_start >= plen:
@@ -683,7 +927,7 @@ class Scheduler:
                     prefill = None
             else:
                 tok, cache = self._masked_decode(eng.params, tok, cache, sub,
-                                                 active_dev)
+                                                 active_dev, enc_buf)
             if time_ticks:
                 jax.block_until_ready(tok)
             t += 1

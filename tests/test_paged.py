@@ -44,6 +44,22 @@ def test_allocator_alloc_free_exhaustion():
     assert a.peak_in_use == 4
 
 
+def test_allocator_free_returns_released_pages():
+    """free() reports exactly the pages whose refcount hit zero — what the
+    scheduler must retire from the prefix index."""
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    a.share(pages)                      # refcount 2
+    assert a.free(pages) == []          # still held by the sharer
+    assert a.pages_in_use == 2
+    assert sorted(a.free(pages)) == sorted(pages)
+    assert a.pages_in_use == 0
+    with pytest.raises(ValueError, match="not currently held"):
+        a.free(pages)
+    with pytest.raises(ValueError, match="not currently held"):
+        a.share(pages)                  # sharing a free page would alias
+
+
 def test_allocator_no_leak_over_200_request_churn():
     a = PageAllocator(16)
     rng = np.random.default_rng(0)
@@ -249,12 +265,14 @@ def test_paged_int8_fused_kernel_path_identical(smoke_lm):
     reqs = [Request(rid=0, prompt=np.arange(6, dtype=np.int32) + 2,
                     max_new=3)]
     base, _ = eng.scheduler(chunk_size=4).run(reqs)
-    assert kops.FORCE is None
+    # tolerate an env-forced mode (the CI interpret lane sets
+    # REPRO_KERNELS_FORCE=interpret for the whole process)
+    prev = kops.FORCE
     kops.FORCE = "interpret"
     try:
         got, _ = eng.scheduler(chunk_size=4).run(reqs)
     finally:
-        kops.FORCE = None
+        kops.FORCE = prev
     assert got[0].tokens == base[0].tokens
 
 
@@ -300,6 +318,62 @@ def test_paged_scheduler_churn_reuses_pages(smoke_lm):
     assert sorted(got) == list(range(24))
     assert all(len(got[i].tokens) == 2 for i in range(24))
     assert stats.peak_pages_in_use <= 4
+
+
+def test_evict_unmap_enqueued_before_pages_freed(smoke_lm, monkeypatch):
+    """Eviction ordering: the device-side page-table unmap must be enqueued
+    BEFORE the slot's pages return to the host allocator — a re-admission
+    handed a freed page while the evicted row still mapped it would alias
+    two slots onto one page.  Every free event must be preceded by at least
+    as many unmap dispatches."""
+    from repro.serve import paging
+
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, batch_slots=2, paged_kv=True, page_size=8,
+                  kv_pool_pages=4)
+    sched = eng.scheduler(chunk_size=4)
+    events = []
+    orig_evict = sched._evict
+    sched._evict = lambda cache, slot: (events.append("evict"),
+                                        orig_evict(cache, slot))[1]
+    orig_free = paging.PageAllocator.free
+    monkeypatch.setattr(
+        paging.PageAllocator, "free",
+        lambda self, pages: (events.append("free"),
+                             orig_free(self, pages))[1])
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=6),
+                    max_new=3, arrival=i) for i in range(6)]
+    got, _ = sched.run(reqs)
+    assert sorted(got) == list(range(6))
+    assert events.count("free") == 6          # one per evicted request
+    n_evict = n_free = 0
+    for e in events:
+        if e == "evict":
+            n_evict += 1
+        else:
+            n_free += 1
+            assert n_free <= n_evict, (
+                "pages freed before the slot's unmap was enqueued")
+
+
+def test_same_tick_page_reuse_is_alias_free(smoke_lm):
+    """A pool so tight every admission reuses the just-evicted request's
+    pages (LIFO free list): token streams must still match the dense run —
+    any unmap/free misordering or stale mapping would corrupt them."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(13)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=6),
+                    max_new=4) for i in range(6)]
+    dense = _engine(model, params, batch_slots=2)
+    base, _ = dense.scheduler(chunk_size=6).run(reqs)
+    eng = _engine(model, params, batch_slots=2, paged_kv=True, page_size=8,
+                  kv_pool_pages=2)           # exactly one live request
+    got, stats = eng.scheduler(chunk_size=6).run(reqs)
+    assert stats.peak_pages_in_use == 2
+    assert stats.page_stalls > 0
+    for i in range(6):
+        assert got[i].tokens == base[i].tokens, i
 
 
 def test_paged_requires_chunked_admission(smoke_lm):

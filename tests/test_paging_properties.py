@@ -1,0 +1,81 @@
+"""Property-based tests (hypothesis) for the PageAllocator's invariants
+under adversarial alloc/share/free churn: a live (refcount > 0) page never
+re-enters the free list, alloc stays all-or-nothing under interleaving, and
+``peak_in_use`` is monotone within a run."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'dev' extra (pip install -e .[dev])")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.paging import PageAllocator
+
+POOL = 12
+
+# an op stream: ("alloc", n) takes n pages, ("share", i) adds a reference to
+# the i-th outstanding allocation, ("free", i) drops one
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["alloc", "share", "free"]),
+              st.integers(0, 10)),
+    max_size=250)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops=ops_strategy)
+def test_allocator_invariants_under_churn(ops):
+    a = PageAllocator(POOL)
+    held = []                      # one entry per outstanding reference set
+    peak = 0
+    for op, arg in ops:
+        if op == "alloc":
+            n = arg % 7
+            free_before = a.free_pages
+            got = a.alloc(n)
+            if got is None:
+                # all-or-nothing: a failed alloc leaves the free list intact
+                assert n > free_before
+                assert a.free_pages == free_before
+            else:
+                assert len(got) == len(set(got)) == n
+                held.append(list(got))
+        elif op == "share" and held:
+            pages = held[arg % len(held)]
+            a.share(pages)
+            held.append(list(pages))
+        elif op == "free" and held:
+            released = a.free(held.pop(arg % len(held)))
+            # a page is released exactly when no outstanding set holds it
+            live = {p for h in held for p in h}
+            assert not (set(released) & live)
+        # INVARIANT: live pages never re-enter the free list
+        live = {p for h in held for p in h}
+        assert live.isdisjoint(a._free)
+        assert a.pages_in_use == len(live)
+        # INVARIANT: the high-water mark is monotone within a run
+        assert a.peak_in_use >= peak
+        peak = a.peak_in_use
+    for h in held:
+        a.free(h)
+    assert a.pages_in_use == 0 and a.free_pages == POOL
+
+
+@settings(max_examples=100, deadline=None)
+@given(sizes=st.lists(st.integers(0, POOL + 2), max_size=40))
+def test_alloc_failure_order_independent(sizes):
+    """A None answer depends only on the current free count, never on the
+    history of prior failures (failed allocs are true no-ops)."""
+    a = PageAllocator(POOL)
+    held = []
+    for n in sizes:
+        expect_ok = n <= a.free_pages
+        got = a.alloc(n)
+        assert (got is not None) == expect_ok
+        if got is not None:
+            held.append(got)
+        elif held:
+            a.free(held.pop(0))
+    for h in held:
+        a.free(h)
+    assert a.free_pages == POOL

@@ -1,0 +1,205 @@
+"""Prefix sharing over the paged KV pool: the PrefixIndex, refcounted
+share/free, copy-on-write at the divergence page, token identity of shared
+vs unshared vs dense streams (fp32 + int8 KV, incl. the fused Pallas kernels
+in interpret mode), and the capacity win at equal pool bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config
+from repro.serve import Request, ServeEngine
+from repro.serve.paging import PageAllocator, PrefixIndex
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("batch_slots", 4)
+    return ServeEngine(model=model, params=params, **kw)
+
+
+def _shared_workload(vocab, *, n_prompts=1, n_requests=4, sys_len=24,
+                     suffix=8, max_new=8, spacing=1, seed=3):
+    """Requests over ``n_prompts`` system prompts with divergent suffixes."""
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, vocab, size=sys_len, dtype=np.int32)
+                   for _ in range(n_prompts)]
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompts[i % n_prompts],
+                         rng.integers(0, vocab, size=suffix,
+                                      dtype=np.int32)]),
+                    max_new=max_new, arrival=i * spacing)
+            for i in range(n_requests)]
+
+
+# --------------------------------------------------------------------------
+# PrefixIndex
+# --------------------------------------------------------------------------
+
+def test_prefix_index_longest_chain_and_cumulative_hashing():
+    ix = PrefixIndex(4)
+    a = np.arange(16, dtype=np.int32)              # 4 full pages
+    ix.insert(a, [7, 2, 9, 5])
+    # full match, partial match, divergence mid-chain
+    assert ix.match(a) == [7, 2, 9, 5]
+    assert ix.match(a[:10]) == [7, 2]              # only full pages match
+    b = a.copy()
+    b[5] = 99                                      # diverge in page 1
+    assert ix.match(b) == [7]
+    # cumulative hashing: identical page content under a different opening
+    # can never alias
+    c = a.copy()
+    c[0] = 99                                      # page 0 differs...
+    assert ix.match(c) == []                       # ...pages 1..3 never match
+
+
+def test_prefix_index_first_writer_wins_and_drop():
+    ix = PrefixIndex(4)
+    a = np.arange(8, dtype=np.int32)
+    ix.insert(a, [1, 2])
+    ix.insert(a, [5, 6])                           # duplicate prefill copy
+    assert ix.match(a) == [1, 2]                   # canonical pages kept
+    ix.drop_pages([1])                             # owner's page released
+    assert ix.match(a) == []                       # chain broken at page 0
+    ix.drop_pages([2, 3])                          # idempotent / unknown ok
+
+
+def test_allocator_share_keeps_pages_live():
+    a = PageAllocator(6)
+    donor = a.alloc(4)
+    a.share(donor[:3])                             # a sharer maps the prefix
+    assert a.free(donor) == [donor[3]]             # private page released
+    assert a.pages_in_use == 3                     # shared prefix survives
+    assert sorted(a.free(donor[:3])) == sorted(donor[:3])
+    assert a.free_pages == 6
+
+
+# --------------------------------------------------------------------------
+# Scheduler: shared admissions — identity, stats, capacity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True],
+                         ids=["fp32", "int8kv"])
+def test_shared_prefix_token_identity(smoke_lm, quantized_kv):
+    """Same system prompt, divergent suffixes and continuations: the shared
+    run must emit exactly the dense and unshared-paged streams, while
+    actually mapping shared pages."""
+    cfg, model, params = smoke_lm
+    reqs = _shared_workload(cfg.vocab)
+    dense = _engine(model, params, quantized_kv=quantized_kv)
+    base, _ = dense.scheduler(chunk_size=8).run(reqs)
+    paged = _engine(model, params, quantized_kv=quantized_kv,
+                    paged_kv=True, page_size=8)
+    shared, s_st = paged.scheduler(chunk_size=8).run(reqs)
+    unshared, u_st = paged.scheduler(chunk_size=8,
+                                     prefix_sharing=False).run(reqs)
+    for i in range(len(reqs)):
+        assert shared[i].tokens == base[i].tokens, (quantized_kv, i)
+        assert unshared[i].tokens == base[i].tokens, (quantized_kv, i)
+    assert s_st.prefix_hits > 0
+    assert s_st.shared_pages_mapped > 0
+    assert u_st.prefix_hits == 0
+    assert s_st.peak_pages_in_use < u_st.peak_pages_in_use
+
+
+def test_full_prompt_duplicate_triggers_cow(smoke_lm):
+    """An identical prompt whose full extent is resident must COW the final
+    page (it re-runs the last token for its first-token logits) — and both
+    the donor's and the sharer's streams must match the dense run."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(7)
+    p = rng.integers(0, cfg.vocab, size=16, dtype=np.int32)  # 2 full pages
+    reqs = [Request(rid=0, prompt=p, max_new=6, arrival=0),
+            Request(rid=1, prompt=p, max_new=6, arrival=1)]
+    dense = _engine(model, params)
+    base, _ = dense.scheduler(chunk_size=8).run(reqs)
+    paged = _engine(model, params, paged_kv=True, page_size=8)
+    got, stats = paged.scheduler(chunk_size=8).run(reqs)
+    assert stats.cow_copies == 1
+    assert stats.prefix_hits == 1
+    assert stats.shared_pages_mapped == 1      # page 0 shared, page 1 COW'd
+    assert got[0].tokens == base[0].tokens     # donor unharmed by the share
+    assert got[1].tokens == base[1].tokens     # sharer bit-identical too
+
+
+def test_sharing_survives_donor_eviction(smoke_lm):
+    """The donor finishes while sharers are live: its shared pages must stay
+    resident (refcount) and indexed, so later same-prefix requests keep
+    matching; streams stay identical to dense."""
+    cfg, model, params = smoke_lm
+    reqs = _shared_workload(cfg.vocab, n_requests=6, max_new=4, spacing=3)
+    dense = _engine(model, params, batch_slots=6)
+    base, _ = dense.scheduler(chunk_size=8).run(reqs)
+    paged = _engine(model, params, batch_slots=6, paged_kv=True, page_size=8)
+    got, stats = paged.scheduler(chunk_size=8).run(reqs)
+    for i in range(6):
+        assert got[i].tokens == base[i].tokens, i
+    assert stats.prefix_hits >= 2
+
+
+def test_sharing_raises_concurrency_at_equal_pool(smoke_lm):
+    """The tentpole's point: at the same pool bytes, sharing admits more
+    concurrent requests than the unshared paged baseline."""
+    cfg, model, params = smoke_lm
+    reqs = _shared_workload(cfg.vocab, n_requests=6, sys_len=24, suffix=8,
+                            max_new=8)
+    # each request: extent max(32 chunk-padded, 40) -> 5 pages of 8;
+    # shared admissions allocate only 2 fresh pages (3 shared)
+    eng = _engine(model, params, batch_slots=6, paged_kv=True, page_size=8,
+                  kv_pool_pages=11)
+    shared, s_st = eng.scheduler(chunk_size=8).run(reqs)
+    unshared, u_st = eng.scheduler(chunk_size=8,
+                                   prefix_sharing=False).run(reqs)
+    assert sorted(shared) == sorted(unshared) == list(range(6))
+    for i in range(6):
+        assert shared[i].tokens == unshared[i].tokens, i
+    assert u_st.peak_live_slots == 2           # 11 pages / 5 per request
+    assert s_st.peak_live_slots >= 3           # donor 5 + sharers 2 each
+    assert s_st.page_stalls < u_st.page_stalls
+
+
+def test_shared_prefix_int8_interpret_e2e(smoke_lm):
+    """Sharing + COW end-to-end through the fused qpaged Pallas kernels in
+    interpret mode: identical streams to the ref-oracle dispatch."""
+    from repro.kernels import ops as kops
+
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(9)
+    sysp = rng.integers(0, cfg.vocab, size=16, dtype=np.int32)
+    reqs = [Request(rid=0, prompt=sysp, max_new=3, arrival=0),
+            Request(rid=1,
+                    prompt=np.concatenate(
+                        [sysp, rng.integers(0, cfg.vocab, size=4,
+                                            dtype=np.int32)]),
+                    max_new=3, arrival=1)]
+    eng = _engine(model, params, max_len=32, batch_slots=2,
+                  quantized_kv=True, paged_kv=True, page_size=8)
+    base, b_st = eng.scheduler(chunk_size=4).run(reqs)
+    prev = kops.FORCE
+    kops.FORCE = "interpret"
+    try:
+        got, stats = eng.scheduler(chunk_size=4).run(reqs)
+    finally:
+        kops.FORCE = prev
+    assert stats.prefix_hits == b_st.prefix_hits == 1
+    assert got[0].tokens == base[0].tokens
+    assert got[1].tokens == base[1].tokens
+
+
+def test_unshared_flag_disables_sharing(smoke_lm):
+    cfg, model, params = smoke_lm
+    reqs = _shared_workload(cfg.vocab)
+    eng = _engine(model, params, paged_kv=True, page_size=8)
+    _, stats = eng.scheduler(chunk_size=8, prefix_sharing=False).run(reqs)
+    assert stats.prefix_hits == 0
+    assert stats.shared_pages_mapped == 0
+    assert stats.cow_copies == 0
