@@ -42,6 +42,15 @@ an equal (tight) pool the shared run must admit ``--min-shared-ratio``
 times the unshared run's peak concurrent requests, or hold >= 30% fewer
 peak pages at the roomy parity pool (``check_shared``).
 
+A fourth sweep (``bench_oversub``) measures **oversubscription**: at the
+same tight pool, lazy decode-page growth + mid-decode preemption
+(``oversubscribe=True``, both ``recompute`` and ``swap`` policies) vs
+up-front worst-case reservation.  Preempt+resume token identity vs the
+dense run is asserted (fp32 and int8 KV) along with ``preemptions > 0``;
+the gate is >= ``--min-oversub-ratio`` times the up-front peak concurrent
+requests at equal pool bytes (``check_oversub``), with p99 TTFT reported
+for both admission modes.
+
 CI-enforced gates (all deterministic or same-run relative):
 
   * the same-run relative gate — chunked must beat one-shot on p99
@@ -49,7 +58,9 @@ CI-enforced gates (all deterministic or same-run relative):
     runner weather);
   * the paged capacity gate (``check_paged``) — deterministic for a
     fixed seed, so effectively exact;
-  * the shared-prefix capacity gate (``check_shared``) — deterministic too.
+  * the shared-prefix capacity gate (``check_shared``) — deterministic too;
+  * the oversubscription capacity gate (``check_oversub``) — deterministic
+    too.
 
 With ``--baseline``, steady tok/s and p99 latency are also compared against
 the checked-in ``benchmarks/baselines/serve_bench.json`` at --tolerance —
@@ -323,6 +334,92 @@ def bench_shared(model, params, vocab, *, smoke=True, seed=0):
     return out
 
 
+def bench_oversub(model, params, vocab, *, smoke=True, seed=0):
+    """Oversubscription sweep: lazy decode-page growth + preemption vs
+    up-front worst-case reservation, at the SAME tight pool.
+
+    Every request carries a long decode horizon (max_new ~= 0.75x prompt),
+    so up-front admission reserves almost half its pages for rows that do
+    not exist yet; lazy admission reserves only the prompt extent and grows
+    one page per crossed boundary, preempting (recompute or swap) when the
+    pool runs dry.  Token identity of both policies vs the dense run is
+    asserted (fp32 and int8 KV); the gate (``check_oversub``) is peak
+    concurrent requests, lazy vs up-front, at equal pool bytes.
+    """
+    if smoke:
+        wl = dict(n_requests=10, plen=64, max_new=48, spacing=1, slots=10,
+                  chunk=32, page=16, pool_pages=21)
+    else:
+        wl = dict(n_requests=20, plen=128, max_new=96, spacing=1, slots=20,
+                  chunk=64, page=16, pool_pages=42)
+    max_len = wl["plen"] + wl["max_new"]
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=wl["plen"],
+                                        dtype=np.int32),
+                    max_new=wl["max_new"], arrival=i * wl["spacing"])
+            for i in range(wl["n_requests"])]
+    out = {"workload": {**wl, "max_len": max_len,
+                        "pool_tokens": wl["pool_pages"] * wl["page"]}}
+    for name in ("fp32", "qkv"):
+        kw = VARIANTS[name]
+        dense = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], **kw)
+        d_res, _ = dense.scheduler(chunk_size=wl["chunk"],
+                                   prefix_sharing=False).run(reqs, seed=seed)
+        tight = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], paged_kv=True,
+                            page_size=wl["page"],
+                            kv_pool_pages=wl["pool_pages"], **kw)
+        u_res, u_st = tight.scheduler(
+            chunk_size=wl["chunk"], prefix_sharing=False).run(reqs, seed=seed)
+        for r in reqs:
+            assert u_res[r.rid].tokens == d_res[r.rid].tokens, (
+                f"upfront/dense token divergence: variant {name} rid {r.rid}")
+        out[name] = {"upfront_peak_live": u_st.peak_live_slots,
+                     "upfront_page_stalls": u_st.page_stalls,
+                     "upfront_page_occupancy": round(u_st.page_occupancy, 4),
+                     "upfront_p99_ttft_steps":
+                         u_st.summary()["p99_ttft_steps"]}
+        for policy in ("recompute", "swap"):
+            o_res, o_st = tight.scheduler(
+                chunk_size=wl["chunk"], prefix_sharing=False,
+                oversubscribe=True, preempt_policy=policy).run(reqs,
+                                                               seed=seed)
+            # acceptance bar: preempt+resume is token-invisible
+            for r in reqs:
+                assert o_res[r.rid].tokens == d_res[r.rid].tokens, (
+                    f"oversub({policy})/dense token divergence: variant "
+                    f"{name} rid {r.rid}")
+            assert o_st.preemptions > 0, (
+                f"oversub({policy})/{name}: pool never ran dry — the "
+                f"workload no longer exercises preemption")
+            ratio = o_st.peak_live_slots / max(u_st.peak_live_slots, 1)
+            osum = o_st.summary()
+            out[name][policy] = {
+                "tokens_identical": True,
+                "peak_live": o_st.peak_live_slots,
+                "oversub_ratio": round(ratio, 3),
+                "grown_pages": o_st.grown_pages,
+                "preemptions": o_st.preemptions,
+                "resumes": o_st.resumes,
+                "swapped_pages": o_st.swapped_pages,
+                "swap_peak_bytes": o_st.swap_peak_bytes,
+                "page_occupancy": round(o_st.page_occupancy, 4),
+                "p99_ttft_steps": osum["p99_ttft_steps"],
+                "tok_s": round(o_st.steady_tok_s, 2),
+            }
+            print(f"oversub/{name:5s} {policy:9s} identity ok | peak live "
+                  f"{u_st.peak_live_slots} -> {o_st.peak_live_slots} "
+                  f"({ratio:.2f}x at equal pool bytes) | grown "
+                  f"{o_st.grown_pages} preempt {o_st.preemptions} "
+                  f"resume {o_st.resumes} swapped {o_st.swapped_pages} | "
+                  f"fill {o_st.page_occupancy:.2f} | p99 ttft "
+                  f"{osum['p99_ttft_steps']} vs "
+                  f"{out[name]['upfront_p99_ttft_steps']} steps")
+    return out
+
+
 def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     cfg = get_config("smollm-135m-smoke")
     model = cfg.build(dtype=jnp.float32, remat="off")
@@ -362,6 +459,8 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
                                    seed=seed)
     results["shared_prefix"] = bench_shared(model, params, cfg.vocab,
                                             smoke=smoke, seed=seed)
+    results["oversub"] = bench_oversub(model, params, cfg.vocab, smoke=smoke,
+                                       seed=seed)
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -457,6 +556,34 @@ def check_shared(results, *, min_shared_ratio: float = 1.5,
     return ok
 
 
+def check_oversub(results, *, min_oversub_ratio: float = 1.3) -> bool:
+    """The oversubscription gate: at equal pool bytes, lazy growth +
+    preemption must hold >= ``min_oversub_ratio`` times the up-front
+    reservation's peak concurrent requests, under BOTH preemption policies.
+    Deterministic for a fixed seed; token identity (preempt+resume is
+    stream-invisible, fp32 and int8 KV) was already asserted inside the
+    run, as was preemptions > 0 (the workload must actually drain the
+    pool)."""
+    ok = True
+    for name, v in results.get("oversub", {}).items():
+        if name == "workload":
+            continue
+        for policy in ("recompute", "swap"):
+            p = v[policy]
+            r = p["oversub_ratio"]
+            if r < min_oversub_ratio:
+                print(f"REGRESSION oversub/{name}/{policy}: ratio {r:.2f}x "
+                      f"< {min_oversub_ratio:.2f}x (upfront peak "
+                      f"{v['upfront_peak_live']}, lazy {p['peak_live']})")
+                ok = False
+            else:
+                print(f"ok oversub/{name}/{policy}: {r:.2f}x "
+                      f"({v['upfront_peak_live']} -> {p['peak_live']} peak "
+                      f"live at equal pool bytes; {p['preemptions']} "
+                      f"preemptions)")
+    return ok
+
+
 def check_baseline(results, baseline_path: str, tolerance: float,
                    *, strict: bool = False) -> bool:
     """Per variant x policy: compare steady tok/s and p99 latency (in
@@ -530,6 +657,9 @@ def main(argv=None):
     ap.add_argument("--min-shared-ratio", type=float, default=1.5,
                     help="prefix-sharing gate floor: shared-vs-unshared "
                          "peak concurrent requests at equal pool bytes")
+    ap.add_argument("--min-oversub-ratio", type=float, default=1.3,
+                    help="oversubscription gate floor: lazy-vs-upfront peak "
+                         "concurrent requests at equal pool bytes")
     ap.add_argument("--strict-baseline", action="store_true",
                     help="make the absolute --baseline comparison a hard "
                          "gate again (default: warn-only — cross-machine "
@@ -543,6 +673,8 @@ def main(argv=None):
                      min_capacity_ratio=args.min_capacity_ratio) and ok
     ok = check_shared(results,
                       min_shared_ratio=args.min_shared_ratio) and ok
+    ok = check_oversub(results,
+                       min_oversub_ratio=args.min_oversub_ratio) and ok
     if args.baseline:
         ok = check_baseline(results, args.baseline, args.tolerance,
                             strict=args.strict_baseline) and ok

@@ -31,6 +31,9 @@ pool + per-slot page tables: admission block-allocates ceil(extent /
 by default in paged mode: requests whose prompt prefix matches resident
 pages map them (refcounted, copy-on-write at the divergence page) instead
 of allocating copies — --no-prefix-sharing measures the unshared baseline.
+--oversubscribe switches admission to lazy decode pages (reserve the prompt
+extent only, grow one page per crossed boundary) with --preempt-policy
+{recompute,swap} deciding what happens when the pool runs dry mid-decode.
 docs/serving.md walks the geometry and the knobs.
 
 Timing is reported as warmup/compile seconds and steady-state tok/s
@@ -85,6 +88,13 @@ def report(name: str, stats) -> None:
         extra += (f" | prefix hits {s['prefix_hits']} "
                   f"(shared {s['shared_pages_mapped']} pages, "
                   f"cow {s['cow_copies']})")
+    if s.get("grown_pages"):
+        extra += (f" | grown {s['grown_pages']} pages "
+                  f"(preempt {s['preemptions']}, resume {s['resumes']}, "
+                  f"swapped {s['swapped_pages']})")
+    if s.get("p99_ttft_steps"):
+        extra += (f" | ttft p50/p99 {s['p50_ttft_steps']:.0f}/"
+                  f"{s['p99_ttft_steps']:.0f} steps")
     print(f"[{name}] warmup(compile) {s['compile_s']:.2f}s | "
           f"steady {s['steady_tok_s']:.1f} tok/s over {s['steady_s']:.3f}s | "
           f"occupancy {s['occupancy']:.2f} | "
@@ -128,6 +138,18 @@ def main(argv=None):
                     help="disable prompt-prefix page sharing in paged mode "
                          "(on by default: same-prefix requests map the same "
                          "pool pages, COW at the divergence page)")
+    ap.add_argument("--oversubscribe", action="store_true",
+                    help="lazy decode pages (paged mode): admission reserves "
+                         "only the prompt extent, decode grows one page per "
+                         "crossed boundary and preempts a victim when the "
+                         "pool runs dry (see --preempt-policy)")
+    ap.add_argument("--preempt-policy", default="recompute",
+                    choices=["recompute", "swap"],
+                    help="mid-decode pool-exhaustion policy (with "
+                         "--oversubscribe): 'recompute' re-queues the victim "
+                         "as a continuation prompt re-prefilled later; "
+                         "'swap' copies its private pages to host memory "
+                         "and restores them bit-exactly on resume")
     ap.add_argument("--time-ticks", action="store_true",
                     help="block per tick and report wall-clock p50/p99 "
                          "request latency (ms)")
@@ -190,7 +212,9 @@ def main(argv=None):
             chunk_size=args.chunk_size if args.policy == "chunked" else None,
             token_budget=(args.token_budget or None)
             if args.policy == "chunked" else None,
-            prefix_sharing=not args.no_prefix_sharing)
+            prefix_sharing=not args.no_prefix_sharing,
+            oversubscribe=args.oversubscribe,
+            preempt_policy=args.preempt_policy)
         results, stats = sched.run(reqs, seed=args.seed,
                                    time_ticks=args.time_ticks)
         report(args.policy, stats)

@@ -522,6 +522,65 @@ def set_page_row(cache: Dict[str, Any], slot: jax.Array, row: jax.Array,
     return dict(cache, page_table=table)
 
 
+def set_page_entry(cache: Dict[str, Any], slot: jax.Array, idx: jax.Array,
+                   page: jax.Array, *, layer_axis: bool = False,
+                   ) -> Dict[str, Any]:
+    """``page_table[slot, idx] = page`` — the lazy decode-growth primitive.
+
+    Oversubscribed admission maps only the prompt-covering pages; when a
+    slot's live length crosses a page boundary mid-decode the scheduler
+    allocates ONE fresh pool page and appends it to the slot's row here
+    (serve/scheduler.py growth loop).  All three indices are traced int32
+    scalars, so one compile serves every (slot, position, page) triple.
+    ``layer_axis``: the table is (L, slots, max_pages) (scan-stacked
+    layers) — every layer gets the same logical assignment.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    idx = jnp.asarray(idx, jnp.int32)
+    table = cache["page_table"]
+    upd = jnp.asarray(page, jnp.int32).reshape(1, 1)
+    if layer_axis:
+        upd = jnp.broadcast_to(upd[None], (table.shape[0], 1, 1))
+        table = jax.lax.dynamic_update_slice(table, upd,
+                                             (jnp.int32(0), slot, idx))
+    else:
+        table = jax.lax.dynamic_update_slice(table, upd, (slot, idx))
+    return dict(cache, page_table=table)
+
+
+def gather_pool_pages(cache: Dict[str, Any], pages: jax.Array,
+                      *, layer_axis: bool = False) -> Dict[str, Any]:
+    """Read whole pool pages out of the K/V pools: the swap-out gather.
+
+    ``pages``: (n,) int32 pool indices (traced — one compile per padded n).
+    Returns ``{"k": (n, ps, Hkv, D), "v": ...}`` (a leading layer dim when
+    ``layer_axis``), raw pool dtype — int8 pages round-trip bit-exactly, so
+    a swap-preempted request resumes with the *identical* quantized rows it
+    was evicted with (no re-quantization drift).
+    """
+    axis = 1 if layer_axis else 0
+    pages = jnp.asarray(pages, jnp.int32)
+    return {"k": jnp.take(cache["k"], pages, axis=axis),
+            "v": jnp.take(cache["v"], pages, axis=axis)}
+
+
+def scatter_pool_pages(cache: Dict[str, Any], pages: jax.Array,
+                       data: Dict[str, Any], *, layer_axis: bool = False,
+                       ) -> Dict[str, Any]:
+    """Write :func:`gather_pool_pages` data back into pool pages ``pages``:
+    the swap-in restore.  Duplicate page indices (the scheduler pads the
+    index vector to a power of two to bound compile shapes) are harmless —
+    they carry duplicate rows of the same content."""
+    pages = jnp.asarray(pages, jnp.int32)
+    if layer_axis:
+        k = cache["k"].at[:, pages].set(data["k"].astype(cache["k"].dtype))
+        v = cache["v"].at[:, pages].set(data["v"].astype(cache["v"].dtype))
+    else:
+        k = cache["k"].at[pages].set(data["k"].astype(cache["k"].dtype))
+        v = cache["v"].at[pages].set(data["v"].astype(cache["v"].dtype))
+    return dict(cache, k=k, v=v)
+
+
 def init_kv_cache(
     batch: int, max_len: int, n_kv_heads: int, head_dim: int,
     *, quantized: bool, dtype=jnp.bfloat16, cache_n: int = 3,

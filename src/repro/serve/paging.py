@@ -21,12 +21,19 @@ with prefix sharing enabled, one :class:`PrefixIndex`) per ``run()``:
   list only when its refcount hits zero, so a prefix another live request
   still maps survives its original owner.  Reused pages mean external
   fragmentation stays zero by construction; internal fragmentation is
-  bounded by one page per request and reported via ``page_occupancy``.
+  bounded by one page per request and reported via ``page_occupancy``;
+* under **oversubscription** (``Scheduler(oversubscribe=True)``) admission
+  reserves only the prompt-covering pages and decode grows the slot one
+  page at a time; when growth finds the pool empty the scheduler preempts a
+  victim, and with ``preempt_policy="swap"`` the victim's *private* pages
+  are copied into a host-side :class:`SwapArea` until they can be restored
+  (shared prefix pages are never swapped — their refcount keeps them
+  resident for the other sharers).
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -144,8 +151,14 @@ class PrefixIndex:
         self._page_of: Dict[bytes, int] = {}    # cumulative hash -> pool page
         self._key_of: Dict[int, bytes] = {}     # pool page -> its index key
 
-    def _keys(self, prompt) -> List[bytes]:
-        """Cumulative sha1 digests, one per *full* prompt page."""
+    def digests(self, prompt) -> List[bytes]:
+        """Cumulative sha1 digests, one per *full* prompt page.
+
+        Hashing is O(prompt) — the scheduler computes this once per request
+        and reuses the digests across page-stalled admission retries and the
+        post-prefill :meth:`insert_keys` (a deferred request must not
+        re-hash its whole prompt every tick).
+        """
         arr = np.asarray(prompt, np.int32).reshape(-1)
         ps = self.page_size
         h = hashlib.sha1()
@@ -155,6 +168,16 @@ class PrefixIndex:
             out.append(h.digest())
         return out
 
+    def match_keys(self, keys: Sequence[bytes]) -> List[int]:
+        """Longest resident page chain for precomputed :meth:`digests`."""
+        pages: List[int] = []
+        for key in keys:
+            page = self._page_of.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
     def match(self, prompt) -> List[int]:
         """Longest chain of resident pool pages holding this prompt's prefix.
 
@@ -162,13 +185,15 @@ class PrefixIndex:
         page up to m matched; the caller maps them (and ``share``s their
         refcounts) into the new slot's table.
         """
-        pages: List[int] = []
-        for key in self._keys(prompt):
-            page = self._page_of.get(key)
-            if page is None:
-                break
-            pages.append(page)
-        return pages
+        return self.match_keys(self.digests(prompt))
+
+    def insert_keys(self, keys: Sequence[bytes],
+                    pages: Sequence[int]) -> None:
+        """Register precomputed :meth:`digests` against their pool pages."""
+        for key, page in zip(keys, pages):
+            if key not in self._page_of:
+                self._page_of[key] = page
+                self._key_of[page] = key
 
     def insert(self, prompt, pages: Sequence[int]) -> None:
         """Register ``prompt``'s full prompt pages (after its prefill).
@@ -178,10 +203,7 @@ class PrefixIndex:
         keeps its existing page, so concurrent identical prompts converge on
         one shared copy.
         """
-        for key, page in zip(self._keys(prompt), pages):
-            if key not in self._page_of:
-                self._page_of[key] = page
-                self._key_of[page] = key
+        self.insert_keys(self.digests(prompt), pages)
 
     def drop_pages(self, pages: Sequence[int]) -> None:
         """Retire index entries whose pages the allocator just released."""
@@ -189,3 +211,61 @@ class PrefixIndex:
             key = self._key_of.pop(p, None)
             if key is not None and self._page_of.get(key) == p:
                 del self._page_of[key]
+
+
+def _tree_bytes(data: Any) -> int:
+    """Host bytes held by a nested list/dict tree of numpy arrays."""
+    if data is None:
+        return 0
+    if isinstance(data, dict):
+        return sum(_tree_bytes(v) for v in data.values())
+    if isinstance(data, (list, tuple)):
+        return sum(_tree_bytes(v) for v in data)
+    return int(getattr(data, "nbytes", 0))
+
+
+class SwapArea:
+    """Host-side buffer for preempted requests' swapped-out KV pages.
+
+    The ``preempt_policy="swap"`` half of oversubscription: when the pool
+    runs dry mid-decode, the victim's *private* pages (refcount 1) are
+    gathered device->host into this area and freed; its shared prefix pages
+    stay resident (the refcount the victim keeps holding pins them for the
+    other sharers — swapping a shared page would yank it from under live
+    requests).  On resume the scheduler allocates fresh pages, scatters the
+    saved contents back, and rebuilds the victim's table row.
+
+    Purely host-side bookkeeping (numpy trees keyed by request id); the
+    device gather/scatter primitives live in nn/attention.py
+    (``gather_pool_pages`` / ``scatter_pool_pages``).  ``peak_bytes`` is the
+    reporting hook: swap traffic is the cost knob the serve bench surfaces
+    next to the admission win.
+    """
+
+    def __init__(self):
+        """Create an empty swap area."""
+        self._data: Dict[int, Any] = {}
+        self.bytes_held = 0
+        self.peak_bytes = 0
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def put(self, rid: int, data: Any) -> None:
+        """Park ``rid``'s swapped page contents (a numpy tree)."""
+        if rid in self._data:
+            raise ValueError(f"request {rid} already swapped out")
+        self._data[rid] = data
+        self.bytes_held += _tree_bytes(data)
+        self.peak_bytes = max(self.peak_bytes, self.bytes_held)
+
+    def pop(self, rid: int) -> Any:
+        """Take ``rid``'s parked page contents back for restore."""
+        if rid not in self._data:
+            raise KeyError(f"request {rid} has no swapped pages")
+        data = self._data.pop(rid)
+        self.bytes_held -= _tree_bytes(data)
+        return data

@@ -41,6 +41,20 @@ the same jitted prefill/decode steps:
   privatizes a shared divergence page by copy-on-write before any write —
   N same-system-prompt requests hold one copy of the prefix, the
   per-pool-byte capacity win serve_bench gates;
+* **oversubscription** (``oversubscribe=True``, paged only): admission
+  reserves only the prompt-covering pages instead of the full
+  ``prompt+max_new`` extent; decode *grows* each slot's page-table row one
+  page at a time as its live length crosses page boundaries (the
+  ``set_page_entry`` jitted update).  When growth finds the pool empty the
+  scheduler **preempts** a victim — least decode progress first, most
+  recent admission breaking ties, with an aging bound so no request is
+  starved by repeated eviction.  ``preempt_policy="recompute"`` harvests
+  the victim's generated tokens and re-queues it as a continuation prompt
+  (prompt + generated so far) re-prefilled through the chunked path;
+  ``"swap"`` copies its *private* pages to a host-side ``SwapArea``
+  (shared prefix pages stay resident under their refcount) and restores
+  them as soon as a slot and pages free up.  Both policies keep greedy
+  decode token-identical to the unpreempted run;
 * **EncDec serving** (chunked only): each request carries its encoder
   output (``Request.enc``); the scheduler keeps a per-slot encoder buffer
   and threads it through the jitted decode/mixed steps, so every slot
@@ -71,11 +85,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn.attention import (copy_kv_page, reset_kv_slot, set_kv_slot_len,
-                                set_page_row, write_kv_slot)
+from repro.nn.attention import (copy_kv_page, gather_pool_pages,
+                                reset_kv_slot, scatter_pool_pages,
+                                set_kv_slot_len, set_page_entry, set_page_row,
+                                write_kv_slot)
 from repro.serve.engine import (make_decode_step, make_mixed_step,
                                 make_prefill_step, sample_tokens)
-from repro.serve.paging import PageAllocator, PrefixIndex
+from repro.serve.paging import PageAllocator, PrefixIndex, SwapArea
 
 
 # --------------------------------------------------------------------------
@@ -151,6 +167,26 @@ class ServeStats:
     #                             compares paged vs dense on
     page_util_sum: float = 0.0  # paged KV: per-tick live tokens / resident
     page_util_ticks: int = 0    # pool tokens (internal-fragmentation gauge)
+    grown_pages: int = 0        # oversubscription: decode pages allocated
+    #                             lazily, one per page-boundary crossing
+    preemptions: int = 0        # oversubscription: slots evicted mid-decode
+    #                             because growth/admission found the pool dry
+    resumes: int = 0            # swap policy: preempted requests restored
+    swapped_pages: int = 0      # swap policy: private pages copied to host
+    swap_peak_bytes: int = 0    # swap policy: SwapArea high-water mark
+    resume_stalls: int = 0      # swap policy: ticks the oldest preempted
+    #                             request waited for a free slot + pages
+    truncations: int = 0        # oversize="truncate": requests whose max_new
+    #                             was clamped to the page-table width
+    preempted_rids: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #                             rid -> times preempted (aging-bound audit)
+    truncated_rids: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #                             rid -> granted max_new (per-request warning
+    #                             record for oversize="truncate")
+    ttft_steps: List[int] = dataclasses.field(default_factory=list)
+    #                             per request: first-admission tick - arrival
+    #                             (first leg only — a preempted request's
+    #                             first token was already served)
 
     @property
     def steady_tok_s(self) -> float:
@@ -168,9 +204,12 @@ class ServeStats:
 
         1.0 = every resident pool token is a live K/V row; the gap is
         internal fragmentation (last-page waste + decode headroom reserved
-        but not yet generated).  0.0 when the run was not paged.  Prefix
-        sharing can push it past 1.0 — several requests' live logical rows
-        backed by one resident page is exactly the capacity win.
+        but not yet generated — oversubscription exists to close the
+        latter).  0.0 when the run was not paged.  Sharing-aware: a pool
+        page mapped by several slots counts once, filled to the *deepest*
+        live row over its mappers, so the gauge stays a meaningful 0..1
+        signal under prefix sharing (it used to double-count shared rows
+        and read past 1.0).
         """
         return self.page_util_sum / max(self.page_util_ticks, 1)
 
@@ -201,6 +240,17 @@ class ServeStats:
             "prefix_hits": self.prefix_hits,
             "shared_pages_mapped": self.shared_pages_mapped,
             "cow_copies": self.cow_copies,
+            "grown_pages": self.grown_pages,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "swapped_pages": self.swapped_pages,
+            "swap_peak_bytes": self.swap_peak_bytes,
+            "resume_stalls": self.resume_stalls,
+            "truncations": self.truncations,
+            "p50_ttft_steps": float(np.percentile(
+                np.asarray(self.ttft_steps or [0]), 50)),
+            "p99_ttft_steps": float(np.percentile(
+                np.asarray(self.ttft_steps or [0]), 99)),
         }
 
 
@@ -208,11 +258,15 @@ class ServeStats:
 class _Slot:
     req: Request
     admitted_at: int
+    plen: int = 0                # this leg's prompt length (a recompute
+    #                              continuation's includes carried tokens)
     emitted: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)  # sync mode
     first: Any = None            # async mode: (1,1) device first token
-    cols: List[int] = dataclasses.field(default_factory=list)
-    # async mode: per emitted decode token, its column in the step matrix
+    cols: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # async mode: per emitted decode token, its (slot row, column) in the
+    # step matrix — the row is recorded per token because a swap-resumed
+    # request may land in a different slot index
 
 
 @dataclasses.dataclass
@@ -224,6 +278,45 @@ class _Prefill:
     slot: int
     prompt: np.ndarray           # (P,) int32
     next_start: int = 0          # first row of the next chunk
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """Swap-policy parking state for one preempted request: everything the
+    scheduler needs to resume it bit-exactly once a slot and pages free up."""
+
+    slot: _Slot                  # the live-slot state, carried across
+    kept: List[int]              # shared prefix pages still resident (the
+    #                              refcount this request keeps holding)
+    n_priv: int                  # private pages swapped out (to re-alloc)
+    data: Any                    # host tree of the private pages' contents
+    #                              (None when n_priv == 0)
+    pad: int                     # padded page-vector length of ``data``
+    live_len: int                # cache len at preemption (rows written)
+    last_tok: Any                # (1, 1) device token feeding the next step
+
+
+def pick_preemption_victim(candidates: Sequence[Tuple[int, int, int, int]],
+                           counts: Dict[int, int], bound: int,
+                           ) -> Optional[int]:
+    """Choose which live slot to preempt; None when there are no candidates.
+
+    ``candidates``: (slot_index, rid, emitted, admitted_at) per live slot.
+    Starvation-free by an aging bound: a request already preempted
+    ``bound`` or more times is only chosen when *every* candidate is (so
+    re-admission is bounded — the victim eventually runs to completion).
+    Among eligible candidates the least decode progress goes first (least
+    recomputation/swap traffic wasted), most recent admission breaking ties
+    (FIFO fairness: the oldest admissions finish first).
+    """
+    if not candidates:
+        return None
+
+    def key(c):
+        j, rid, emitted, admitted_at = c
+        return (counts.get(rid, 0) >= bound, emitted, -admitted_at, j)
+
+    return min(candidates, key=key)[0]
 
 
 # --------------------------------------------------------------------------
@@ -295,6 +388,38 @@ def copy_cache_page(cache, src, dst):
         cache, lambda kv, la: copy_kv_page(kv, src, dst, layer_axis=la))
 
 
+def set_cache_page_entry(cache, slot, idx, page):
+    """``page_table[slot, idx] = page`` in every layer of a paged cache tree
+    — the lazy decode-growth append (oversubscription)."""
+    return _map_slot_op(
+        cache, lambda kv, la: set_page_entry(kv, slot, idx, page,
+                                             layer_axis=la))
+
+
+def gather_cache_pages(cache, pages):
+    """Swap-out gather: read pool pages ``pages`` out of every layer's K/V
+    pools.  Returns a list of ``{"k", "v"}`` page stacks in the cache tree's
+    deterministic traversal order (``scatter_cache_pages`` consumes the same
+    order) — the cache itself is not modified."""
+    out = []
+
+    def op(kv, la):
+        out.append(gather_pool_pages(kv, pages, layer_axis=la))
+        return kv
+
+    _map_slot_op(cache, op)
+    return out
+
+
+def scatter_cache_pages(cache, pages, data):
+    """Swap-in restore: write ``gather_cache_pages`` data back into pool
+    pages ``pages`` of every layer (same traversal order)."""
+    it = iter(data)
+    return _map_slot_op(
+        cache, lambda kv, la: scatter_pool_pages(kv, pages, next(it),
+                                                 layer_axis=la))
+
+
 def set_cache_slot_len(cache, slot, length):
     """Set ``len[slot] = length`` in every layer of a per-slot cache tree.
 
@@ -345,6 +470,27 @@ class Scheduler:
     copy-on-write before its first write.  Disable to measure the unshared
     baseline (serve_bench's shared-prefix gate does exactly that).
 
+    ``oversubscribe`` (paged only): admission reserves only the
+    prompt-covering (chunk-padded) pages; decode pages are allocated lazily,
+    one page per boundary crossing, and pool exhaustion mid-decode preempts
+    a victim under ``preempt_policy`` — ``"recompute"`` (re-queue the
+    victim as a continuation prompt, re-prefilled through the chunked path)
+    or ``"swap"`` (park its private pages host-side in a ``SwapArea`` and
+    restore them when pages free up; shared prefix pages stay resident).
+    ``preempt_aging`` bounds how often one request may be re-preempted
+    before it becomes ineligible (starvation freedom).  Token streams stay
+    identical to the unpreempted run under greedy decoding (temperature 0,
+    the default); with sampling, preemption re-randomizes the tail of the
+    victim's stream (documented, not asserted).
+
+    ``oversize`` controls requests whose ``prompt+max_new`` extent exceeds
+    the page-table width (``kv_max_pages * page_size``) or dense
+    ``max_len``: ``"reject"`` (default) raises at ``run()``; ``"truncate"``
+    clamps ``max_new`` to what the table can hold and records the clamp in
+    ``ServeStats.truncated_rids``.  Either way the failure is *loud* — the
+    silent page-plan clamp that used to drop KV rows past the table edge
+    (decoding garbage attention) is gone.
+
     EncDec models (anything with an ``encode`` method) serve through the
     chunked path only, with every request carrying its own encoder output
     (``Request.enc``); the scheduler keeps a per-slot ``(slots, S_enc, D)``
@@ -362,7 +508,11 @@ class Scheduler:
                  pad_id: int = 0, prompt_bucket: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 oversubscribe: bool = False,
+                 preempt_policy: str = "recompute",
+                 preempt_aging: int = 2,
+                 oversize: str = "reject"):
         """Bind the scheduler's jitted steps to ``engine`` (see class doc)."""
         self.engine = engine
         self.eos_id = eos_id
@@ -372,7 +522,26 @@ class Scheduler:
         self.token_budget = token_budget
         self.paged = bool(getattr(engine, "paged_kv", False))
         self.prefix_sharing = bool(prefix_sharing) and self.paged
+        self.oversubscribe = bool(oversubscribe)
+        self.preempt_policy = preempt_policy
+        self.preempt_aging = int(preempt_aging)
+        self.oversize = oversize
         self.encdec = hasattr(engine.model, "encode")
+        if self.oversubscribe and not self.paged:
+            raise ValueError(
+                "oversubscribe=True requires a paged engine "
+                "(ServeEngine(paged_kv=True)): lazy decode pages grow a "
+                "page table, dense slabs have nothing to grow")
+        if preempt_policy not in ("recompute", "swap"):
+            raise ValueError(
+                f"preempt_policy must be 'recompute' or 'swap', "
+                f"got {preempt_policy!r}")
+        if self.preempt_aging < 1:
+            raise ValueError(
+                f"preempt_aging must be >= 1, got {preempt_aging}")
+        if oversize not in ("reject", "truncate"):
+            raise ValueError(
+                f"oversize must be 'reject' or 'truncate', got {oversize!r}")
         if chunk_size is not None and chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         if self.paged and chunk_size is None:
@@ -434,18 +603,35 @@ class Scheduler:
             def set_pages(cache, slot, row):
                 return set_cache_page_row(cache, slot, row)
 
+            def set_len(cache, slot, length):
+                return set_cache_slot_len(cache, slot, length)
+
+            def append_page(cache, slot, idx, page):
+                return set_cache_page_entry(cache, slot, idx, page)
+
             self._set_pages = jax.jit(set_pages, donate_argnums=(0,))
-            self._jits.append(self._set_pages)
+            self._set_len = jax.jit(set_len, donate_argnums=(0,))
+            self._append_page = jax.jit(append_page, donate_argnums=(0,))
+            self._jits += [self._set_pages, self._set_len, self._append_page]
         if self.prefix_sharing:
             def copy_page(cache, src, dst):
                 return copy_cache_page(cache, src, dst)
 
-            def set_len(cache, slot, length):
-                return set_cache_slot_len(cache, slot, length)
-
             self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
-            self._set_len = jax.jit(set_len, donate_argnums=(0,))
-            self._jits += [self._copy_page, self._set_len]
+            self._jits.append(self._copy_page)
+        if self.oversubscribe and self.preempt_policy == "swap":
+            def gather_pages(cache, pages):
+                return gather_cache_pages(cache, pages)
+
+            def scatter_pages(cache, pages, data):
+                return scatter_cache_pages(cache, pages, data)
+
+            # gather must NOT donate: the cache stays live (only page
+            # contents are read out); scatter donates like every other
+            # cache update
+            self._gather_pages = jax.jit(gather_pages)
+            self._scatter_pages = jax.jit(scatter_pages, donate_argnums=(0,))
+            self._jits += [self._gather_pages, self._scatter_pages]
         if self.encdec:
             def set_enc(buf, row, slot):
                 return jax.lax.dynamic_update_slice(
@@ -506,8 +692,11 @@ class Scheduler:
     def _pages_needed(self, plen: int, max_new: int) -> int:
         """Pages covering a request's full extent: the chunk-padded prompt
         rows (the last chunk writes C rows even when partially valid) or
-        prompt+decode tokens, whichever is larger — allocated once at
-        admission so decode can never hit page exhaustion mid-request."""
+        prompt+decode tokens, whichever is larger — what up-front admission
+        reserves so decode can never hit page exhaustion mid-request.
+        Under oversubscription this is still the request's *worst-case*
+        footprint (the pool-size feasibility floor), just no longer what
+        admission takes up front."""
         c = self.chunk_size
         extent = max(-(-plen // c) * c, plen + max_new)
         return -(-extent // self.engine.page_size)
@@ -519,19 +708,31 @@ class Scheduler:
         return jnp.asarray(row)
 
     def _plan_admission(self, r: Request, plen: int, alloc: PageAllocator,
-                        index: Optional[PrefixIndex]):
+                        index: Optional[PrefixIndex],
+                        keys: Optional[List[bytes]] = None):
         """Page plan for admitting ``r``: match, share, allocate, COW — or
         None when the pool cannot serve the fresh-page balance (page stall).
 
         With sharing, the request maps the longest resident prefix chain
         (full prompt pages only) and prefills from the divergence point
-        ``next_start``.  A matched page the request must still write —
-        only the final prompt page, when the *whole* prompt is resident and
-        the last token is re-run for its first-token logits — is privatized
-        up front: a fresh page is allocated, the shared page's rows are
-        copied, and the table row points at the copy (copy-on-write; eager
-        because the write is certain, and pre-reserving keeps admission
-        all-or-nothing so decode can never exhaust the pool mid-request).
+        ``next_start``.  ``keys`` are the request's precomputed prompt
+        digests (``PrefixIndex.digests``) — the scheduler caches them per
+        request so a page-stalled admission retried every tick does not
+        re-hash its whole prompt every time.  A matched page the request
+        must still write — only the final prompt page, when the *whole*
+        prompt is resident and the last token is re-run for its first-token
+        logits — is privatized up front: a fresh page is allocated, the
+        shared page's rows are copied, and the table row points at the copy
+        (copy-on-write; eager because the write is certain).
+
+        Up-front mode reserves the full ``max(chunk_end, plen+max_new)``
+        extent so decode can never exhaust the pool; oversubscription
+        reserves only through ``chunk_end`` (the prompt's padded chunk
+        writes) and leaves decode pages to the lazy growth loop.  The page
+        count is clamped to the table width only when the overflow rows are
+        *droppable chunk padding* (the device scatter's OOB sentinel); a
+        plan that cannot cover the request's real rows raises — the silent
+        clamp that used to drop live KV here is the bug this replaces.
 
         Returns ``(row_pages, copies, n_share, next_start)``: the table row
         in logical order, the (src, dst) device copies to enqueue, how many
@@ -539,18 +740,39 @@ class Scheduler:
         """
         ps = self.engine.page_size
         C = self.chunk_size
-        matched = index.match(r.prompt) if index is not None else []
+        if index is None:
+            matched = []
+        elif keys is not None:
+            matched = index.match_keys(keys)
+        else:
+            matched = index.match(r.prompt)
         s0 = len(matched) * ps
         # always prefill >= 1 token: the last chunk's logits sample the
         # request's first generated token
         next_start = min(s0, plen - 1)
-        # pages covering the padded chunk writes and the decode horizon
-        # (chunks write C rows from next_start, so the write extent shifts
-        # with the shared prefix); rows past the table are sentinel-dropped,
-        # so the plan never exceeds the table width
+        # pages covering the padded chunk writes (chunks write C rows from
+        # next_start, so the write extent shifts with the shared prefix)
+        # and, in up-front mode, the decode horizon
         chunk_end = next_start + -(-(plen - next_start) // C) * C
-        extent = max(chunk_end, plen + r.max_new)
-        total = min(-(-extent // ps), self.engine.kv_max_pages)
+        if self.oversubscribe:
+            extent, required = chunk_end, plen
+        else:
+            extent, required = max(chunk_end, plen + r.max_new), \
+                plen + r.max_new
+        total = -(-extent // ps)
+        if total > self.engine.kv_max_pages:
+            # rows past the table edge are sentinel-dropped by the device
+            # scatter — benign for padded chunk tails, fatal for real rows
+            total = self.engine.kv_max_pages
+        if total * ps < required:
+            raise ValueError(
+                f"request {r.rid}: the page plan covers {total * ps} rows "
+                f"(page-table width {self.engine.kv_max_pages} pages x "
+                f"{ps}) but the request needs {required} "
+                f"(prompt {plen}{'' if self.oversubscribe else f' + max_new {r.max_new}'}) "
+                f"— the overflow rows would be silently dropped by the "
+                f"out-of-bounds sentinel and the request would decode "
+                f"garbage attention; raise max_len or shrink the request")
         first_write_page = next_start // ps
         n_share = min(len(matched), first_write_page)
         copies_src = matched[n_share:]          # divergence page(s) to COW
@@ -619,10 +841,12 @@ class Scheduler:
                         eng.kv_num_pages)
                 cache = self._set_pages(cache, slot0,
                                         self._page_row(list(range(n))))
+                cache = self._append_page(cache, slot0, jnp.int32(n - 1),
+                                          jnp.int32(n - 1))
+                cache = self._set_len(cache, slot0, jnp.int32(0))
                 if self.prefix_sharing:
                     cache = self._copy_page(cache, jnp.int32(0),
                                             jnp.int32(n - 1))
-                    cache = self._set_len(cache, slot0, jnp.int32(0))
             ctok = jnp.full((1, self.chunk_size), self.pad_id, jnp.int32)
             tok, first, cache = self._masked_mixed(
                 eng.params, tok, cache, rng, active, ctok, slot0,
@@ -668,10 +892,15 @@ class Scheduler:
         eng = self.engine
         nslots = eng.batch_slots
         C = self.chunk_size
+        stats = ServeStats()
         plen_of: Dict[int, int] = {}
+        checked: List[Request] = []
         for r in requests:
             plen = int(np.asarray(r.prompt).reshape(-1).shape[0])
-            plen_of[r.rid] = plen
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            if plen < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
             if self.encdec and r.enc is None:
                 raise ValueError(
                     f"request {r.rid}: EncDec serving needs the request's "
@@ -688,11 +917,26 @@ class Scheduler:
                 # chunk padding only has to fit allocatable pages
                 cap = eng.kv_max_pages * eng.page_size if self.paged \
                     else eng.max_len
+                if plen + r.max_new > cap and self.oversize == "truncate" \
+                        and max(rows, plen + 1) <= cap:
+                    granted = cap - plen
+                    print(f"serve: request {r.rid}: truncating max_new "
+                          f"{r.max_new} -> {granted} (prompt {plen} + "
+                          f"horizon exceeds table capacity {cap})")
+                    stats.truncations += 1
+                    stats.truncated_rids[r.rid] = granted
+                    r = dataclasses.replace(r, max_new=granted)
                 if max(rows, plen + r.max_new) > cap:
+                    # the loud half of the page-table-edge fix: rows past
+                    # the table width would be sentinel-dropped on device
+                    # and the request would silently decode garbage
                     raise ValueError(
                         f"request {r.rid}: prompt {plen} (chunk-padded to "
                         f"{rows}) + max_new {r.max_new} exceeds cache "
-                        f"capacity {cap} (max_len {eng.max_len})")
+                        f"capacity {cap} (max_len {eng.max_len}); its KV "
+                        f"rows past the table edge would be dropped and it "
+                        f"would decode garbage — shrink the request, raise "
+                        f"max_len, or use oversize='truncate'")
             elif self._bucket(plen) + r.max_new > eng.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt {plen} (+bucket) + max_new "
@@ -705,10 +949,10 @@ class Scheduler:
                         f"holds {eng.kv_num_pages} — it could never be "
                         f"admitted (raise kv_pool_pages or shrink the "
                         f"request)")
-            if r.max_new < 1:
-                raise ValueError(f"request {r.rid}: max_new must be >= 1")
-            if plen < 1:
-                raise ValueError(f"request {r.rid}: empty prompt")
+            plen_of[r.rid] = plen
+            checked.append(r)
+        requests = checked
+        orig_plen = dict(plen_of)   # recompute preemption moves plen_of
 
         enc_buf = None
         enc_of: Dict[int, jax.Array] = {}
@@ -734,7 +978,6 @@ class Scheduler:
             enc_buf = jnp.zeros((nslots,) + one[1:],
                                 next(iter(enc_of.values())).dtype)
 
-        stats = ServeStats()
         if warmup:
             stats.compile_s = self.warmup(
                 [np.asarray(r.prompt).reshape(-1).shape[0]
@@ -758,7 +1001,23 @@ class Scheduler:
         alloc = PageAllocator(eng.kv_num_pages) if self.paged else None
         index = PrefixIndex(eng.page_size) if self.prefix_sharing else None
         slot_pages: Dict[int, List[int]] = {}
+        prompt_keys: Dict[int, List[bytes]] = {}   # rid -> cached digests
+        carry: Dict[int, List[int]] = {}     # recompute: earlier legs' tokens
+        first_admit: Dict[int, int] = {}     # rid -> first admission tick
+        preempted: List[_Preempted] = []     # swap policy: parked requests
+        swap = SwapArea() if (self.oversubscribe
+                              and self.preempt_policy == "swap") else None
         t = 0
+
+        def digests_of(r: Request) -> Optional[List[bytes]]:
+            """Prompt page digests, hashed once per request (satellite #2)."""
+            if index is None:
+                return None
+            keys = prompt_keys.get(r.rid)
+            if keys is None:
+                keys = index.digests(r.prompt)
+                prompt_keys[r.rid] = keys
+            return keys
 
         def finish(j: int, slot: _Slot, eos: bool):
             nonlocal cache
@@ -785,15 +1044,20 @@ class Scheduler:
 
         def admit_live(j: int, r: Request, first):
             """Slot j goes live holding its freshly sampled first token."""
-            slot = _Slot(req=r, admitted_at=t, emitted=1, first=first)
+            slot = _Slot(req=r, admitted_at=t, plen=plen_of[r.rid],
+                         emitted=1, first=first)
             slots[j] = slot
             stats.tokens_out += 1
+            if r.rid not in first_admit:
+                first_admit[r.rid] = t
+                stats.ttft_steps.append(t - r.arrival)
             if index is not None and j in slot_pages:
                 # prefill complete: this slot's full prompt pages become
-                # donor candidates for later same-prefix admissions
-                index.insert(r.prompt,
-                             slot_pages[j][:plen_of[r.rid]
-                                           // eng.page_size])
+                # donor candidates for later same-prefix admissions (the
+                # digests were cached at admission — no re-hash here)
+                index.insert_keys(digests_of(r),
+                                  slot_pages[j][:plen_of[r.rid]
+                                                // eng.page_size])
             if use_eos:
                 first_id = int(np.asarray(first)[0, 0])
                 slot.tokens.append(first_id)
@@ -802,14 +1066,184 @@ class Scheduler:
             elif r.max_new == 1:
                 finish(j, slot, False)
 
+        def requeue(r: Request) -> None:
+            """Put a request back into the queue in (arrival, rid) order."""
+            items = list(queue)
+            items.append(r)
+            items.sort(key=lambda q: (q.arrival, q.rid))
+            queue.clear()
+            queue.extend(items)
+
+        def harvest_slot_tokens(slot: _Slot) -> List[int]:
+            """Tokens this leg emitted so far (device sync in async mode)."""
+            if use_eos:
+                return list(slot.tokens)
+            out = [int(np.asarray(slot.first)[0, 0])]
+            for row, c in slot.cols:
+                out.append(int(np.asarray(step_cols[c])[row, 0]))
+            return out
+
+        def preempt(j: int) -> None:
+            """Evict live slot j mid-decode to hand its pages to someone else.
+
+            ``recompute``: the victim's generated tokens so far are banked in
+            ``carry`` and the request re-queues as a continuation whose prompt
+            is original-prompt + generated-tokens — the existing chunked
+            prefill rebuilds its KV (and, under greedy decoding, continues
+            the exact token stream).  ``swap``: its private pages are copied
+            to the host SwapArea and restored verbatim on resume; shared
+            prefix pages stay resident (refcount held) and are never moved.
+            """
+            nonlocal cache
+            slot = slots[j]
+            rid = slot.req.rid
+            stats.preemptions += 1
+            stats.preempted_rids[rid] = stats.preempted_rids.get(rid, 0) + 1
+            pages = slot_pages.pop(j)
+            if swap is not None:
+                # COW admission keeps shared mappings a contiguous row
+                # prefix; split it from the private tail
+                m = 0
+                while m < len(pages) and alloc.refcount(pages[m]) > 1:
+                    m += 1
+                kept, priv = pages[:m], pages[m:]
+                assert all(alloc.refcount(p) == 1 for p in priv), \
+                    "shared page past the private tail — refcount layout bug"
+                data, pad = None, 0
+                if priv:
+                    # pow2-pad the gather so swap traffic reuses a handful
+                    # of compiled shapes instead of one per page count
+                    pad = 1
+                    while pad < len(priv):
+                        pad *= 2
+                    idx = jnp.asarray(priv + [priv[0]] * (pad - len(priv)),
+                                      jnp.int32)
+                    # device_get blocks: the host copy is complete before
+                    # the pages re-enter the free list below
+                    data = jax.device_get(self._gather_pages(cache, idx))
+                    stats.swapped_pages += len(priv)
+                swap.put(rid, data)
+                stats.swap_peak_bytes = swap.peak_bytes
+                preempted.append(_Preempted(
+                    slot=slot, kept=kept, n_priv=len(priv), data=data,
+                    pad=pad, live_len=slot.plen + slot.emitted - 1,
+                    last_tok=tok[j:j + 1]))
+                cache = self._evict(cache, jnp.int32(j))
+                released = alloc.free(priv)    # kept pages: refs retained
+                if index is not None:
+                    index.drop_pages(released)
+            else:
+                toks = harvest_slot_tokens(slot)
+                carry[rid] = carry.get(rid, []) + toks
+                remaining = slot.req.max_new - slot.emitted   # >= 1 here
+                cont_prompt = np.concatenate(
+                    [np.asarray(slot.req.prompt, np.int32).reshape(-1),
+                     np.asarray(toks, np.int32)])
+                plen_of[rid] = int(cont_prompt.shape[0])
+                prompt_keys.pop(rid, None)     # digests are stale now
+                cache = self._evict(cache, jnp.int32(j))
+                released = alloc.free(pages)
+                if index is not None:
+                    index.drop_pages(released)
+                requeue(dataclasses.replace(slot.req, prompt=cont_prompt,
+                                            max_new=remaining))
+            slots[j] = None
+
+        def try_resume() -> None:
+            """Restore parked (swap-policy) requests, FIFO, while room lasts."""
+            nonlocal cache, tok, enc_buf
+            while preempted:
+                p = preempted[0]
+                free = [j for j in range(nslots) if slots[j] is None
+                        and (prefill is None or prefill.slot != j)]
+                if not free:
+                    stats.resume_stalls += 1
+                    return
+                got = alloc.alloc(p.n_priv)
+                if got is None:
+                    stats.resume_stalls += 1
+                    return
+                j = free[0]
+                rid = p.slot.req.rid
+                data = swap.pop(rid)
+                if p.n_priv:
+                    # dup-pad the scatter to the gather's pow2 shape; the
+                    # duplicate indices rewrite the same page with the same
+                    # contents, which is idempotent
+                    idx = jnp.asarray(got + [got[0]] * (p.pad - p.n_priv),
+                                      jnp.int32)
+                    cache = self._scatter_pages(cache, idx, data)
+                row = p.kept + got
+                slot_pages[j] = row
+                cache = self._set_pages(cache, jnp.int32(j),
+                                        self._page_row(row))
+                cache = self._set_len(cache, jnp.int32(j),
+                                      jnp.int32(p.live_len))
+                tok = self._set_tok(tok, p.last_tok, jnp.int32(j))
+                if enc_buf is not None:
+                    enc_buf = self._set_enc(enc_buf, enc_of[rid],
+                                            jnp.int32(j))
+                if index is not None and rid in prompt_keys:
+                    index.insert_keys(prompt_keys[rid],
+                                      row[:p.slot.plen // eng.page_size])
+                slots[j] = p.slot    # cols hold (row, col) pairs, so the
+                preempted.pop(0)     # slot index change is harvest-safe
+                stats.resumes += 1
+                stats.peak_pages_in_use = alloc.peak_in_use
+
+        def ensure_growth() -> None:
+            """Lazy decode growth: extend any slot about to cross a page
+            boundary; preempt a victim when the pool is dry."""
+            nonlocal cache
+            for j in range(nslots):
+                slot = slots[j]
+                if slot is None:
+                    continue
+                need_rows = slot.plen + slot.emitted   # next write position+1
+                while slots[j] is not None \
+                        and need_rows > len(slot_pages[j]) * eng.page_size:
+                    if len(slot_pages[j]) >= eng.kv_max_pages:
+                        raise RuntimeError(
+                            f"slot {j} (rid {slot.req.rid}) needs row "
+                            f"{need_rows} past its page table "
+                            f"({eng.kv_max_pages} pages) — run() validation "
+                            f"should have rejected this request")
+                    got = alloc.alloc(1)
+                    if got is not None:
+                        pos = len(slot_pages[j])
+                        slot_pages[j].append(got[0])
+                        cache = self._append_page(cache, jnp.int32(j),
+                                                  jnp.int32(pos),
+                                                  jnp.int32(got[0]))
+                        stats.grown_pages += 1
+                        stats.peak_pages_in_use = alloc.peak_in_use
+                        continue
+                    # pool dry mid-decode: preempt. Victims are picked
+                    # starvation-free (aged slots become untouchable); each
+                    # preemption removes a candidate, so this terminates.
+                    cands = [(i, s.req.rid, s.emitted, s.admitted_at)
+                             for i, s in enumerate(slots) if s is not None]
+                    victim = pick_preemption_victim(
+                        cands, stats.preempted_rids, self.preempt_aging)
+                    preempt(victim)
+
         t0 = time.perf_counter()
-        while queue or prefill is not None \
+        while queue or prefill is not None or preempted \
                 or any(s is not None for s in slots):
             if time_ticks:      # stamp the wall clock at each arrival tick
                 for r in queue:
                     if r.arrival > t:
                         break
                     arrival_wall.setdefault(r.rid, time.perf_counter())
+
+            # Oversubscription housekeeping runs before admission: parked
+            # requests get first claim on freed pages (no starvation behind
+            # a stream of fresh admissions), then live slots grow into
+            # whatever remains before a new reservation can take it.
+            if self.oversubscribe:
+                if preempted:
+                    try_resume()
+                ensure_growth()
 
             chunk_job: Optional[_Prefill] = None
             if C is None:
@@ -838,7 +1272,8 @@ class Scheduler:
                         plan = None
                         if alloc is not None:
                             plan = self._plan_admission(r, plen_of[r.rid],
-                                                        alloc, index)
+                                                        alloc, index,
+                                                        keys=digests_of(r))
                             if plan is None:
                                 # page exhaustion defers the admission in
                                 # the queue; eviction frees pages, so the
@@ -890,8 +1325,28 @@ class Scheduler:
                         chunk_job = prefill
 
             if not any(s is not None for s in slots) and chunk_job is None:
-                if prefill is None and queue:  # idle gap: jump to next arrival
-                    t = max(t + 1, queue[0].arrival)
+                if prefill is None:
+                    # With nothing live, no pages will ever be freed again —
+                    # a blocked resume or a page-stalled head request is a
+                    # genuine deadlock, not a transient stall.  Raise loudly
+                    # instead of spinning forever.
+                    if preempted:
+                        raise RuntimeError(
+                            f"oversubscription deadlock: {len(preempted)} "
+                            f"preempted request(s) cannot resume (pool "
+                            f"pages pinned by parked shared prefixes) and "
+                            f"no live slot remains to free pages — the "
+                            f"pool is too small for this workload (raise "
+                            f"kv_pool_pages)")
+                    if queue and queue[0].arrival <= t:
+                        raise RuntimeError(
+                            f"request {queue[0].rid} can never be admitted: "
+                            f"nothing is live yet its admission plan still "
+                            f"cannot be served from the pool "
+                            f"({eng.kv_num_pages} pages) — raise "
+                            f"kv_pool_pages or shrink the request")
+                    if queue:   # idle gap: jump to the next arrival
+                        t = max(t + 1, queue[0].arrival)
                 continue
 
             # -- one batched step; finished slots emit masked pads -----------
@@ -935,13 +1390,29 @@ class Scheduler:
             stats.occupancy_sum += sum(active) / nslots
             if alloc is not None and alloc.pages_in_use:
                 # internal-fragmentation gauge: live K/V rows per resident
-                # pool token (mid-prefill slots count their written rows)
-                used = sum(plen_of[s_.req.rid] + s_.emitted
-                           for s_ in slots if s_ is not None)
+                # pool token.  Sharing-aware: a pool page mapped by several
+                # slots counts ONCE, at the deepest live row any mapper
+                # reaches — summing per-slot lengths would double-count
+                # shared prefixes and report occupancy > 1.0.
+                fill: Dict[int, int] = {}
+
+                def _acc(pages: List[int], live: int) -> None:
+                    for i, pg in enumerate(pages):
+                        rows = min(max(live - i * eng.page_size, 0),
+                                   eng.page_size)
+                        if rows > fill.get(pg, 0):
+                            fill[pg] = rows
+
+                for s_j, s_ in enumerate(slots):
+                    if s_ is not None:
+                        _acc(slot_pages[s_j], s_.plen + s_.emitted)
                 if prefill is not None:
-                    used += prefill.next_start
-                stats.page_util_sum += used / (alloc.pages_in_use
-                                               * eng.page_size)
+                    _acc(slot_pages.get(prefill.slot, []),
+                         prefill.next_start)
+                for p_ in preempted:   # parked shared prefixes stay live
+                    _acc(p_.kept, len(p_.kept) * eng.page_size)
+                stats.page_util_sum += sum(fill.values()) / (
+                    alloc.pages_in_use * eng.page_size)
                 stats.page_util_ticks += 1
             tok_host = np.asarray(tok) if use_eos else None
             if not use_eos:
@@ -958,7 +1429,8 @@ class Scheduler:
                     slot.tokens.append(tid)
                     hit_eos = tid == self.eos_id
                 else:
-                    slot.cols.append(len(step_cols) - 1)
+                    # (row, col): a swap-resumed slot may land in a new row
+                    slot.cols.append((j, len(step_cols) - 1))
                 if hit_eos or slot.emitted >= slot.req.max_new:
                     finish(j, slot, hit_eos)
             if admitted is not None:
@@ -973,11 +1445,15 @@ class Scheduler:
             r = slot.req
             if not use_eos:
                 slot.tokens = [int(np.asarray(slot.first)[0, 0])] \
-                    + [int(mat[j, c]) for c in slot.cols]
+                    + [int(mat[row, c]) for row, c in slot.cols]
+            # recompute preemption: tokens banked by earlier legs come
+            # first; the result is keyed to the ORIGINAL prompt length and
+            # first admission tick, so preemption is invisible downstream
             results[r.rid] = RequestResult(
-                rid=r.rid, tokens=slot.tokens,
-                prompt_len=int(np.asarray(r.prompt).reshape(-1).shape[0]),
-                arrival=r.arrival, admitted_at=slot.admitted_at,
+                rid=r.rid, tokens=carry.pop(r.rid, []) + slot.tokens,
+                prompt_len=orig_plen[r.rid],
+                arrival=r.arrival,
+                admitted_at=first_admit.get(r.rid, slot.admitted_at),
                 finished_at=t_fin, eos=eos)
         return results, stats
 

@@ -1,0 +1,317 @@
+"""Oversubscribed paged serving: lazy decode-page growth, mid-decode
+preemption (recompute + swap policies), starvation-free victim selection,
+the loud page-table-edge admission fix (reject/truncate), sharing-aware
+occupancy, and per-request prompt-digest caching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config
+from repro.serve import Request, ServeEngine
+from repro.serve.paging import PageAllocator, PrefixIndex, SwapArea
+from repro.serve.scheduler import pick_preemption_victim
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("batch_slots", 4)
+    return ServeEngine(model=model, params=params, **kw)
+
+
+def _workload(vocab, *, n_requests=4, plen=16, max_new=8, spacing=1, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=plen, dtype=np.int32),
+                    max_new=max_new, arrival=i * spacing)
+            for i in range(n_requests)]
+
+
+# --------------------------------------------------------------------------
+# Lazy growth
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True],
+                         ids=["fp32", "int8kv"])
+def test_lazy_growth_token_identity(smoke_lm, quantized_kv):
+    """With a roomy pool (no preemption), lazy growth must emit exactly the
+    dense and up-front paged streams while reserving fewer pages up front."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab)
+    dense = _engine(model, params, quantized_kv=quantized_kv)
+    base, _ = dense.scheduler(chunk_size=8, prefix_sharing=False).run(reqs)
+    paged = _engine(model, params, quantized_kv=quantized_kv,
+                    paged_kv=True, page_size=8)
+    upfront, up_st = paged.scheduler(chunk_size=8,
+                                     prefix_sharing=False).run(reqs)
+    lazy, lz_st = paged.scheduler(chunk_size=8, prefix_sharing=False,
+                                  oversubscribe=True).run(reqs)
+    for i in range(len(reqs)):
+        assert lazy[i].tokens == base[i].tokens, (quantized_kv, i)
+        assert upfront[i].tokens == base[i].tokens, (quantized_kv, i)
+    assert lz_st.grown_pages > 0               # decode crossed page edges
+    assert lz_st.preemptions == 0              # pool was roomy
+    assert lz_st.page_occupancy > up_st.page_occupancy
+
+
+def test_lazy_growth_never_maps_a_live_page(smoke_lm):
+    """Every page a slot's table row holds must be uniquely mapped unless
+    the allocator says it is shared — growth must never hand out a page
+    another live row already maps privately (aliasing)."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=5, spacing=0)
+    eng = _engine(model, params, paged_kv=True, page_size=8,
+                  kv_pool_pages=9, batch_slots=3)
+    got, stats = eng.scheduler(chunk_size=8, prefix_sharing=False,
+                               oversubscribe=True).run(reqs)
+    # with no sharing, aliasing would corrupt streams; cross-check vs dense
+    dense = _engine(model, params, batch_slots=3)
+    base, _ = dense.scheduler(chunk_size=8, prefix_sharing=False).run(reqs)
+    assert sorted(got) == list(range(5))
+    for i in range(5):
+        assert got[i].tokens == base[i].tokens, i
+    assert stats.grown_pages > 0
+
+
+# --------------------------------------------------------------------------
+# Preemption: recompute + swap
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True],
+                         ids=["fp32", "int8kv"])
+@pytest.mark.parametrize("policy", ["recompute", "swap"])
+def test_preempt_resume_token_identity(smoke_lm, policy, quantized_kv):
+    """A pool too small for every admitted request's decode horizon forces
+    mid-decode preemption; the preempted request's final stream must still
+    be token-identical to the dense run (recompute: greedy continuation;
+    swap: bit-exact page restore)."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=4, plen=16, max_new=12, spacing=0)
+    dense = _engine(model, params, batch_slots=3,
+                    quantized_kv=quantized_kv)
+    base, _ = dense.scheduler(chunk_size=8, prefix_sharing=False).run(reqs)
+    # 16-token prompts admit with 2 pages of 8; +12 decode rows grow toward
+    # 4 pages each.  3 slots x 4 pages = 12 > pool 7 -> growth runs dry.
+    eng = _engine(model, params, batch_slots=3, quantized_kv=quantized_kv,
+                  paged_kv=True, page_size=8, kv_pool_pages=7)
+    got, stats = eng.scheduler(chunk_size=8, prefix_sharing=False,
+                               oversubscribe=True,
+                               preempt_policy=policy).run(reqs)
+    assert stats.preemptions > 0, "pool was not tight enough to preempt"
+    assert sorted(got) == list(range(4))
+    for i in range(4):
+        assert got[i].tokens == base[i].tokens, (policy, quantized_kv, i)
+    if policy == "swap":
+        assert stats.swapped_pages > 0
+        assert stats.resumes > 0
+        assert stats.swap_peak_bytes > 0
+    else:
+        assert stats.resumes == 0          # recompute re-queues instead
+
+
+def test_swap_never_moves_shared_pages(smoke_lm):
+    """Under prefix sharing, a preempted sharer's shared prefix pages stay
+    resident (only private pages swap); the donor and every sharer still
+    emit exactly the dense streams."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(11)
+    sysp = rng.integers(0, cfg.vocab, size=16, dtype=np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sysp, rng.integers(0, cfg.vocab, size=8,
+                                            dtype=np.int32)]),
+                    max_new=12, arrival=0)
+            for i in range(4)]
+    dense = _engine(model, params, batch_slots=3)
+    base, _ = dense.scheduler(chunk_size=8).run(reqs)
+    eng = _engine(model, params, batch_slots=3, paged_kv=True, page_size=8,
+                  kv_pool_pages=9)
+    got, stats = eng.scheduler(chunk_size=8, oversubscribe=True,
+                               preempt_policy="swap").run(reqs)
+    assert stats.preemptions > 0
+    assert stats.prefix_hits > 0
+    for i in range(4):
+        assert got[i].tokens == base[i].tokens, i
+    # the 2 shared prompt pages are mapped by several rows; had they been
+    # swapped+freed the other sharers would have read reused garbage above.
+    # swap traffic must stay below the victims' full footprint:
+    assert stats.swapped_pages < stats.preemptions * 4
+
+
+def test_aging_bound_prevents_starvation(smoke_lm):
+    """Heavy oversubscription with many same-size victims: the aging bound
+    must still let every request finish (a request preempted `bound` times
+    becomes untouchable until everyone else is), token-identical."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=6, plen=16, max_new=12, spacing=0)
+    dense = _engine(model, params, batch_slots=3)
+    base, _ = dense.scheduler(chunk_size=8, prefix_sharing=False).run(reqs)
+    eng = _engine(model, params, batch_slots=3, paged_kv=True, page_size=8,
+                  kv_pool_pages=7)
+    got, stats = eng.scheduler(chunk_size=8, prefix_sharing=False,
+                               oversubscribe=True, preempt_aging=1,
+                               preempt_policy="recompute").run(reqs)
+    assert sorted(got) == list(range(6))       # nobody starved
+    for i in range(6):
+        assert got[i].tokens == base[i].tokens, i
+    assert stats.preemptions > 0
+    assert max(stats.preempted_rids.values()) <= stats.preemptions
+
+
+def test_oversub_int8_interpret_e2e(smoke_lm):
+    """Preempt+resume end-to-end through the fused qpaged Pallas kernels in
+    interpret mode: identical streams to the ref-oracle dispatch."""
+    from repro.kernels import ops as kops
+
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=3, plen=16, max_new=10, spacing=0)
+    eng = _engine(model, params, max_len=32, batch_slots=2,
+                  quantized_kv=True, paged_kv=True, page_size=8,
+                  kv_pool_pages=5)
+    base, b_st = eng.scheduler(chunk_size=8, prefix_sharing=False,
+                               oversubscribe=True).run(reqs)
+    prev = kops.FORCE
+    kops.FORCE = "interpret"
+    try:
+        got, stats = eng.scheduler(chunk_size=8, prefix_sharing=False,
+                                   oversubscribe=True).run(reqs)
+    finally:
+        kops.FORCE = prev
+    assert b_st.preemptions > 0 and stats.preemptions > 0
+    for i in range(3):
+        assert got[i].tokens == base[i].tokens, i
+
+
+# --------------------------------------------------------------------------
+# Victim selection
+# --------------------------------------------------------------------------
+
+def test_victim_selection_least_progress_and_aging():
+    # (slot, rid, emitted, admitted_at)
+    cands = [(0, 10, 5, 0), (1, 11, 2, 3), (2, 12, 2, 1)]
+    # least emitted wins; tie broken toward the most recent admission
+    assert pick_preemption_victim(cands, {}, 2) == 1
+    # an aged rid is only chosen when every candidate is aged
+    assert pick_preemption_victim(cands, {11: 2}, 2) == 2
+    assert pick_preemption_victim(cands, {10: 2, 11: 2, 12: 2}, 2) == 1
+    assert pick_preemption_victim([], {}, 2) is None
+
+
+# --------------------------------------------------------------------------
+# Page-table-edge admission: loud reject / explicit truncate
+# --------------------------------------------------------------------------
+
+def test_oversize_request_rejected_loudly(smoke_lm):
+    """The headline bugfix: a request whose prompt+max_new exceeds the page
+    table must be rejected at admission, not silently clamped into
+    OOB-sentinel row drops and garbage decode."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, paged_kv=True, page_size=8)   # cap = 48
+    r = Request(rid=0, prompt=np.arange(16, dtype=np.int32) % cfg.vocab,
+                max_new=40, arrival=0)                         # 56 > 48
+    with pytest.raises(ValueError, match="decode garbage"):
+        eng.scheduler(chunk_size=8).run([r], warmup=False)
+
+
+def test_oversize_plan_raises_not_clamps(smoke_lm):
+    """_plan_admission itself refuses a plan that cannot cover the
+    request's real rows (the old code clamped and dropped live KV)."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, paged_kv=True, page_size=8)
+    sched = eng.scheduler(chunk_size=8, prefix_sharing=False)
+    alloc = PageAllocator(eng.kv_num_pages)
+    r = Request(rid=0, prompt=np.zeros(16, np.int32), max_new=40, arrival=0)
+    with pytest.raises(ValueError, match="out-of-bounds sentinel"):
+        sched._plan_admission(r, 16, alloc, None)
+    assert alloc.pages_in_use == 0             # nothing leaked
+
+
+def test_oversize_truncate_mode_grants_what_fits(smoke_lm):
+    """oversize='truncate' clamps max_new to the table capacity, records
+    it per request, and serves the grant exactly."""
+    cfg, model, params = smoke_lm
+    eng = _engine(model, params, paged_kv=True, page_size=8)   # cap = 48
+    reqs = [Request(rid=0, prompt=np.arange(16, dtype=np.int32) % cfg.vocab,
+                    max_new=40, arrival=0),                    # -> grant 32
+            Request(rid=1, prompt=np.arange(8, dtype=np.int32) % cfg.vocab,
+                    max_new=4, arrival=0)]                     # untouched
+    got, stats = eng.scheduler(chunk_size=8,
+                               oversize="truncate").run(reqs)
+    assert stats.truncations == 1
+    assert stats.truncated_rids == {0: 32}
+    assert len(got[0].tokens) == 32
+    assert len(got[1].tokens) == 4
+
+
+# --------------------------------------------------------------------------
+# Occupancy + digest caching (satellites #2, #3)
+# --------------------------------------------------------------------------
+
+def test_occupancy_bounded_under_prefix_sharing(smoke_lm):
+    """page_occupancy counts a shared pool page once (at its deepest live
+    row), so heavy sharing can no longer report > 1.0."""
+    cfg, model, params = smoke_lm
+    rng = np.random.default_rng(13)
+    sysp = rng.integers(0, cfg.vocab, size=24, dtype=np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sysp, rng.integers(0, cfg.vocab, size=8,
+                                            dtype=np.int32)]),
+                    max_new=8, arrival=i)
+            for i in range(4)]
+    eng = _engine(model, params, paged_kv=True, page_size=8)
+    _, stats = eng.scheduler(chunk_size=8).run(reqs)
+    assert stats.prefix_hits > 0
+    assert 0.0 < stats.page_occupancy <= 1.0
+
+
+def test_prompt_digests_hashed_once_per_request(smoke_lm, monkeypatch):
+    """Admission retries under page stalls must reuse the cached digests —
+    one PrefixIndex.digests call per request, however long it queues."""
+    cfg, model, params = smoke_lm
+    calls = []
+    orig = PrefixIndex.digests
+
+    def counting(self, prompt):
+        calls.append(len(np.asarray(prompt).reshape(-1)))
+        return orig(self, prompt)
+
+    monkeypatch.setattr(PrefixIndex, "digests", counting)
+    reqs = _workload(cfg.vocab, n_requests=4, plen=16, max_new=8, spacing=0)
+    # 3 pages per request up front, pool of 5: admissions stall repeatedly
+    eng = _engine(model, params, paged_kv=True, page_size=8,
+                  kv_pool_pages=5, batch_slots=2)
+    got, stats = eng.scheduler(chunk_size=8).run(reqs)
+    assert sorted(got) == list(range(4))
+    assert stats.page_stalls > 0
+    assert len(calls) == 4                     # once per request, ever
+
+
+# --------------------------------------------------------------------------
+# SwapArea bookkeeping
+# --------------------------------------------------------------------------
+
+def test_swap_area_accounting():
+    sa = SwapArea()
+    a = {"k": np.zeros((2, 8, 2, 4), np.int8), "v": np.zeros(16, np.float32)}
+    sa.put(3, a)
+    assert 3 in sa and len(sa) == 1
+    assert sa.bytes_held == a["k"].nbytes + a["v"].nbytes
+    assert sa.peak_bytes == sa.bytes_held
+    with pytest.raises(ValueError):
+        sa.put(3, a)                           # double-park is a bug
+    peak = sa.peak_bytes
+    assert sa.pop(3) is a
+    assert sa.bytes_held == 0 and sa.peak_bytes == peak
+    with pytest.raises(KeyError):
+        sa.pop(3)
+    sa.put(4, None)                            # fully-shared victim: no data
+    assert sa.pop(4) is None

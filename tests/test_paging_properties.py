@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) for the PageAllocator's invariants
 under adversarial alloc/share/free churn: a live (refcount > 0) page never
-re-enters the free list, alloc stays all-or-nothing under interleaving, and
-``peak_in_use`` is monotone within a run."""
+re-enters the free list, alloc stays all-or-nothing under interleaving,
+``peak_in_use`` is monotone within a run — plus the oversubscription layer:
+lazy one-page growth never aliases a live mapping, swap park/restore cycles
+conserve pages, and victim selection is deterministic and starvation-free."""
 import pytest
 
 pytest.importorskip(
@@ -10,7 +12,8 @@ pytest.importorskip(
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.serve.paging import PageAllocator
+from repro.serve.paging import PageAllocator, SwapArea
+from repro.serve.scheduler import pick_preemption_victim
 
 POOL = 12
 
@@ -79,3 +82,127 @@ def test_alloc_failure_order_independent(sizes):
     for h in held:
         a.free(h)
     assert a.free_pages == POOL
+
+
+# --------------------------------------------------------------------------
+# Oversubscription: lazy growth, swap park/restore, victim selection
+# --------------------------------------------------------------------------
+
+# ("admit", n_pages) / ("grow", i) one page onto row i / ("park", i) free
+# row i's tail keeping a shared head / ("finish", i)
+growth_ops = st.lists(
+    st.tuples(st.sampled_from(["admit", "grow", "park", "finish"]),
+              st.integers(0, 10)),
+    max_size=200)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops=growth_ops)
+def test_lazy_growth_never_aliases_a_live_page(ops):
+    """The scheduler's growth loop is alloc(1)+append per boundary: however
+    admissions, growths, parks and finishes interleave, a page may appear in
+    at most one row per reference the allocator tracks for it — growth can
+    never hand a row a page some other live row still maps privately."""
+    a = PageAllocator(POOL)
+    rows = {}                       # row id -> list of pages (in table order)
+    parked = {}                     # row id -> kept shared head
+    nxt = 0
+    for op, arg in ops:
+        if op == "admit":
+            got = a.alloc(arg % 3)
+            if got is not None:
+                rows[nxt] = list(got)
+                nxt += 1
+        elif op == "grow" and rows:
+            rid = sorted(rows)[arg % len(rows)]
+            got = a.alloc(1)
+            if got is not None:
+                rows[rid].extend(got)
+        elif op == "park" and rows:
+            rid = sorted(rows)[arg % len(rows)]
+            pages = rows.pop(rid)
+            keep = arg % (len(pages) + 1)
+            a.share(pages[:keep])   # parked head keeps its reference...
+            a.free(pages)           # ...while the row itself lets go
+            parked[rid] = pages[:keep]
+        elif op == "finish":
+            pool = rows if (arg % 2 == 0 and rows) or not parked else parked
+            if pool:
+                rid = sorted(pool)[arg % len(pool)]
+                a.free(pool.pop(rid))
+        # INVARIANT: per page, live mappings never exceed its refcount, and
+        # no live mapping sits in the free list
+        holders = {}
+        for pages in list(rows.values()) + list(parked.values()):
+            for p in pages:
+                holders[p] = holders.get(p, 0) + 1
+        for p, n in holders.items():
+            assert a.refcount(p) == n, (p, n, a.refcount(p))
+            assert p not in a._free
+    for pages in list(rows.values()) + list(parked.values()):
+        a.free(pages)
+    assert a.pages_in_use == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(cycle=st.lists(st.integers(1, POOL), max_size=30))
+def test_swap_park_restore_conserves_pages(cycle):
+    """Park (free private pages into a SwapArea) then restore (alloc fresh,
+    pop the area): every cycle conserves pool pages and swap bytes, and the
+    restored page count always equals what was parked."""
+    import numpy as np
+    a = PageAllocator(POOL)
+    sa = SwapArea()
+    held = a.alloc(POOL)
+    parked = []                     # (rid, n_pages)
+    rid = 0
+    for n in cycle:
+        if parked and (n % 2 == 0 or n > len(held)):
+            prid, pn = parked.pop(0)
+            got = a.alloc(pn)
+            if got is None:
+                parked.insert(0, (prid, pn))
+                continue
+            data = sa.pop(prid)
+            assert (data is None and pn == 0) or data.shape[0] == pn
+            held.extend(got)
+        else:
+            take = min(n, len(held))
+            priv, held = held[:take], held[take:]
+            sa.put(rid, np.zeros((take, 4), np.int8) if take else None)
+            a.free(priv)
+            parked.append((rid, take))
+            rid += 1
+        assert a.pages_in_use == len(held)
+        assert sa.bytes_held == sum(4 * pn for _, pn in parked)
+        assert sa.peak_bytes >= sa.bytes_held
+    assert len(sa) == len(parked)
+
+
+victim_cands = st.lists(
+    st.tuples(st.integers(0, 7),        # slot
+              st.integers(0, 20),       # rid
+              st.integers(1, 50),       # emitted
+              st.integers(0, 100)),     # admitted_at
+    min_size=1, max_size=8,
+    unique_by=lambda c: c[0])
+
+
+@settings(max_examples=200, deadline=None)
+@given(cands=victim_cands,
+       counts=st.dictionaries(st.integers(0, 20), st.integers(0, 5)),
+       bound=st.integers(1, 4))
+def test_victim_selection_deterministic_and_starvation_free(
+        cands, counts, bound):
+    v = pick_preemption_victim(cands, counts, bound)
+    assert v == pick_preemption_victim(list(reversed(cands)), counts, bound)
+    chosen = next(c for c in cands if c[0] == v)
+    aged = [c for c in cands if counts.get(c[1], 0) >= bound]
+    if len(aged) < len(cands):
+        # an under-bound candidate exists: the aged are untouchable...
+        assert counts.get(chosen[1], 0) < bound
+        # ...and among the eligible, least decode progress is sacrificed
+        eligible = [c for c in cands if counts.get(c[1], 0) < bound]
+        assert chosen[2] == min(c[2] for c in eligible)
+    else:
+        assert chosen[2] == min(c[2] for c in cands)
