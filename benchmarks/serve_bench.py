@@ -51,6 +51,14 @@ the gate is >= ``--min-oversub-ratio`` times the up-front peak concurrent
 requests at equal pool bytes (``check_oversub``), with p99 TTFT reported
 for both admission modes.
 
+A fifth sweep (``bench_burst``) measures the **ragged one-forward-per-tick
+step with multi-lane prefill**: N prompts arriving in a single tick, ragged
+(``ragged=True, prefill_lanes=L``) vs the single-lane mixed step at the
+same token budget.  Token identity vs the dense run is asserted (fp32 and
+int8 KV); the gate (``check_burst``) is p99 TTFT in deterministic
+virtual-time steps — the mixed step admits one chunk per tick however
+large the budget, the ragged step drains the burst ``lanes``-wide.
+
 CI-enforced gates (all deterministic or same-run relative):
 
   * the same-run relative gate — chunked must beat one-shot on p99
@@ -420,6 +428,83 @@ def bench_oversub(model, params, vocab, *, smoke=True, seed=0):
     return out
 
 
+def bench_burst(model, params, vocab, *, smoke=True, seed=0):
+    """Burst-arrival sweep: N prompts landing in ONE tick, ragged multi-lane
+    prefill vs the single-lane mixed step at the same token budget.
+
+    The mixed step is structurally capped at one C-token chunk per tick no
+    matter the budget, so a burst drains serially: request i waits ~i full
+    prompts before its first token.  The ragged step flattens up to
+    ``prefill_lanes`` chunks into its one forward and spends the whole
+    token budget per tick, so the burst drains ``~lanes``-wide.  Token
+    identity of all three runs (dense mixed reference, paged mixed, paged
+    ragged) is asserted in-run; the gate (``check_burst``) is p99 TTFT in
+    deterministic virtual-time steps, mixed vs ragged, >= 1.2x in CI.
+    """
+    if smoke:
+        wl = dict(n_requests=8, plen=96, max_new=8, slots=8, chunk=16,
+                  lanes=4, budget=64, page=16)
+    else:
+        wl = dict(n_requests=16, plen=192, max_new=16, slots=16, chunk=32,
+                  lanes=4, budget=160, page=16)
+    max_len = wl["plen"] + wl["max_new"]
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=wl["plen"],
+                                        dtype=np.int32),
+                    max_new=wl["max_new"], arrival=0)
+            for i in range(wl["n_requests"])]
+    out = {"workload": {**wl, "max_len": max_len}}
+    for name in ("fp32", "qkv"):
+        kw = VARIANTS[name]
+        dense = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], **kw)
+        d_res, _ = dense.scheduler(chunk_size=wl["chunk"],
+                                   token_budget=wl["budget"]).run(reqs,
+                                                                  seed=seed)
+        paged = ServeEngine(model=model, params=params, max_len=max_len,
+                            batch_slots=wl["slots"], paged_kv=True,
+                            page_size=wl["page"], **kw)
+        m_res, m_st = paged.scheduler(
+            chunk_size=wl["chunk"], token_budget=wl["budget"]).run(reqs,
+                                                                   seed=seed)
+        r_res, r_st = paged.scheduler(
+            chunk_size=wl["chunk"], token_budget=wl["budget"], ragged=True,
+            prefill_lanes=wl["lanes"]).run(reqs, seed=seed)
+        for r in reqs:   # acceptance bar: the ragged forward is a pure
+            #              batching change — streams must not move
+            assert m_res[r.rid].tokens == d_res[r.rid].tokens, (
+                f"paged-mixed/dense token divergence: variant {name} "
+                f"rid {r.rid}")
+            assert r_res[r.rid].tokens == d_res[r.rid].tokens, (
+                f"ragged/dense token divergence: variant {name} rid {r.rid}")
+        msum, rsum = m_st.summary(), r_st.summary()
+        ratio = msum["p99_ttft_steps"] / max(rsum["p99_ttft_steps"], 1e-9)
+        out[name] = {
+            "tokens_identical": True,
+            "mixed_p99_ttft_steps": msum["p99_ttft_steps"],
+            "ragged_p99_ttft_steps": rsum["p99_ttft_steps"],
+            "burst_ttft_ratio": round(ratio, 3),
+            "mixed_p50_ttft_steps": msum["p50_ttft_steps"],
+            "ragged_p50_ttft_steps": rsum["p50_ttft_steps"],
+            "mixed_decode_steps": m_st.decode_steps,
+            "ragged_decode_steps": r_st.decode_steps,
+            "mixed_tok_s": round(m_st.steady_tok_s, 2),
+            "ragged_tok_s": round(r_st.steady_tok_s, 2),
+            "mixed_jit_compiles": msum["num_jit_compiles"],
+            "ragged_jit_compiles": rsum["num_jit_compiles"],
+            "ragged_prefill_chunks": r_st.prefill_chunks,
+            "ragged_stalled_chunks": r_st.stalled_chunks,
+        }
+        print(f"burst/{name:5s} identity ok | p99 TTFT mixed "
+              f"{msum['p99_ttft_steps']:.0f} -> ragged "
+              f"{rsum['p99_ttft_steps']:.0f} steps ({ratio:.2f}x, "
+              f"{wl['lanes']} lanes, budget {wl['budget']}) | ticks "
+              f"{m_st.decode_steps} -> {r_st.decode_steps} | jit shapes "
+              f"{rsum['num_jit_compiles']}")
+    return out
+
+
 def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     cfg = get_config("smollm-135m-smoke")
     model = cfg.build(dtype=jnp.float32, remat="off")
@@ -461,6 +546,8 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
                                             smoke=smoke, seed=seed)
     results["oversub"] = bench_oversub(model, params, cfg.vocab, smoke=smoke,
                                        seed=seed)
+    results["burst"] = bench_burst(model, params, cfg.vocab, smoke=smoke,
+                                   seed=seed)
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -584,6 +671,31 @@ def check_oversub(results, *, min_oversub_ratio: float = 1.3) -> bool:
     return ok
 
 
+def check_burst(results, *, min_burst_ttft_ratio: float = 1.2) -> bool:
+    """The ragged burst gate: on an N-prompts-in-one-tick burst at the same
+    token budget, ragged multi-lane prefill must cut p99 TTFT by >=
+    ``min_burst_ttft_ratio`` vs the single-lane mixed step.  Deterministic
+    for a fixed seed (TTFT counts virtual-time admission ticks); token
+    identity of ragged vs mixed vs dense was already asserted inside the
+    run."""
+    ok = True
+    for name, v in results.get("burst", {}).items():
+        if name == "workload":
+            continue
+        r = v["burst_ttft_ratio"]
+        if r < min_burst_ttft_ratio:
+            print(f"REGRESSION burst/{name}: ragged p99 TTFT speedup "
+                  f"{r:.2f}x < {min_burst_ttft_ratio:.2f}x (mixed "
+                  f"{v['mixed_p99_ttft_steps']:.0f} steps, ragged "
+                  f"{v['ragged_p99_ttft_steps']:.0f})")
+            ok = False
+        else:
+            print(f"ok burst/{name}: ragged p99 TTFT {r:.2f}x better "
+                  f"({v['mixed_p99_ttft_steps']:.0f} -> "
+                  f"{v['ragged_p99_ttft_steps']:.0f} steps)")
+    return ok
+
+
 def check_baseline(results, baseline_path: str, tolerance: float,
                    *, strict: bool = False) -> bool:
     """Per variant x policy: compare steady tok/s and p99 latency (in
@@ -660,6 +772,9 @@ def main(argv=None):
     ap.add_argument("--min-oversub-ratio", type=float, default=1.3,
                     help="oversubscription gate floor: lazy-vs-upfront peak "
                          "concurrent requests at equal pool bytes")
+    ap.add_argument("--min-burst-ttft-ratio", type=float, default=1.2,
+                    help="burst gate floor: ragged multi-lane vs single-lane "
+                         "mixed p99 TTFT on a one-tick arrival burst")
     ap.add_argument("--strict-baseline", action="store_true",
                     help="make the absolute --baseline comparison a hard "
                          "gate again (default: warn-only — cross-machine "
@@ -675,6 +790,8 @@ def main(argv=None):
                       min_shared_ratio=args.min_shared_ratio) and ok
     ok = check_oversub(results,
                        min_oversub_ratio=args.min_oversub_ratio) and ok
+    ok = check_burst(results,
+                     min_burst_ttft_ratio=args.min_burst_ttft_ratio) and ok
     if args.baseline:
         ok = check_baseline(results, args.baseline, args.tolerance,
                             strict=args.strict_baseline) and ok

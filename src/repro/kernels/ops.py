@@ -31,6 +31,7 @@ from .qconv1d import qconv1d_pallas
 from .qdecode_attn import qdecode_attn_pallas
 from .qmm import qmm_pallas, qmm_requant_pallas
 from .qpaged_attn import qpaged_chunk_attn_pallas, qpaged_decode_attn_pallas
+from .qragged_attn import qragged_attn_pallas
 from .wq_matmul import wq_matmul_pallas
 
 # None | "pallas" | "ref" | "interpret"; seeded from the environment so a
@@ -190,6 +191,31 @@ def qpaged_chunk_attn(q, k_chunk, v_chunk, k_pool, v_pool, k_n, v_n,
                                         interpret=True)
     return ref.qpaged_chunk_attn_ref(q, k_chunk, v_chunk, k_pool, v_pool,
                                      k_n, v_n, page_row, start)
+
+
+def qragged_attn(q, k_new, v_new, k_pool, v_pool, k_n, v_n, table,
+                 slot_ids, positions):
+    """Ragged token-batch attention + fused int8 quantize-on-write.
+
+    The one-forward-per-tick serve kernel: q/k_new/v_new are (T, H*, D) flat
+    token batches mixing decode tokens and prefill-chunk tokens from several
+    slots; ``slot_ids``/``positions`` ((T,) int32) name each token's logical
+    cache row (-1 = inert pad row); ``table`` ((slots, max_pages) int32) maps
+    logical pages to pool pages — a dense cache passes the identity table
+    over its block-reshaped view (see nn/attention.py).  Returns
+    (out (T, Hq, D), k_pool', v_pool'); the Pallas path aliases the pools so
+    the write is in place.
+    """
+    mode = _mode()
+    if mode == "pallas":
+        return qragged_attn_pallas(q, k_new, v_new, k_pool, v_pool,
+                                   k_n, v_n, table, slot_ids, positions)
+    if mode == "interpret":
+        return qragged_attn_pallas(q, k_new, v_new, k_pool, v_pool,
+                                   k_n, v_n, table, slot_ids, positions,
+                                   interpret=True)
+    return ref.qragged_attn_ref(q, k_new, v_new, k_pool, v_pool,
+                                k_n, v_n, table, slot_ids, positions)
 
 
 def qchunk_attn(q, k_chunk, v_chunk, k_cache, v_cache, k_n, v_n, slot, start):

@@ -154,6 +154,59 @@ def qpaged_chunk_attn_ref(q, k_chunk, v_chunk, k_pool, v_pool, k_n, v_n,
     return out.reshape(c, hq, d).astype(q.dtype), k_pool, v_pool
 
 
+def qragged_attn_ref(q, k_new, v_new, k_pool, v_pool, k_n, v_n, table,
+                     slot_ids, positions):
+    """Ragged token-batch oracle: per-token scatter + per-token attention.
+
+    Token ``t`` is logical row ``positions[t]`` of slot ``slot_ids[t]``: its
+    K/V row is quantized onto the paper grid and scattered through the page
+    table (``positions[t] < 0`` or unmapped pages redirect to the
+    out-of-bounds sentinel and drop, like ``paged_flat_index``), then its
+    query attends over that slot's positions ``<= positions[t]``.
+
+    Returns (out (T, Hq, D), k_pool', v_pool') like the Pallas kernel.
+    """
+    t, hq, d = q.shape
+    n_pages, ps, hkv, _ = k_pool.shape
+    g = hq // hkv
+    k_n = jnp.asarray(k_n, jnp.int32)
+    v_n = jnp.asarray(v_n, jnp.int32)
+    table = jnp.asarray(table, jnp.int32)
+    slots = jnp.asarray(slot_ids, jnp.int32).reshape(-1)
+    pos = jnp.asarray(positions, jnp.int32).reshape(-1)
+    max_pages = table.shape[1]
+
+    k8 = qformat.quantize(k_new, k_n, 8)
+    v8 = qformat.quantize(v_new, v_n, 8)
+    lpage = jnp.clip(pos, 0) // ps
+    page = table[slots, jnp.minimum(lpage, max_pages - 1)]
+    valid = (pos >= 0) & (lpage < max_pages) & (page >= 0)
+    flat = jnp.where(valid, page * ps + jnp.clip(pos, 0) % ps, n_pages * ps)
+    k_pool = k_pool.reshape(n_pages * ps, hkv, d).at[flat].set(
+        k8, mode="drop").reshape(k_pool.shape)
+    v_pool = v_pool.reshape(n_pages * ps, hkv, d).at[flat].set(
+        v8, mode="drop").reshape(v_pool.shape)
+
+    # densify each token's slot through the table, then mask to <= positions
+    kf = gather_pages_ref(k_pool, table[slots])          # (T, S', Hkv, D)
+    vf = gather_pages_ref(v_pool, table[slots])
+    kf = kf.astype(jnp.float32) * jnp.exp2(-k_n.astype(jnp.float32))
+    vf = vf.astype(jnp.float32) * jnp.exp2(-v_n.astype(jnp.float32))
+    s = kf.shape[1]
+    qg = q.reshape(t, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("thgd,tshd->thgs", qg, kf) / (d ** 0.5)
+    rows = jnp.arange(s)[None, :]
+    mapped = jnp.repeat(table[slots] >= 0, ps, axis=1)   # (T, S')
+    vis = (rows <= pos[:, None]) & mapped
+    p = jax.nn.softmax(jnp.where(vis[:, None, None, :], scores, -1e30),
+                       axis=-1)
+    # inert rows (positions < 0) see nothing: zero them instead of the
+    # uniform junk a fully-masked softmax yields
+    p = jnp.where(jnp.any(vis, axis=-1)[:, None, None, None], p, 0.0)
+    out = jnp.einsum("thgs,tshd->thgd", p, vf)
+    return out.reshape(t, hq, d).astype(q.dtype), k_pool, v_pool
+
+
 def qdecode_attn_ref(q, k_cache, v_cache, k_n, v_n, kv_len):
     """Dequantize-everything flash-free reference decode attention.
 

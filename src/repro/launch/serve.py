@@ -16,6 +16,13 @@ Policies:
              slice.  Decode never stalls more than a chunk and every prompt
              length shares one compile shape.  --token-budget caps per-tick
              tokens (live slots + chunk; decode always runs)
+  ragged     chunked, but every tick is ONE ragged forward over a flat token
+             batch: all live decode tokens plus up to --prefill-lanes prompt
+             chunks from *different* queued requests, routed by per-token
+             slot/position vectors (one GEMM per layer per tick, one compile
+             shape for the whole run).  --token-budget is split across lanes
+             in admission order, so bursts drain --prefill-lanes times
+             faster without stalling decode
   scheduler  continuous batching with one-shot admission: a freed slot is
              refilled by a stop-the-world batch-1 prefill + write_kv_slot
              copy (every live slot stalls for the full prompt)
@@ -24,7 +31,7 @@ Policies:
   lockstep   the legacy single-batch generate() (no queue; --requests is
              clamped to --slots)
 
---paged (chunked only) swaps the dense per-slot KV slabs for a shared page
+--paged (chunked/ragged) swaps the dense per-slot KV slabs for a shared page
 pool + per-slot page tables: admission block-allocates ceil(extent /
 --page-size) pages and defers on exhaustion instead of crashing;
 --pool-pages sizes the pool (default dense parity).  Prefix sharing is on
@@ -116,11 +123,17 @@ def main(argv=None):
     ap.add_argument("--arrival-spacing", type=int, default=2,
                     help="decode-step ticks between request arrivals")
     ap.add_argument("--policy", default="scheduler",
-                    choices=["chunked", "scheduler", "restart", "lockstep"])
+                    choices=["chunked", "ragged", "scheduler", "restart",
+                             "lockstep"])
+    ap.add_argument("--prefill-lanes", type=int, default=2,
+                    help="concurrent prompt-chunk lanes per ragged tick "
+                         "(ragged policy; 1 reproduces chunked admission "
+                         "order with the ragged kernel)")
     ap.add_argument("--chunk-size", type=int, default=16,
-                    help="prefill chunk tokens per mixed step (chunked "
-                         "policy; the last chunk's padded rows must fit "
-                         "max_len, so keep it <= --prompt-len)")
+                    help="prefill chunk tokens per mixed/ragged step "
+                         "(chunked and ragged policies; the last chunk's "
+                         "padded rows must fit max_len, so keep it "
+                         "<= --prompt-len)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="per-tick token cap for chunked admission "
                          "(0 = unbounded; must fit one chunk)")
@@ -168,9 +181,9 @@ def main(argv=None):
     cfg = get_config(args.arch)
     model = cfg.build(dtype=jnp.float32, remat="off")
     params = model.init(jax.random.PRNGKey(args.seed))
-    if args.paged and args.policy != "chunked":
-        raise SystemExit("--paged requires --policy chunked (block-allocated "
-                         "admission rides the mixed step)")
+    if args.paged and args.policy not in ("chunked", "ragged"):
+        raise SystemExit("--paged requires --policy chunked or ragged "
+                         "(block-allocated admission rides the fused step)")
     engine = ServeEngine(model=model, params=params,
                          max_len=args.prompt_len + args.max_new,
                          batch_slots=args.slots, quantized_kv=args.qkv,
@@ -209,9 +222,13 @@ def main(argv=None):
         sched = engine.scheduler(
             eos_id=None if args.eos_id < 0 else args.eos_id,
             prompt_bucket=args.prompt_bucket or None,
-            chunk_size=args.chunk_size if args.policy == "chunked" else None,
+            chunk_size=(args.chunk_size
+                        if args.policy in ("chunked", "ragged") else None),
             token_budget=(args.token_budget or None)
-            if args.policy == "chunked" else None,
+            if args.policy in ("chunked", "ragged") else None,
+            ragged=args.policy == "ragged",
+            prefill_lanes=(args.prefill_lanes
+                           if args.policy == "ragged" else 1),
             prefix_sharing=not args.no_prefix_sharing,
             oversubscribe=args.oversubscribe,
             preempt_policy=args.preempt_policy)

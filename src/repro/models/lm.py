@@ -73,7 +73,9 @@ class CausalLM:
               positions: Optional[jax.Array] = None,
               decode: bool = False,
               chunk=None,
+              ragged=None,
               logit_pos: Optional[jax.Array] = None,
+              logit_rows: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
         """Returns (logits (B, S, vocab_padded), new_cache).
 
@@ -84,6 +86,10 @@ class CausalLM:
         head over the padded vocab dwarfs the rest of a small-batch forward,
         so slicing *before* the head is the admission-path win for one-shot
         and chunked admission alike.
+        ``ragged``: a RaggedBatch routing this forward as one flat (1, T)
+        token batch over a per-slot cache (serve/engine.make_ragged_step);
+        combine with ``logit_rows`` ((R,) int32 token indices) to compute
+        logits only at the rows that sample a token (returns (B, R, V)).
         """
         ctx = ctx.scope(self.name)
         embedder = self._embed()
@@ -97,7 +103,9 @@ class CausalLM:
 
         x, new_cache = self.stack.apply(params["stack"], x, ctx, cache=cache,
                                         positions=positions, decode=decode,
-                                        chunk=chunk)
+                                        chunk=chunk, ragged=ragged)
+        if logit_rows is not None:
+            x = jnp.take(x, jnp.asarray(logit_rows, jnp.int32), axis=1)
         if logit_pos is not None:
             x = jax.lax.dynamic_slice_in_dim(
                 x, jnp.asarray(logit_pos, jnp.int32), 1, axis=1)
@@ -242,11 +250,17 @@ class EncDecLM:
 
     def decode_step(self, params: Params, tokens: jax.Array, enc: jax.Array,
                     ctx: Context, *, cache=None, positions=None, decode=False,
-                    chunk=None, logit_pos=None) -> Tuple[jax.Array, Any]:
+                    chunk=None, ragged=None, logit_pos=None,
+                    logit_rows=None) -> Tuple[jax.Array, Any]:
         ctx = ctx.scope(self.name)
         x = self._embed().apply(params["embed"], tokens, ctx)
         if positions is None:
-            if chunk is not None:
+            if ragged is not None:
+                # ragged tick: each token carries its own absolute position
+                # into the learned table (pads clamp to 0 — never sampled)
+                positions = jnp.maximum(
+                    jnp.asarray(ragged.positions, jnp.int32), 0)[None, :]
+            elif chunk is not None:
                 # chunked prefill: the chunk's tokens sit at absolute
                 # positions start..start+C-1 in the learned position table
                 positions = jnp.asarray(chunk.start, jnp.int32) \
@@ -269,7 +283,10 @@ class EncDecLM:
         x = x + jnp.take(ptab, jnp.clip(positions, 0, ptab.shape[0] - 1),
                          axis=0).astype(x.dtype)
         x, new_cache = self.decoder.apply(params["decoder"], x, ctx, cache=cache,
-                                          enc=enc, decode=decode, chunk=chunk)
+                                          enc=enc, decode=decode, chunk=chunk,
+                                          ragged=ragged)
+        if logit_rows is not None:
+            x = jnp.take(x, jnp.asarray(logit_rows, jnp.int32), axis=1)
         if logit_pos is not None:
             x = jax.lax.dynamic_slice_in_dim(
                 x, jnp.asarray(logit_pos, jnp.int32), 1, axis=1)
@@ -280,13 +297,14 @@ class EncDecLM:
 
     def apply(self, params: Params, tokens, ctx: Context, *, embeds=None,
               cache=None, positions=None, decode=False, enc=None, chunk=None,
-              logit_pos=None):
+              ragged=None, logit_pos=None, logit_rows=None):
         """CausalLM-compatible signature; encodes unless `enc` is given."""
         if enc is None:
             enc = self.encode(params, embeds, ctx)
         return self.decode_step(params, tokens, enc, ctx, cache=cache,
                                 positions=positions, decode=decode,
-                                chunk=chunk, logit_pos=logit_pos)
+                                chunk=chunk, ragged=ragged,
+                                logit_pos=logit_pos, logit_rows=logit_rows)
 
     def loss(self, params: Params, batch: Dict[str, jax.Array], ctx: Context):
         logits, _ = self.apply(params, batch["tokens"], ctx,

@@ -36,6 +36,7 @@ from repro.nn.module import Context, Params
 # --------------------------------------------------------------------------
 
 def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse rotary frequencies ``1/theta^(2i/d)`` over half the head dim."""
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
 
 
@@ -734,6 +735,116 @@ def set_kv_slot_len(ln: jax.Array, slot: jax.Array,
         ln, jnp.asarray(new_len, jnp.int32).reshape(1), slot, axis=0)
 
 
+@dataclasses.dataclass(frozen=True)
+class RaggedBatch:
+    """Per-token addressing for the one-forward-per-tick ragged step.
+
+    The (1, T) token batch flattens every live slot's decode token plus the
+    prefill-chunk tokens of several concurrent admission lanes; ``slots`` and
+    ``positions`` ((T,) traced int32 vectors) name each token's batch slot
+    and logical cache row.  ``positions[t] < 0`` marks an inert pad row:
+    nothing is written, the length bump is a no-op, and the output row is
+    junk that callers never gather (CausalLM's ``logit_rows`` selects only
+    real rows).  Both vectors are traced, so one compile serves every mix of
+    decode tokens and lane chunks at a fixed token budget T.
+    """
+
+    slots: Any
+    positions: Any
+
+
+def _ragged_flat_rows(table: jax.Array, slots: jax.Array, pos: jax.Array,
+                      ps: int, n_pool: int) -> jax.Array:
+    """Vectorized :func:`paged_flat_index` over a ragged token batch.
+
+    Token ``t`` maps to pool row ``table[slots[t], pos[t]//ps] * ps +
+    pos[t] % ps``; inert rows (pos < 0), positions past the table, and
+    unmapped (-1) pages redirect to the positive out-of-bounds sentinel
+    ``n_pool * ps`` that scatter-with-``mode="drop"`` discards.
+    """
+    mp = table.shape[1]
+    lp = jnp.clip(pos, 0) // ps
+    page = table[slots, jnp.minimum(lp, mp - 1)]
+    valid = (pos >= 0) & (lp < mp) & (page >= 0)
+    return jnp.where(valid, page * ps + jnp.clip(pos, 0) % ps, n_pool * ps)
+
+
+def append_kv_ragged(cache: Dict[str, Any], k_new: jax.Array,
+                     v_new: jax.Array, ragged: RaggedBatch) -> Dict[str, Any]:
+    """Scatter a (1, T, Hkv, D) ragged token batch into a per-slot cache.
+
+    Token ``t``'s K/V row lands at logical row ``ragged.positions[t]`` of
+    slot ``ragged.slots[t]`` (int8 caches quantize-on-write onto the paper
+    grid); inert rows (position < 0) are dropped.  ``len[slot]`` rises to
+    ``max(len[slot], positions+1)`` over the slot's tokens — the scatter-max
+    keeps pad rows (slot 0, position -1 -> max with 0) inert.  The pure-jnp
+    sibling of the fused write inside ``kernels.qragged_attn``.
+    """
+    if cache["k"].dtype == jnp.int8:
+        k_new = qformat.quantize(k_new, cache["k_n"], 8)
+        v_new = qformat.quantize(v_new, cache["v_n"], 8)
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
+    slots = jnp.asarray(ragged.slots, jnp.int32)
+    pos = jnp.asarray(ragged.positions, jnp.int32)
+    if is_paged_cache(cache):
+        n_pool, ps = cache["k"].shape[0], cache["k"].shape[1]
+        flat = _ragged_flat_rows(cache["page_table"], slots, pos, ps, n_pool)
+    else:
+        b, s = cache["k"].shape[0], cache["k"].shape[1]
+        flat = jnp.where((pos >= 0) & (pos < s), slots * s + jnp.clip(pos, 0),
+                         b * s)
+    k = _paged_scatter_rows(cache["k"], k_new[0], flat)
+    v = _paged_scatter_rows(cache["v"], v_new[0], flat)
+    ln = cache["len"].at[slots].max(pos + 1)
+    return dict(cache, k=k, v=v, len=ln)
+
+
+def ragged_attention(q: jax.Array, cache: Dict[str, Any],
+                     ragged: RaggedBatch) -> jax.Array:
+    """Ragged queries (1, T, Hq, D) over a per-slot cache whose rows already
+    hold the batch (``append_kv_ragged``): token ``t`` attends positions
+    ``<= ragged.positions[t]`` of slot ``ragged.slots[t]`` — full prefix
+    plus the causally visible part of its own chunk.  Densifies each token's
+    slot (a per-token gather), so it is the jnp path behind
+    ``kernels.ops.qragged_attn``'s fused version (float caches, sharded
+    runs); int8 caches dequantize on the paper's pow2 grid.  Inert rows
+    (position < 0) see nothing and emit exact zeros.
+    """
+    b, t, hq, d = q.shape
+    hkv = cache["k"].shape[2]
+    g = hq // hkv
+    slots = jnp.asarray(ragged.slots, jnp.int32)
+    pos = jnp.asarray(ragged.positions, jnp.int32)
+    if is_paged_cache(cache):
+        table = cache["page_table"]
+        mp, ps = table.shape[1], cache["k"].shape[1]
+        rows = jnp.maximum(table[slots], 0)              # (T, max_pages)
+        sh = (t, mp * ps) + cache["k"].shape[2:]
+        kt = jnp.take(cache["k"], rows, axis=0).reshape(sh)
+        vt = jnp.take(cache["v"], rows, axis=0).reshape(sh)
+        mapped = jnp.repeat(table[slots] >= 0, ps, axis=1)
+    else:
+        kt = cache["k"][slots]                           # (T, S, Hkv, D)
+        vt = cache["v"][slots]
+        mapped = jnp.ones((t, kt.shape[1]), bool)
+    if kt.dtype == jnp.int8:
+        kt = kt.astype(jnp.float32) * jnp.exp2(-cache["k_n"].astype(jnp.float32))
+        vt = vt.astype(jnp.float32) * jnp.exp2(-cache["v_n"].astype(jnp.float32))
+    else:
+        kt, vt = kt.astype(jnp.float32), vt.astype(jnp.float32)
+    s = kt.shape[1]
+    qg = q[0].reshape(t, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
+    scores = jnp.einsum("thgd,tshd->thgs", qg, kt)
+    vis = (jnp.arange(s)[None, :] <= pos[:, None]) & mapped
+    p = jax.nn.softmax(jnp.where(vis[:, None, None, :], scores, -1e30),
+                       axis=-1)
+    p = jnp.where(jnp.any(vis, axis=-1)[:, None, None, None], p, 0.0)
+    out = jnp.einsum("thgs,tshd->thgd", p, vt)
+    return out.reshape(1, t, hq, d).astype(q.dtype)
+
+
 def append_kv_chunk(cache: Dict[str, Any], k_new: jax.Array, v_new: jax.Array,
                     chunk: KVChunk) -> Dict[str, Any]:
     """Write a (1, C, Hkv, D) prompt chunk in place into ``chunk.slot``'s
@@ -859,6 +970,9 @@ def chunk_attention(q: jax.Array, cache: Dict[str, Any], slot: jax.Array,
 
 @dataclasses.dataclass(frozen=True)
 class Attention:
+    """Multi-head attention: GQA, RoPE, and every serving cache path
+    (dense/paged, fp32/int8 Qm.n KV, decode/chunk/ragged) behind one module.
+    """
     d_model: int
     n_heads: int
     n_kv_heads: int
@@ -891,6 +1005,7 @@ class Attention:
         }
 
     def init(self, key) -> Params:
+        """Create the q/k/v/o projection parameters."""
         ks = jax.random.split(key, 4)
         projs = self._projs()
         return {nm: layer.init(k) for (nm, layer), k in zip(projs.items(), ks)}
@@ -906,7 +1021,11 @@ class Attention:
         kv_source: Optional[jax.Array] = None,  # cross-attention
         decode: bool = False,
         chunk: Optional[KVChunk] = None,
+        ragged: Optional[RaggedBatch] = None,
     ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        """Attend over ``x``; with ``cache`` set, run the decode / chunk /
+        ragged serving path selected by the keyword arguments.
+        """
         ctx = ctx.scope(self.name)
         projs = self._projs()
         b, s, _ = x.shape
@@ -922,7 +1041,10 @@ class Attention:
         v = ctx.constrain(v, "batch", None, "kv_heads", None)
 
         if positions is None:
-            if chunk is not None:          # chunk rows sit at start..start+C-1
+            if ragged is not None:         # per-token rows; pads clamp to 0
+                positions = jnp.maximum(
+                    jnp.asarray(ragged.positions, jnp.int32), 0)[None, :]
+            elif chunk is not None:        # chunk rows sit at start..start+C-1
                 positions = chunk.start + jnp.arange(s)
             elif cache is not None and decode:
                 ln = cache["len"]
@@ -938,7 +1060,57 @@ class Attention:
 
         new_cache = None
         if cache is not None and kv_source is None:
-            if chunk is not None:
+            if ragged is not None:
+                # one ragged forward: every token writes its own cache row
+                # and attends its own slot's prefix — decode tokens and
+                # several prefill lanes in a single kernel launch.
+                if jnp.ndim(cache["len"]) != 1:
+                    raise NotImplementedError(
+                        "the ragged step targets a per-slot cache "
+                        "(init_cache(per_slot_len=True))")
+                from repro.kernels import ops as kops
+
+                slots = jnp.asarray(ragged.slots, jnp.int32)
+                posv = jnp.asarray(ragged.positions, jnp.int32)
+                if cache["k"].dtype == jnp.int8 and ctx.mesh is None \
+                        and kops._mode() != "ref":
+                    # fused Pallas path: quantize-on-write + flash in one
+                    # kernel.  One pool geometry serves both layouts: paged
+                    # caches pass their pool + table as-is; a dense slab is
+                    # *viewed* as a pool of (B * S/bs) pages under the
+                    # identity table (a contiguous reshape, no copy).
+                    if is_paged_cache(cache):
+                        out, k8, v8 = kops.qragged_attn(
+                            q[0].astype(jnp.float32),
+                            k[0].astype(jnp.float32),
+                            v[0].astype(jnp.float32), cache["k"], cache["v"],
+                            cache["k_n"], cache["v_n"], cache["page_table"],
+                            slots, posv)
+                        new_cache = dict(cache, k=k8, v=v8)
+                    else:
+                        bsz, smax, hkv, hd = cache["k"].shape
+                        bs_ = min(512, smax)
+                        while smax % bs_:
+                            bs_ -= 1
+                        steps = smax // bs_
+                        table = jnp.arange(bsz * steps, dtype=jnp.int32
+                                           ).reshape(bsz, steps)
+                        out, k8, v8 = kops.qragged_attn(
+                            q[0].astype(jnp.float32),
+                            k[0].astype(jnp.float32),
+                            v[0].astype(jnp.float32),
+                            cache["k"].reshape(bsz * steps, bs_, hkv, hd),
+                            cache["v"].reshape(bsz * steps, bs_, hkv, hd),
+                            cache["k_n"], cache["v_n"], table, slots, posv)
+                        new_cache = dict(cache,
+                                         k=k8.reshape(cache["k"].shape),
+                                         v=v8.reshape(cache["v"].shape))
+                    out = out[None].astype(q.dtype)
+                    new_cache["len"] = cache["len"].at[slots].max(posv + 1)
+                else:
+                    new_cache = append_kv_ragged(cache, k, v, ragged)
+                    out = ragged_attention(q, new_cache, ragged)
+            elif chunk is not None:
                 # chunked prefill: write the chunk in place into the target
                 # slot's rows, then attend over prefix + visible chunk — no
                 # batch-1 scratch cache, no write_kv_slot copy.

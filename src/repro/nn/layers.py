@@ -33,6 +33,7 @@ from repro.nn.module import Context, Params
 # --------------------------------------------------------------------------
 
 def lecun_normal(key, shape, dtype=jnp.float32, fan_in_axes=None):
+    """Truncated-normal initializer with variance ``1/fan_in``."""
     if fan_in_axes is None:
         fan_in = shape[0] if len(shape) > 1 else shape[0]
         if len(shape) > 2:  # conv kernels: all but the last axis feed in
@@ -44,14 +45,17 @@ def lecun_normal(key, shape, dtype=jnp.float32, fan_in_axes=None):
 
 
 def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    """Gaussian initializer with fixed standard deviation."""
     return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
 
 
 def zeros_init(_key, shape, dtype=jnp.float32):
+    """All-zeros initializer."""
     return jnp.zeros(shape, dtype)
 
 
 def ones_init(_key, shape, dtype=jnp.float32):
+    """All-ones initializer."""
     return jnp.ones(shape, dtype)
 
 
@@ -116,6 +120,9 @@ def _broadcast_channel_n(n: jax.Array, ndim: int, axis: int) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class Dense:
+    """Affine projection dispatching float / fake-quant / integer GEMMs
+    by the context's quantization policy.
+    """
     in_features: int
     out_features: int
     use_bias: bool = True
@@ -125,6 +132,7 @@ class Dense:
     kind: str = "gemm"  # matched against QuantPolicy.skip_kinds
 
     def init(self, key) -> Params:
+        """Create the kernel (and optional bias) parameters."""
         kw, kb = jax.random.split(key)
         p: Params = {"kernel": lecun_normal(kw, (self.in_features, self.out_features),
                                             self.param_dtype)}
@@ -133,6 +141,7 @@ class Dense:
         return p
 
     def apply(self, params: Params, x, ctx: Context):
+        """Project ``x`` under the context's quantization policy."""
         ctx = ctx.scope(self.name)
         kernel = params["kernel"]
         bias = params.get("bias")
@@ -218,6 +227,7 @@ class ConvND:
             ("NHWC", "HWIO", "NHWC"))
 
     def init(self, key) -> Params:
+        """Create the convolution kernel (and optional bias) parameters."""
         kw, kb = jax.random.split(key)
         kshape = (*self.kernel_size, self.in_channels // self.feature_group_count,
                   self.out_channels)
@@ -233,6 +243,7 @@ class ConvND:
             preferred_element_type=preferred)
 
     def apply(self, params: Params, x, ctx: Context):
+        """Convolve ``x`` under the context's quantization policy."""
         ctx = ctx.scope(self.name)
         kernel = params["kernel"]
         bias = params.get("bias")
@@ -280,10 +291,12 @@ class ConvND:
 
 
 def Conv1D(in_channels, out_channels, kernel_size, stride=1, padding="SAME", **kw):
+    """``ConvND`` over one spatial dim (paper's sensor time series)."""
     return ConvND(1, in_channels, out_channels, (kernel_size,), (stride,), padding, **kw)
 
 
 def Conv2D(in_channels, out_channels, kernel_size, stride=1, padding="SAME", **kw):
+    """``ConvND`` over two spatial dims."""
     ks = (kernel_size, kernel_size) if isinstance(kernel_size, int) else tuple(kernel_size)
     st = (stride, stride) if isinstance(stride, int) else tuple(stride)
     return ConvND(2, in_channels, out_channels, ks, st, padding, **kw)
@@ -295,6 +308,7 @@ def Conv2D(in_channels, out_channels, kernel_size, stride=1, padding="SAME", **k
 
 @dataclasses.dataclass(frozen=True)
 class Embedding:
+    """Token-id lookup table."""
     vocab_size: int
     features: int
     param_dtype: Any = jnp.float32
@@ -303,11 +317,13 @@ class Embedding:
     kind: str = "embed"
 
     def init(self, key) -> Params:
+        """Create the embedding table."""
         return {"table": normal_init(key, (self.vocab_size, self.features),
                                      std=1.0 / math.sqrt(self.features),
                                      dtype=self.param_dtype)}
 
     def apply(self, params: Params, ids, ctx: Context):
+        """Gather the embedding rows for ``ids``."""
         ctx = ctx.scope(self.name)
         table = params["table"]
         if isinstance(table, QTensor):
@@ -336,6 +352,7 @@ class Embedding:
 
 @dataclasses.dataclass(frozen=True)
 class LayerNorm:
+    """Layer normalization with learned scale and optional bias."""
     features: int
     eps: float = 1e-5
     use_bias: bool = True
@@ -343,6 +360,7 @@ class LayerNorm:
     name: str = "ln"
 
     def init(self, key) -> Params:
+        """Create the scale (and optional bias) parameters."""
         p: Params = {}
         if self.use_scale:
             p["scale"] = jnp.ones((self.features,), jnp.float32)
@@ -351,6 +369,7 @@ class LayerNorm:
         return p
 
     def apply(self, params: Params, x, ctx: Context):
+        """Normalize ``x`` over its feature axis."""
         del ctx
         dt = x.dtype
         x = x.astype(jnp.float32)
@@ -366,14 +385,17 @@ class LayerNorm:
 
 @dataclasses.dataclass(frozen=True)
 class RMSNorm:
+    """Root-mean-square normalization with learned scale."""
     features: int
     eps: float = 1e-6
     name: str = "rms"
 
     def init(self, key) -> Params:
+        """Create the scale parameter."""
         return {"scale": jnp.ones((self.features,), jnp.float32)}
 
     def apply(self, params: Params, x, ctx: Context):
+        """Scale ``x`` by the inverse RMS of its feature axis."""
         del ctx
         dt = x.dtype
         x = x.astype(jnp.float32)
@@ -399,6 +421,7 @@ class BatchNormFolded:
     name: str = "bn"
 
     def init(self, key) -> Params:
+        """Create the affine parameters and running statistics."""
         del key
         return {
             "gamma": jnp.ones((self.features,), jnp.float32),
@@ -408,12 +431,14 @@ class BatchNormFolded:
         }
 
     def fold(self, params: Params) -> Tuple[jax.Array, jax.Array]:
+        """Fold running stats + affine into one inference scale/offset pair."""
         sigma = jnp.sqrt(params["var"] + self.eps)      # Eq. 6
         w = params["gamma"] / sigma                      # Eq. 5
         b = params["beta"] - params["gamma"] * params["mean"] / sigma  # Eq. 7
         return w, b
 
     def apply(self, params: Params, x, ctx: Context):
+        """Apply the folded scale/offset (inference-form batch norm)."""
         if ctx.train:
             axes = tuple(range(x.ndim - 1))
             mu = jnp.mean(x, axis=axes)
@@ -453,6 +478,9 @@ def max_pool(x, window: int, stride: Optional[int] = None, ndim: int = 1):
 
 
 def avg_pool(x, window: int, stride: Optional[int] = None, ndim: int = 1):
+    """Average pool; integer inputs use int32 sum + shift when the window
+    is a power of two (the paper's no-division rule).
+    """
     stride = stride or window
     if isinstance(x, QTensor):
         # Integer average: int32 sum + shift when the divisor is a power of
@@ -476,6 +504,7 @@ def avg_pool(x, window: int, stride: Optional[int] = None, ndim: int = 1):
 
 
 def avg_pool_sum(x, window: int, stride: int, ndim: int = 1):
+    """Sum over pooling windows (the integer accumulator of ``avg_pool``)."""
     import numpy as np
 
     dims = (1, window, 1) if ndim == 1 else (1, window, window, 1)
@@ -485,6 +514,7 @@ def avg_pool_sum(x, window: int, stride: int, ndim: int = 1):
 
 
 def global_avg_pool(x, ndim: int = 1):
+    """Mean over all spatial axes (integer divide for QTensor inputs)."""
     axes = (1,) if ndim == 1 else (1, 2)
     if isinstance(x, QTensor):
         size = math.prod(x.q.shape[a] for a in axes)
@@ -519,6 +549,7 @@ def qadd(a, b, ctx: Context, site: str = "add", n_out: Optional[jax.Array] = Non
 
 
 def dropout(x, rate: float, ctx: Context, name: str = "dropout"):
+    """Inverted dropout; identity when not training or no rng in ``ctx``."""
     if not ctx.train or rate <= 0.0 or ctx.rng is None:
         return x
     keep = 1.0 - rate

@@ -47,10 +47,12 @@ class GatedMLP:
         }
 
     def init(self, key) -> Params:
+        """Create the gate/up/down projection parameters."""
         ks = jax.random.split(key, 3)
         return {nm: l.init(k) for (nm, l), k in zip(self._layers().items(), ks)}
 
     def apply(self, params: Params, x, ctx: Context):
+        """Gated feed-forward: ``down(act(gate(x)) * up(x))``."""
         ctx = ctx.scope(self.name)
         ls = self._layers()
         g = ls["w_gate"].apply(params["w_gate"], x, ctx)
@@ -80,10 +82,12 @@ class MLP:
         }
 
     def init(self, key) -> Params:
+        """Create the two projection layers' parameters."""
         ks = jax.random.split(key, 2)
         return {nm: l.init(k) for (nm, l), k in zip(self._layers().items(), ks)}
 
     def apply(self, params: Params, x, ctx: Context):
+        """Plain feed-forward: ``proj2(act(proj1(x)))``."""
         ctx = ctx.scope(self.name)
         ls = self._layers()
         a = ACTIVATIONS[self.activation](ls["w_in"].apply(params["w_in"], x, ctx))

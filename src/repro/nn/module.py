@@ -33,6 +33,9 @@ Params = Dict[str, Any]
 
 @dataclasses.dataclass
 class Context:
+    """Per-call state threaded through every module: quantization policy,
+    train flag, rng, mesh/axis rules, name scoping and stat collection.
+    """
     policy: QuantPolicy = dataclasses.field(default_factory=QuantPolicy.float32)
     train: bool = False
     rng: Optional[jax.Array] = None
@@ -112,10 +115,12 @@ class Context:
 
     @property
     def tp_size(self) -> int:
+        """Tensor-parallel degree (size of the ``model`` mesh axis)."""
         return self._axis_size("model")
 
     # -- naming ------------------------------------------------------------
     def scope(self, name: str) -> "Context":
+        """Child context with ``name`` appended to the naming path."""
         child = dataclasses.replace(self)
         child.stats = self.stats  # shared collectors
         child.losses = self.losses
@@ -123,11 +128,13 @@ class Context:
         return child
 
     def key(self, name: str) -> str:
+        """Fully-scoped name for a quant site under the current path."""
         return f"{self.path}/{name}" if self.path else name
 
     # -- stats -------------------------------------------------------------
     @property
     def collecting(self) -> bool:
+        """Whether range statistics are being gathered (CALIB/QAT modes)."""
         return self.policy.mode in (QMode.CALIB, QMode.QAT)
 
     def record(self, name: str, value: jax.Array) -> None:
@@ -154,6 +161,7 @@ class Context:
 
     # -- rng ---------------------------------------------------------------
     def fold_rng(self, name: str) -> Optional[jax.Array]:
+        """Deterministically fold the scoped name into the context rng."""
         if self.rng is None:
             return None
         # crc32 (not hash()) so the fold-in is deterministic across processes.
@@ -183,10 +191,12 @@ class Context:
 
 
 def eval_context(policy: Optional[QuantPolicy] = None, **kw) -> Context:
+    """A non-training ``Context`` (float32 policy unless given)."""
     return Context(policy=policy or QuantPolicy.float32(), train=False, **kw)
 
 
 def train_context(policy: Optional[QuantPolicy] = None, rng=None, **kw) -> Context:
+    """A training ``Context`` carrying ``rng`` for dropout and QAT noise."""
     return Context(policy=policy or QuantPolicy.float32(), train=True, rng=rng, **kw)
 
 
@@ -195,11 +205,13 @@ def train_context(policy: Optional[QuantPolicy] = None, rng=None, **kw) -> Conte
 # --------------------------------------------------------------------------
 
 def param_count(params: Params) -> int:
+    """Total number of scalar parameters in a param pytree."""
     leaves = jax.tree_util.tree_leaves(params)
     return int(sum(l.size for l in leaves if hasattr(l, "size")))
 
 
 def param_bytes(params: Params) -> int:
+    """Total storage bytes of a param pytree (int8 counts 1)."""
     leaves = jax.tree_util.tree_leaves(params)
     return int(sum(l.size * l.dtype.itemsize for l in leaves if hasattr(l, "size")))
 

@@ -36,6 +36,9 @@ from repro.nn.module import Context, Params
 
 @dataclasses.dataclass(frozen=True)
 class MoE:
+    """Mixture-of-experts feed-forward: top-k token routing over stacked
+    expert MLPs with a load-balancing auxiliary loss.
+    """
     d_model: int
     d_ff: int                      # per-expert hidden dim
     n_experts: int
@@ -52,6 +55,7 @@ class MoE:
                      dtype=jnp.float32, name="router", kind="router")
 
     def init(self, key) -> Params:
+        """Create router and stacked expert parameters."""
         kr, kg, ki, ko, ks = jax.random.split(key, 5)
         E, D, F = self.n_experts, self.d_model, self.d_ff
         p: Params = {

@@ -37,6 +37,9 @@ def _global_max_pool(x, ndim: int):
 
 @dataclasses.dataclass(frozen=True)
 class ResNetV1_6:
+    """The paper's small ResNetv1-6 (conv stem, two residual stages,
+    global pool + classifier) for the MCU-scale image/HAR tasks.
+    """
     in_channels: int
     filters: int
     classes: int
@@ -64,6 +67,7 @@ class ResNetV1_6:
         }
 
     def init(self, key) -> Params:
+        """Create all convolution/BN/classifier parameters."""
         ls = self._layers()
         ks = jax.random.split(key, len(ls))
         return {nm: l.init(k) for (nm, l), k in zip(ls.items(), ks)}

@@ -38,6 +38,7 @@ from repro.nn.module import Context, Params
 
 @dataclasses.dataclass(frozen=True)
 class Mamba:
+    """Mamba selective-SSM mixer with a recurrent decode state."""
     d_model: int
     d_inner: int = 0          # default 2*d_model
     d_state: int = 16
@@ -69,6 +70,7 @@ class Mamba:
         }
 
     def init(self, key) -> Params:
+        """Create projection, conv and SSM parameters."""
         ks = jax.random.split(key, 6)
         di, n = self._di, self.d_state
         p = {nm: l.init(k) for (nm, l), k in zip(self._projs().items(), ks)}
@@ -179,6 +181,7 @@ class Mamba:
         return out, new_state
 
     def init_state(self, batch: int) -> Dict[str, Any]:
+        """Zeroed per-slot recurrent state (conv window + SSM state)."""
         return {"h": jnp.zeros((batch, self._di, self.d_state), jnp.float32),
                 "conv": jnp.zeros((batch, self.d_conv - 1, self._di), self.dtype)}
 
@@ -206,6 +209,7 @@ class RWKV6TimeMix:
 
     @property
     def n_heads(self):
+        """Number of time-mix heads (``d_model / head_dim``)."""
         return self.d_model // self.head_dim
 
     def _projs(self):
@@ -215,6 +219,7 @@ class RWKV6TimeMix:
                 "wg": mk("wg"), "wo": mk("wo")}
 
     def init(self, key) -> Params:
+        """Create time-mix interpolation, decay and projection parameters."""
         ks = jax.random.split(key, 9)
         d, h, n = self.d_model, self.n_heads, self.head_dim
         p = {nm: l.init(k) for (nm, l), k in zip(self._projs().items(), ks)}
@@ -267,6 +272,7 @@ class RWKV6TimeMix:
     def apply(self, params: Params, x, ctx: Context,
               state: Optional[Dict[str, Any]] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        """Run the WKV recurrence over ``x``; returns output and new state."""
         ctx = ctx.scope(self.name)
         projs = self._projs()
         b, s, d = x.shape
@@ -316,6 +322,7 @@ class RWKV6TimeMix:
         return y, new_state
 
     def init_state(self, batch: int) -> Dict[str, Any]:
+        """Zeroed per-slot WKV state (last token + per-head accumulator)."""
         return {"s": jnp.zeros((batch, self.n_heads, self.head_dim, self.head_dim),
                                jnp.float32),
                 "shift": jnp.zeros((batch, 1, self.d_model), self.dtype)}
@@ -341,6 +348,7 @@ class RWKV6ChannelMix:
         }
 
     def init(self, key) -> Params:
+        """Create channel-mix interpolation and projection parameters."""
         ks = jax.random.split(key, 3)
         p = {nm: l.init(k) for (nm, l), k in zip(self._projs().items(), ks)}
         p["mix"] = {"x": jnp.full((2, self.d_model), 0.5, jnp.float32)}
@@ -348,6 +356,7 @@ class RWKV6ChannelMix:
 
     def apply(self, params: Params, x, ctx: Context,
               state: Optional[Dict[str, Any]] = None):
+        """Squared-ReLU channel mix; returns output and shifted-token state."""
         ctx = ctx.scope(self.name)
         projs = self._projs()
         last = state["shift"] if state is not None else jnp.zeros(

@@ -48,6 +48,9 @@ def _remat(fn, policy_name: str):
 
 @dataclasses.dataclass(frozen=True)
 class Block:
+    """One residual block: norm + mixer (attention/Mamba/RWKV) + norm +
+    feed-forward (MLP/gated/MoE), with optional cross-attention.
+    """
     d_model: int
     # mixer
     mixer: str = "attn"            # attn | mamba | rwkv
@@ -118,6 +121,7 @@ class Block:
 
     # ---- params ---------------------------------------------------------------
     def init(self, key) -> Params:
+        """Create the block's norm/mixer/FFN (and cross-attn) parameters."""
         ks = jax.random.split(key, 6)
         p: Params = {"norm1": self._norm("norm1").init(ks[0]),
                      "mixer": self._mixer().init(ks[1])}
@@ -136,6 +140,7 @@ class Block:
                    page_size: Optional[int] = None,
                    num_pages: Optional[int] = None,
                    ) -> Dict[str, Any]:
+        """Per-layer decode cache (KV slab or paged pool, or SSM state)."""
         if self.mixer == "attn":
             from repro.nn.attention import init_kv_cache, init_paged_kv_cache
 
@@ -175,7 +180,11 @@ class Block:
               enc: Optional[jax.Array] = None,
               positions: Optional[jax.Array] = None,
               decode: bool = False,
-              chunk=None) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+              chunk=None,
+              ragged=None) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        """Run the block; serving paths thread ``cache``/``chunk``/``ragged``
+        through the mixer and gather per-token encoder rows for cross-attn.
+        """
         ctx = ctx.scope(self.name)
         new_cache: Dict[str, Any] = {}
         h = self._norm("norm1").apply(params["norm1"], x, ctx)
@@ -184,7 +193,7 @@ class Block:
             mix_out, kv = self._mixer().apply(
                 params["mixer"], h, ctx, positions=positions,
                 cache=None if cache is None else cache["kv"], decode=decode,
-                chunk=chunk)
+                chunk=chunk, ragged=ragged)
             if kv is not None:
                 new_cache["kv"] = kv
         else:
@@ -203,7 +212,22 @@ class Block:
         x = x + mix_out
         if self.cross:
             hx = self._norm("norm_x").apply(params["norm_x"], x, ctx)
-            xo, _ = self._xattn().apply(params["xattn"], hx, ctx, kv_source=enc)
+            if ragged is not None:
+                # Ragged tick: hx is one (1, T, d) token batch mixing tokens
+                # from several decode slots, but cross-attention must pair
+                # each token with *its own* slot's encoder output.  Gather
+                # enc rows per token and run tokens-as-batch (T, 1, d) so
+                # every row cross-attends only its own context (pads clamp
+                # to slot 0 — their output rows are never sampled).
+                slots = jnp.clip(jnp.asarray(ragged.slots, jnp.int32), 0, None)
+                enc_g = jnp.take(enc, slots, axis=0)        # (T, S_enc, d)
+                hx_t = jnp.swapaxes(hx, 0, 1)               # (T, 1, d)
+                xo, _ = self._xattn().apply(params["xattn"], hx_t, ctx,
+                                            kv_source=enc_g)
+                xo = jnp.swapaxes(xo, 0, 1)                 # (1, T, d)
+            else:
+                xo, _ = self._xattn().apply(params["xattn"], hx, ctx,
+                                            kv_source=enc)
             x = x + xo
         if ffn is not None:
             h2 = self._norm("norm2").apply(params["norm2"], x, ctx)
@@ -232,9 +256,11 @@ class Stack:
 
     @property
     def n_layers(self) -> int:
+        """Total layer count (prelude + scanned periods)."""
         return len(self.prelude) + len(self.body) * self.n_periods
 
     def init(self, key) -> Params:
+        """Create parameters for every layer (stacked for scanned periods)."""
         kp, kb = jax.random.split(key)
         p: Params = {}
         if self.prelude:
@@ -259,6 +285,7 @@ class Stack:
                    page_size: Optional[int] = None,
                    num_pages: Optional[int] = None,
                    ) -> Dict[str, Any]:
+        """Decode caches for all layers, stacked to match the scan layout."""
         kw = dict(quantized_kv=quantized_kv, kv_dtype=kv_dtype,
                   per_slot_len=per_slot_len, page_size=page_size,
                   num_pages=num_pages)
@@ -284,7 +311,11 @@ class Stack:
               enc: Optional[jax.Array] = None,
               positions: Optional[jax.Array] = None,
               decode: bool = False,
-              chunk=None) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+              chunk=None,
+              ragged=None) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        """Run all layers (prelude loop + scanned periods), threading the
+        serving kwargs and per-layer cache slices through each block.
+        """
         ctx = ctx.scope(self.name)
         new_cache: Dict[str, Any] = {} if cache is not None else None
 
@@ -293,7 +324,7 @@ class Stack:
             x, nc = blk.apply(params["prelude"][i], x, bctx,
                               cache=None if cache is None else cache["prelude"][i],
                               enc=enc, positions=positions, decode=decode,
-                              chunk=chunk)
+                              chunk=chunk, ragged=ragged)
             if new_cache is not None:
                 new_cache.setdefault("prelude", []).append(nc)
 
@@ -310,7 +341,7 @@ class Stack:
                     bctx = sctx.scope(f"l{i}")
                     x2, nc = blk.apply(p, xc, bctx, cache=c, enc=enc,
                                        positions=positions, decode=decode,
-                                       chunk=chunk)
+                                       chunk=chunk, ragged=ragged)
                     return x2, nc, sctx.stats, sctx.losses
 
                 if self.remat != "off":
@@ -335,7 +366,8 @@ class Stack:
                 xc, nc = blk.apply(
                     p_list[pos], xc, bctx,
                     cache=None if c_list is None else c_list[pos],
-                    enc=enc, positions=positions, decode=decode, chunk=chunk)
+                    enc=enc, positions=positions, decode=decode, chunk=chunk,
+                    ragged=ragged)
                 ncs.append(nc if nc is not None else {})
             return xc, (tuple(ncs), sctx.stats, sctx.losses)
 

@@ -144,6 +144,55 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
     return mixed
 
 
+def make_ragged_step(model, *, mesh=None, axis_rules=None,
+                     policy: Optional[QuantPolicy] = None,
+                     temperature: float = 0.0) -> Callable:
+    """One ragged forward per tick: decode tokens for *all* live slots and
+    prefill-chunk tokens from up to L concurrent admission lanes flatten into
+    a single (1, T) token batch, T = B + L*C, so every layer runs exactly one
+    GEMM per tick no matter how many lanes are active (vs the mixed step's
+    two applies and single chunk).
+
+    (params, tok (B,1), cache, rng, chunk_tok (L,C), slot_ids (T,),
+     positions (T,), logit_rows (R,), enc=None) -> (next (R,1), cache')
+
+    Per-token addressing replaces the mixed step's scalar chunk metadata:
+    token ``t`` is logical row ``positions[t]`` of slot ``slot_ids[t]``;
+    rows with position -1 are inert padding (idle decode slots, lane tail
+    past the prompt) — they write nothing and their outputs are junk.
+    ``logit_rows`` ((R,) int32, R = B + L) picks the rows that sample: row r
+    < B is decode slot r's token, row B+l is lane l's last valid chunk token
+    (only meaningful on a lane's final chunk).  The LM head runs over R
+    rows, not T — the same before-the-head slicing win as ``logit_pos``.
+
+    Every shape is a function of (B, L, C) alone, so the step compiles once
+    per scheduler geometry — O(1) compiles over prompt length, lane count
+    in use, and arrival pattern.
+
+    ``enc`` (EncDec serving): per-slot encoder outputs (B, S_enc, D); the
+    ragged block gathers each token's own slot row (nn/transformer.py).
+    """
+    from repro.nn.attention import RaggedBatch
+
+    def ragged_step(params, tok, cache, rng, chunk_tok, slot_ids, positions,
+                    logit_rows, enc=None):
+        ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
+                      mesh=mesh, axis_rules=axis_rules)
+        flat = jnp.concatenate(
+            [tok[:, 0], jnp.reshape(chunk_tok, (-1,))])[None, :]   # (1, T)
+        rb = RaggedBatch(slots=jnp.asarray(slot_ids, jnp.int32),
+                         positions=jnp.asarray(positions, jnp.int32))
+        kw = {"enc": enc} if enc is not None else {}
+        logits, new_cache = model.apply(
+            params, flat, ctx, cache=cache, decode=True, ragged=rb,
+            logit_rows=jnp.asarray(logit_rows, jnp.int32), **kw)
+        vocab = getattr(model, "vocab", logits.shape[-1])
+        nxt = sample_tokens(logits[0], rng, vocab, temperature)    # (R, 1)
+        return nxt, new_cache
+
+    return ragged_step
+
+
 @dataclasses.dataclass
 class ServeEngine:
     """Fixed-slot batched generation over a (possibly quantized) model.

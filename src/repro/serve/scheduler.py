@@ -90,7 +90,8 @@ from repro.nn.attention import (copy_kv_page, gather_pool_pages,
                                 set_kv_slot_len, set_page_entry, set_page_row,
                                 write_kv_slot)
 from repro.serve.engine import (make_decode_step, make_mixed_step,
-                                make_prefill_step, sample_tokens)
+                                make_prefill_step, make_ragged_step,
+                                sample_tokens)
 from repro.serve.paging import PageAllocator, PrefixIndex, SwapArea
 
 
@@ -512,7 +513,9 @@ class Scheduler:
                  oversubscribe: bool = False,
                  preempt_policy: str = "recompute",
                  preempt_aging: int = 2,
-                 oversize: str = "reject"):
+                 oversize: str = "reject",
+                 ragged: bool = False,
+                 prefill_lanes: int = 1):
         """Bind the scheduler's jitted steps to ``engine`` (see class doc)."""
         self.engine = engine
         self.eos_id = eos_id
@@ -526,6 +529,8 @@ class Scheduler:
         self.preempt_policy = preempt_policy
         self.preempt_aging = int(preempt_aging)
         self.oversize = oversize
+        self.ragged = bool(ragged)
+        self.prefill_lanes = int(prefill_lanes)
         self.encdec = hasattr(engine.model, "encode")
         if self.oversubscribe and not self.paged:
             raise ValueError(
@@ -563,6 +568,18 @@ class Scheduler:
                 raise ValueError(
                     f"token_budget {token_budget} < chunk_size {chunk_size}: "
                     f"an idle batch could never admit a chunk")
+        if self.ragged and chunk_size is None:
+            raise ValueError(
+                "ragged=True requires chunked admission (chunk_size=...): "
+                "the ragged step's prefill lanes carry fixed-size chunks")
+        if self.prefill_lanes < 1:
+            raise ValueError(
+                f"prefill_lanes must be >= 1, got {prefill_lanes}")
+        if self.prefill_lanes > 1 and not self.ragged:
+            raise ValueError(
+                f"prefill_lanes={prefill_lanes} requires ragged=True: the "
+                f"mixed step carries exactly one chunk per tick — only the "
+                f"ragged forward flattens several lanes into one batch")
 
         model = engine.model
         vocab = engine.vocab
@@ -664,6 +681,28 @@ class Scheduler:
             self._slot_prefill = jax.jit(slot_prefill)
             self._admit = jax.jit(admit, donate_argnums=(0,))
             self._jits += [self._slot_prefill, self._admit]
+        elif self.ragged:
+            # ragged admission: ONE forward per tick — decode rows for every
+            # slot plus up to prefill_lanes C-token chunks, flattened into a
+            # single (1, B + L*C) token batch (engine.make_ragged_step).
+            # Pure-decode ticks run the same step with all-inert lane rows:
+            # one compile shape for the entire run.
+            rag = make_ragged_step(
+                model, mesh=engine.mesh, axis_rules=engine.axis_rules,
+                temperature=temperature)
+            nslots = engine.batch_slots
+
+            def masked_ragged(params, tok, cache, rng, active, chunk_tok,
+                              slot_ids, positions, logit_rows, enc=None):
+                nxt, cache = rag(params, tok, cache, rng, chunk_tok,
+                                 slot_ids, positions, logit_rows, enc)
+                dec = jnp.where(active[:, None], nxt[:nslots], pad)
+                return dec, nxt[nslots:], cache
+
+            self._masked_ragged = jax.jit(masked_ragged,
+                                          donate_argnums=(1, 2) if sync
+                                          else (2,))
+            self._jits.append(self._masked_ragged)
         else:
             # chunked admission: one fused mixed step, one compile shape
             mixed = make_mixed_step(
@@ -847,6 +886,22 @@ class Scheduler:
                 if self.prefix_sharing:
                     cache = self._copy_page(cache, jnp.int32(0),
                                             jnp.int32(n - 1))
+            if self.ragged:
+                # one compile serves every tick: shapes depend only on
+                # (slots, lanes, chunk) — values here are throwaway
+                L, C = self.prefill_lanes, self.chunk_size
+                T = eng.batch_slots + L * C
+                ctok = jnp.full((L, C), self.pad_id, jnp.int32)
+                sids = jnp.zeros((T,), jnp.int32)
+                poss = jnp.full((T,), -1, jnp.int32)
+                lrows = jnp.zeros((eng.batch_slots + L,), jnp.int32)
+                tok, firsts, cache = self._masked_ragged(
+                    eng.params, tok, cache, rng, active, ctok, sids, poss,
+                    lrows, enc)
+                tok = self._set_tok(tok, firsts[:1], slot0)
+                cache = self._evict(cache, slot0)
+                jax.block_until_ready((tok, cache))
+                return time.perf_counter() - t0
             ctok = jnp.full((1, self.chunk_size), self.pad_id, jnp.int32)
             tok, first, cache = self._masked_mixed(
                 eng.params, tok, cache, rng, active, ctok, slot0,
@@ -997,7 +1052,11 @@ class Scheduler:
         tok = jnp.full((nslots, 1), self.pad_id, jnp.int32)
         rng = jax.random.PRNGKey(seed)
         active_host, active_dev = None, None
-        prefill: Optional[_Prefill] = None
+        # chunked admission state: the requests currently being prefilled
+        # chunk-by-chunk into reserved slots.  The mixed step drives exactly
+        # one lane; the ragged step drives up to prefill_lanes concurrently.
+        lanes: List[_Prefill] = []
+        max_lanes = self.prefill_lanes if self.ragged else 1
         alloc = PageAllocator(eng.kv_num_pages) if self.paged else None
         index = PrefixIndex(eng.page_size) if self.prefix_sharing else None
         slot_pages: Dict[int, List[int]] = {}
@@ -1155,7 +1214,7 @@ class Scheduler:
             while preempted:
                 p = preempted[0]
                 free = [j for j in range(nslots) if slots[j] is None
-                        and (prefill is None or prefill.slot != j)]
+                        and all(p.slot != j for p in lanes)]
                 if not free:
                     stats.resume_stalls += 1
                     return
@@ -1228,7 +1287,7 @@ class Scheduler:
                     preempt(victim)
 
         t0 = time.perf_counter()
-        while queue or prefill is not None or preempted \
+        while queue or lanes or preempted \
                 or any(s is not None for s in slots):
             if time_ticks:      # stamp the wall clock at each arrival tick
                 for r in queue:
@@ -1263,69 +1322,75 @@ class Scheduler:
                     admit_live(j, r, first)
             else:
                 # -- chunked admission: reserve a slot (and, when paged, the
-                # request's full page extent) for the oldest arrived
-                # request; its chunks ride the mixed step --------------------
-                if prefill is None and queue and queue[0].arrival <= t:
-                    free = [j for j in range(nslots) if slots[j] is None]
-                    if free:
-                        r = queue[0]
-                        plan = None
-                        if alloc is not None:
-                            plan = self._plan_admission(r, plen_of[r.rid],
-                                                        alloc, index,
-                                                        keys=digests_of(r))
-                            if plan is None:
-                                # page exhaustion defers the admission in
-                                # the queue; eviction frees pages, so the
-                                # retry eventually lands (decode never waits)
-                                stats.page_stalls += 1
-                        if alloc is None or plan is not None:
-                            queue.popleft()
-                            j = free[0]
-                            start0 = 0
-                            if plan is not None:
-                                row_pages, copies, n_share, start0 = plan
-                                slot_pages[j] = list(row_pages)
-                                if n_share or copies:
-                                    stats.prefix_hits += 1
-                                    stats.shared_pages_mapped += n_share
-                                    stats.cow_copies += len(copies)
-                                # device order: privatize divergence pages
-                                # (COW copy) BEFORE installing the row that
-                                # points at the copies, then park the slot's
-                                # live length at the shared-prefix boundary
-                                # so the decode half's junk append for this
-                                # still-prefilling slot lands in the private
-                                # region, never through a shared mapping
-                                for src, dst in copies:
-                                    cache = self._copy_page(
-                                        cache, jnp.int32(src), jnp.int32(dst))
-                                cache = self._set_pages(
-                                    cache, jnp.int32(j),
-                                    self._page_row(row_pages))
-                                if start0:
-                                    cache = self._set_len(
-                                        cache, jnp.int32(j),
-                                        jnp.int32(start0))
-                                stats.peak_pages_in_use = alloc.peak_in_use
-                            if enc_buf is not None:
-                                enc_buf = self._set_enc(
-                                    enc_buf, enc_of[r.rid], jnp.int32(j))
-                            prefill = _Prefill(
-                                req=r, slot=j,
-                                prompt=np.asarray(r.prompt,
-                                                  np.int32).reshape(-1),
-                                next_start=start0)
-                if prefill is not None:
+                # request's full page extent) per open lane for the oldest
+                # arrived requests; chunks ride the mixed/ragged step -------
+                while len(lanes) < max_lanes and queue \
+                        and queue[0].arrival <= t:
+                    free = [j for j in range(nslots) if slots[j] is None
+                            and all(p.slot != j for p in lanes)]
+                    if not free:
+                        break
+                    r = queue[0]
+                    plan = None
+                    if alloc is not None:
+                        plan = self._plan_admission(r, plen_of[r.rid],
+                                                    alloc, index,
+                                                    keys=digests_of(r))
+                        if plan is None:
+                            # page exhaustion defers the admission in
+                            # the queue; eviction frees pages, so the
+                            # retry eventually lands (decode never waits).
+                            # Head-of-queue blocking on purpose: skipping
+                            # ahead would starve the big request behind an
+                            # endless stream of small ones.
+                            stats.page_stalls += 1
+                            break
+                    queue.popleft()
+                    j = free[0]
+                    start0 = 0
+                    if plan is not None:
+                        row_pages, copies, n_share, start0 = plan
+                        slot_pages[j] = list(row_pages)
+                        if n_share or copies:
+                            stats.prefix_hits += 1
+                            stats.shared_pages_mapped += n_share
+                            stats.cow_copies += len(copies)
+                        # device order: privatize divergence pages
+                        # (COW copy) BEFORE installing the row that
+                        # points at the copies, then park the slot's
+                        # live length at the shared-prefix boundary
+                        # so the decode half's junk append for this
+                        # still-prefilling slot lands in the private
+                        # region, never through a shared mapping
+                        for src, dst in copies:
+                            cache = self._copy_page(
+                                cache, jnp.int32(src), jnp.int32(dst))
+                        cache = self._set_pages(
+                            cache, jnp.int32(j),
+                            self._page_row(row_pages))
+                        if start0:
+                            cache = self._set_len(
+                                cache, jnp.int32(j),
+                                jnp.int32(start0))
+                        stats.peak_pages_in_use = alloc.peak_in_use
+                    if enc_buf is not None:
+                        enc_buf = self._set_enc(
+                            enc_buf, enc_of[r.rid], jnp.int32(j))
+                    lanes.append(_Prefill(
+                        req=r, slot=j,
+                        prompt=np.asarray(r.prompt, np.int32).reshape(-1),
+                        next_start=start0))
+                if lanes and not self.ragged:
                     n_live = sum(s is not None for s in slots)
                     if self.token_budget is not None \
                             and n_live + C > self.token_budget:
                         stats.stalled_chunks += 1   # decode never waits
                     else:
-                        chunk_job = prefill
+                        chunk_job = lanes[0]
 
-            if not any(s is not None for s in slots) and chunk_job is None:
-                if prefill is None:
+            if not any(s is not None for s in slots) and chunk_job is None \
+                    and not (self.ragged and lanes):
+                if not lanes:
                     # With nothing live, no pages will ever be freed again —
                     # a blocked resume or a page-stalled head request is a
                     # genuine deadlock, not a transient stall.  Raise loudly
@@ -1352,13 +1417,73 @@ class Scheduler:
             # -- one batched step; finished slots emit masked pads -----------
             active = [s is not None for s in slots]
             stats.peak_live_slots = max(
-                stats.peak_live_slots,
-                sum(active) + (1 if prefill is not None else 0))
+                stats.peak_live_slots, sum(active) + len(lanes))
             if active != active_host:       # rebuild device mask only on change
                 active_host, active_dev = active, jnp.asarray(active)
             rng, sub = jax.random.split(rng)
-            admitted = None                 # (slot, request, first) on last chunk
-            if chunk_job is not None:
+            admitted = []               # (slot, request, first) on last chunks
+            if self.ragged:
+                # -- ONE ragged forward: B decode rows + L lanes x C chunk
+                # rows flatten into a single token batch; idle slots and
+                # lane tails are inert pad rows (position -1), so every
+                # tick — pure decode included — is the same compiled step.
+                L = self.prefill_lanes
+                sids = np.zeros((nslots + L * C,), np.int32)
+                poss = np.full((nslots + L * C,), -1, np.int32)
+                ctok = np.full((L, C), self.pad_id, np.int32)
+                lrows = np.full((nslots + L,), 0, np.int32)
+                lrows[:nslots] = np.arange(nslots)
+                for j, s in enumerate(slots):
+                    if s is not None:
+                        sids[j] = j
+                        # this tick consumes tok[j] (the slot's last sampled
+                        # token) and writes its K/V at the next free row
+                        poss[j] = s.plen + s.emitted - 1
+                # split the token budget over the lanes in admission order:
+                # older lanes drain first, younger lanes take the remainder
+                avail = None if self.token_budget is None \
+                    else max(0, self.token_budget - sum(active))
+                ran: List[Tuple[int, int]] = []     # (lane index, clen)
+                for li, p in enumerate(lanes):
+                    base = nslots + li * C
+                    lrows[nslots + li] = base
+                    room = int(p.prompt.shape[0]) - p.next_start
+                    clen = min(C, room) if avail is None \
+                        else min(C, room, avail)
+                    if clen <= 0:
+                        stats.stalled_chunks += 1   # decode never waits
+                        continue
+                    if avail is not None:
+                        avail -= clen
+                    start = p.next_start
+                    ctok[li, :clen] = p.prompt[start:start + clen]
+                    sids[base:base + clen] = p.slot
+                    poss[base:base + clen] = np.arange(start, start + clen)
+                    lrows[nslots + li] = base + clen - 1
+                    if alloc is not None:
+                        # ragged lanes write exactly their clen valid rows
+                        # (pads are inert): none may go through a shared
+                        # mapping (COW ran at admission)
+                        self._assert_private_write(
+                            slot_pages[p.slot], start, start + clen, alloc)
+                    ran.append((li, clen))
+                tok, firsts, cache = self._masked_ragged(
+                    eng.params, tok, cache, sub, active_dev,
+                    jnp.asarray(ctok), jnp.asarray(sids), jnp.asarray(poss),
+                    jnp.asarray(lrows), enc_buf)
+                done = []
+                for li, clen in ran:
+                    p = lanes[li]
+                    stats.prefill_chunks += 1
+                    p.next_start += clen
+                    if p.next_start >= int(p.prompt.shape[0]):
+                        first = firsts[li:li + 1]
+                        tok = self._set_tok(tok, first, jnp.int32(p.slot))
+                        admitted.append((p.slot, p.req, first))
+                        done.append(li)
+                for li in reversed(done):
+                    lanes.pop(li)
+            elif chunk_job is not None:
                 start = chunk_job.next_start
                 plen = int(chunk_job.prompt.shape[0])
                 clen = min(C, plen - start)
@@ -1378,8 +1503,8 @@ class Scheduler:
                 if chunk_job.next_start >= plen:
                     tok = self._set_tok(tok, first,
                                         jnp.int32(chunk_job.slot))
-                    admitted = (chunk_job.slot, chunk_job.req, first)
-                    prefill = None
+                    admitted.append((chunk_job.slot, chunk_job.req, first))
+                    lanes.pop(0)
             else:
                 tok, cache = self._masked_decode(eng.params, tok, cache, sub,
                                                  active_dev, enc_buf)
@@ -1406,9 +1531,8 @@ class Scheduler:
                 for s_j, s_ in enumerate(slots):
                     if s_ is not None:
                         _acc(slot_pages[s_j], s_.plen + s_.emitted)
-                if prefill is not None:
-                    _acc(slot_pages.get(prefill.slot, []),
-                         prefill.next_start)
+                for p_ in lanes:
+                    _acc(slot_pages.get(p_.slot, []), p_.next_start)
                 for p_ in preempted:   # parked shared prefixes stay live
                     _acc(p_.kept, len(p_.kept) * eng.page_size)
                 stats.page_util_sum += sum(fill.values()) / (
@@ -1433,8 +1557,8 @@ class Scheduler:
                     slot.cols.append((j, len(step_cols) - 1))
                 if hit_eos or slot.emitted >= slot.req.max_new:
                     finish(j, slot, hit_eos)
-            if admitted is not None:
-                admit_live(*admitted)
+            for a in admitted:
+                admit_live(*a)
         stats.steady_s = time.perf_counter() - t0
         stats.num_jit_compiles = self._count_jit_compiles()
 
