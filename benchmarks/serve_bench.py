@@ -59,6 +59,19 @@ int8 KV); the gate (``check_burst``) is p99 TTFT in deterministic
 virtual-time steps — the mixed step admits one chunk per tick however
 large the budget, the ragged step drains the burst ``lanes``-wide.
 
+A sixth sweep (``bench_chaos``) drills the **hardening stack**: the
+oversubscribed swap workload re-runs with per-request deadlines, a bounded
+admission queue and the every-tick pool/state auditor, first fault-free and
+then under an injected :class:`FaultPlan` (pool-exhaustion ticks, swap-area
+refusals, an admission stall, one NaN-logit tick).  Asserted in-run: the
+faulted run completes without raising, every request lands a terminal
+status, exactly the NaN-poisoned request fails (its tokens a clean prefix
+of its reference stream), and every non-faulted request is token-identical
+to the fault-free reference — injected faults may reorder the schedule,
+never the streams.  The gate (``check_chaos``) requires non-faulted
+completion rate == 1.0.  ``--chaos-only`` runs just this sweep (the CI
+chaos lane's entry point, cheap enough for interpreted-kernel mode).
+
 CI-enforced gates (all deterministic or same-run relative):
 
   * the same-run relative gate — chunked must beat one-shot on p99
@@ -90,7 +103,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_config
-from repro.serve import Request, ServeEngine, run_restart_batching
+from repro.serve import (FaultPlan, Request, ServeEngine,
+                         run_restart_batching)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
@@ -505,6 +519,114 @@ def bench_burst(model, params, vocab, *, smoke=True, seed=0):
     return out
 
 
+def bench_chaos(model, params, vocab, *, smoke=True, seed=0):
+    """Chaos sweep: the hardening stack under an injected fault schedule.
+
+    The oversubscribed swap workload runs with generous per-request
+    deadlines, a bounded admission queue and ``audit=True`` (the every-tick
+    pool/state auditor + NaN sentinel), twice per variant at identical
+    config: fault-free reference, then under a :class:`FaultPlan` mixing
+    pool-exhaustion ticks, swap-area refusals, an admission stall and one
+    NaN-logit event.  In-run assertions: the faulted run finishes without
+    raising, every request gets a terminal status, exactly the NaN victim
+    is ``failed`` (its tokens a clean prefix of its reference stream), no
+    non-faulted request times out or is rejected, and every non-faulted
+    stream is token-identical to the reference.  ``check_chaos`` gates the
+    non-faulted completion rate at exactly 1.0.
+    """
+    if smoke:
+        wl = dict(n_requests=10, plen=64, max_new=48, spacing=1, slots=10,
+                  chunk=32, page=16, pool_pages=21, deadline=600,
+                  max_queue=10)
+        plan = FaultPlan(alloc_fail={6, 7}, swap_fail={6, 7, 9},
+                         admit_stall={3}, nan={40: 2})
+    else:
+        wl = dict(n_requests=20, plen=128, max_new=96, spacing=1, slots=20,
+                  chunk=64, page=16, pool_pages=42, deadline=1200,
+                  max_queue=20)
+        plan = FaultPlan(alloc_fail={10, 11}, swap_fail={10, 11, 14},
+                         admit_stall={4}, nan={80: 3})
+    max_len = wl["plen"] + wl["max_new"]
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=wl["plen"],
+                                        dtype=np.int32),
+                    max_new=wl["max_new"], arrival=i * wl["spacing"],
+                    deadline_steps=wl["deadline"])
+            for i in range(wl["n_requests"])]
+    out = {"workload": {**wl, "max_len": max_len},
+           "fault_plan": plan.to_json()}
+    for name in ("fp32", "qkv"):
+        kw = VARIANTS[name]
+        eng = ServeEngine(model=model, params=params, max_len=max_len,
+                          batch_slots=wl["slots"], paged_kv=True,
+                          page_size=wl["page"],
+                          kv_pool_pages=wl["pool_pages"], **kw)
+        sched = lambda: eng.scheduler(  # noqa: E731
+            chunk_size=wl["chunk"], prefix_sharing=False,
+            oversubscribe=True, preempt_policy="swap", audit=True,
+            max_queue=wl["max_queue"], reject_policy="reject")
+        ref_res, ref_st = sched().run(reqs, seed=seed)
+        assert all(r.status == "ok" for r in ref_res.values()), (
+            f"chaos/{name}: fault-free reference run degraded")
+        assert ref_st.audited_ticks > 0
+        f_res, f_st = sched().run(reqs, seed=seed, fault_plan=plan)
+        # terminal-status totality: nothing raised, nothing lost
+        assert sorted(f_res) == sorted(r.rid for r in reqs)
+        failed = sorted(r.rid for r in f_res.values()
+                        if r.status == "failed")
+        assert f_st.nan_evictions == 1 and len(failed) == 1, (
+            f"chaos/{name}: expected exactly the NaN victim to fail, got "
+            f"{failed} (nan_evictions {f_st.nan_evictions})")
+        victim = failed[0]
+        assert f_st.timeouts == 0 and f_st.rejections == 0, (
+            f"chaos/{name}: non-faulted requests degraded (timeouts "
+            f"{f_st.timeouts}, rejections {f_st.rejections})")
+        vtoks = f_res[victim].tokens
+        assert vtoks == ref_res[victim].tokens[:len(vtoks)], (
+            f"chaos/{name}: NaN victim rid {victim} emitted a poisoned "
+            f"token before eviction")
+        for r in reqs:   # faults reorder the schedule, never the streams
+            if r.rid == victim:
+                continue
+            assert f_res[r.rid].tokens == ref_res[r.rid].tokens, (
+                f"chaos/{name}: token divergence under faults on "
+                f"non-faulted rid {r.rid}")
+        assert f_st.fault_events > 0 and f_st.audited_ticks > 0
+        assert f_st.swap_refusals > 0, (
+            f"chaos/{name}: the swap-refusal seam never fired — retune "
+            f"the plan's swap_fail ticks to overlap a preemption")
+        nonfaulted_ok = sum(1 for r in f_res.values()
+                            if r.status == "ok")
+        rate = nonfaulted_ok / max(len(reqs) - len(failed), 1)
+        out[name] = {
+            "tokens_identical": True,
+            "statuses": {s: sum(1 for r in f_res.values()
+                                if r.status == s)
+                         for s in sorted({r.status
+                                          for r in f_res.values()})},
+            "nan_victim_rid": victim,
+            "victim_clean_tokens": len(vtoks),
+            "fault_events": f_st.fault_events,
+            "nan_evictions": f_st.nan_evictions,
+            "swap_refusals": f_st.swap_refusals,
+            "preemptions": f_st.preemptions,
+            "resumes": f_st.resumes,
+            "deadlock_failures": f_st.deadlock_failures,
+            "audited_ticks_faulted": f_st.audited_ticks,
+            "audited_ticks_reference": ref_st.audited_ticks,
+            "nonfaulted_completion_rate": round(rate, 4),
+            "completion_rate": round(f_st.completion_rate, 4),
+        }
+        print(f"chaos/{name:5s} identity ok | {f_st.fault_events} fault "
+              f"events ({f_st.swap_refusals} swap refusals) | NaN victim "
+              f"rid {victim} failed after {len(vtoks)} clean tokens | "
+              f"preempt {f_st.preemptions} resume {f_st.resumes} | audited "
+              f"{f_st.audited_ticks} ticks clean | non-faulted completion "
+              f"{rate:.2f}")
+    return out
+
+
 def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     cfg = get_config("smollm-135m-smoke")
     model = cfg.build(dtype=jnp.float32, remat="off")
@@ -547,6 +669,8 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
     results["oversub"] = bench_oversub(model, params, cfg.vocab, smoke=smoke,
                                        seed=seed)
     results["burst"] = bench_burst(model, params, cfg.vocab, smoke=smoke,
+                                   seed=seed)
+    results["chaos"] = bench_chaos(model, params, cfg.vocab, smoke=smoke,
                                    seed=seed)
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
@@ -696,6 +820,30 @@ def check_burst(results, *, min_burst_ttft_ratio: float = 1.2) -> bool:
     return ok
 
 
+def check_chaos(results) -> bool:
+    """The chaos gate: under the injected fault schedule, every request the
+    plan did NOT poison must complete ``ok`` — non-faulted completion rate
+    exactly 1.0.  Deterministic for a fixed seed; token identity of the
+    non-faulted streams vs the fault-free reference, single-victim NaN
+    containment and clean auditor ticks were already asserted inside the
+    run."""
+    ok = True
+    for name, v in results.get("chaos", {}).items():
+        if name in ("workload", "fault_plan"):
+            continue
+        rate = v["nonfaulted_completion_rate"]
+        if rate < 1.0:
+            print(f"REGRESSION chaos/{name}: non-faulted completion rate "
+                  f"{rate:.2f} < 1.00 (statuses {v['statuses']})")
+            ok = False
+        else:
+            print(f"ok chaos/{name}: non-faulted completion 1.00 "
+                  f"({v['fault_events']} fault events contained; NaN victim "
+                  f"rid {v['nan_victim_rid']} failed cleanly; "
+                  f"{v['audited_ticks_faulted']} audited ticks)")
+    return ok
+
+
 def check_baseline(results, baseline_path: str, tolerance: float,
                    *, strict: bool = False) -> bool:
     """Per variant x policy: compare steady tok/s and p99 latency (in
@@ -775,12 +923,32 @@ def main(argv=None):
     ap.add_argument("--min-burst-ttft-ratio", type=float, default=1.2,
                     help="burst gate floor: ragged multi-lane vs single-lane "
                          "mixed p99 TTFT on a one-tick arrival burst")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run only the fault-injection chaos sweep + its "
+                         "gate (the CI chaos lane; cheap enough for "
+                         "REPRO_KERNELS_FORCE=interpret)")
     ap.add_argument("--strict-baseline", action="store_true",
                     help="make the absolute --baseline comparison a hard "
                          "gate again (default: warn-only — cross-machine "
                          "absolute numbers are weather)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.chaos_only:
+        cfg = get_config("smollm-135m-smoke")
+        model = cfg.build(dtype=jnp.float32, remat="off")
+        params = model.init(jax.random.PRNGKey(args.seed))
+        results = {"chaos": bench_chaos(model, params, cfg.vocab,
+                                        smoke=args.smoke, seed=args.seed)}
+        out_path = args.out or os.path.join(OUT_DIR, "serve_chaos.json")
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {out_path}")
+        if not check_chaos(results):
+            raise SystemExit(1)
+        print("serve_bench chaos ok")
+        return
     results = run(smoke=args.smoke, seed=args.seed, out_path=args.out)
     ok = check_relative(results, min_p99_speedup=args.min_p99_speedup,
                         min_tok_ratio=args.min_tok_ratio)
@@ -792,6 +960,7 @@ def main(argv=None):
                        min_oversub_ratio=args.min_oversub_ratio) and ok
     ok = check_burst(results,
                      min_burst_ttft_ratio=args.min_burst_ttft_ratio) and ok
+    ok = check_chaos(results) and ok
     if args.baseline:
         ok = check_baseline(results, args.baseline, args.tolerance,
                             strict=args.strict_baseline) and ok

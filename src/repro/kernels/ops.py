@@ -45,6 +45,16 @@ def _mode() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def is_hardware_dispatch() -> bool:
+    """True when kernels dispatch as *compiled* Pallas (TPU default, or
+    ``FORCE="pallas"``) — the regime where per-page DMA size governs HBM
+    efficiency.  The interpreter and the jnp oracle return False: they are
+    correctness paths, not performance paths.  Callers gate
+    hardware-geometry warnings (e.g. the serving page-size guard) on this;
+    tests stub it by setting ``FORCE``."""
+    return _mode() == "pallas"
+
+
 def _2d(x):
     """Collapse leading dims to rows for GEMM wrappers."""
     lead = x.shape[:-1]

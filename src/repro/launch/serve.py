@@ -43,6 +43,13 @@ extent only, grow one page per crossed boundary) with --preempt-policy
 {recompute,swap} deciding what happens when the pool runs dry mid-decode.
 docs/serving.md walks the geometry and the knobs.
 
+Hardening knobs (docs/serving.md "Failure semantics"): --deadline-steps puts
+a per-request latency bound on the workload, --max-queue/--reject-policy
+bound the waiting queue (backpressure), --audit runs the pool/state
+invariant auditor every tick and arms the NaN/Inf logit sentinel, and
+--fault-plan injects a deterministic failure schedule (serve/faults.py) for
+chaos drills.  Every request always comes back with a terminal status.
+
 Timing is reported as warmup/compile seconds and steady-state tok/s
 *separately* — jit compile no longer pollutes the throughput figure.
 """
@@ -64,6 +71,7 @@ def build_workload(args, vocab: int):
     spread is what continuous batching exploits)."""
     rng = np.random.default_rng(args.seed + 1)
     lo = args.max_new_min or args.max_new
+    deadline = getattr(args, "deadline_steps", 0) or None
     reqs = []
     for i in range(args.requests):
         max_new = lo if (lo == args.max_new or i % 2 == 0) else args.max_new
@@ -72,7 +80,8 @@ def build_workload(args, vocab: int):
             prompt=rng.integers(0, vocab, size=args.prompt_len,
                                 dtype=np.int32),
             max_new=int(max_new),
-            arrival=i * args.arrival_spacing))
+            arrival=i * args.arrival_spacing,
+            deadline_steps=deadline))
     return reqs
 
 
@@ -102,6 +111,17 @@ def report(name: str, stats) -> None:
     if s.get("p99_ttft_steps"):
         extra += (f" | ttft p50/p99 {s['p50_ttft_steps']:.0f}/"
                   f"{s['p99_ttft_steps']:.0f} steps")
+    degraded = (s.get("rejections", 0) + s.get("timeouts", 0)
+                + s.get("cancellations", 0) + s.get("failed", 0))
+    if degraded:
+        extra += (f" | completion {s['completion_rate']:.2f} "
+                  f"(rej {s['rejections']}, timeout {s['timeouts']}, "
+                  f"cancel {s['cancellations']}, failed {s['failed']})")
+    if s.get("audited_ticks"):
+        extra += f" | audited {s['audited_ticks']} ticks clean"
+    if s.get("fault_events"):
+        extra += (f" | faults {s['fault_events']} "
+                  f"(swap refusals {s['swap_refusals']})")
     print(f"[{name}] warmup(compile) {s['compile_s']:.2f}s | "
           f"steady {s['steady_tok_s']:.1f} tok/s over {s['steady_s']:.3f}s | "
           f"occupancy {s['occupancy']:.2f} | "
@@ -163,6 +183,28 @@ def main(argv=None):
                          "as a continuation prompt re-prefilled later; "
                          "'swap' copies its private pages to host memory "
                          "and restores them bit-exactly on resume")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request deadline in decode-step ticks "
+                         "(0 = none): a request unfinished this many ticks "
+                         "after arrival is returned status='timeout' with "
+                         "its tokens so far")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the arrived-and-waiting queue (0 = "
+                         "unbounded): arrivals past the bound are shed "
+                         "per --reject-policy as status='rejected'")
+    ap.add_argument("--reject-policy", default="reject",
+                    choices=["reject", "shed_oldest"],
+                    help="bounded-queue backpressure: reject the new "
+                         "arrival, or shed the oldest waiting request "
+                         "in its favor")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the pool/state invariant auditor every tick "
+                         "and arm the NaN/Inf logit sentinel "
+                         "(serve/audit.py; costs a per-tick host readback)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault injection: inline JSON "
+                         "(starting '{') or a JSON file path — see "
+                         "serve/faults.py FaultPlan.from_spec")
     ap.add_argument("--time-ticks", action="store_true",
                     help="block per tick and report wall-clock p50/p99 "
                          "request latency (ms)")
@@ -212,6 +254,18 @@ def main(argv=None):
         print(out[:n, :16])
         return out
 
+    fault_plan = None
+    if args.fault_plan:
+        from repro.serve import FaultPlan
+
+        fault_plan = FaultPlan.from_spec(args.fault_plan)
+        if args.policy in ("restart", "lockstep"):
+            raise SystemExit("--fault-plan requires a scheduler policy "
+                             "(chunked/ragged/scheduler)")
+        if fault_plan.nan and not args.audit:
+            raise SystemExit("--fault-plan with nan events requires --audit "
+                             "(the NaN sentinel is audit mode's health "
+                             "readback)")
     reqs = build_workload(args, cfg.vocab)
     if args.policy == "restart":
         results, stats = run_restart_batching(
@@ -231,13 +285,17 @@ def main(argv=None):
                            if args.policy == "ragged" else 1),
             prefix_sharing=not args.no_prefix_sharing,
             oversubscribe=args.oversubscribe,
-            preempt_policy=args.preempt_policy)
+            preempt_policy=args.preempt_policy,
+            max_queue=args.max_queue or None,
+            reject_policy=args.reject_policy,
+            audit=args.audit)
         results, stats = sched.run(reqs, seed=args.seed,
-                                   time_ticks=args.time_ticks)
+                                   time_ticks=args.time_ticks,
+                                   fault_plan=fault_plan)
         report(args.policy, stats)
     first = results[min(results)]
-    print(f"request {first.rid}: {len(first.tokens)} tokens, "
-          f"first-10 {first.tokens[:10]}")
+    print(f"request {first.rid}: {len(first.tokens)} tokens "
+          f"({first.status}), first-10 {first.tokens[:10]}")
     return results
 
 

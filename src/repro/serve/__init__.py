@@ -5,10 +5,14 @@ geometry (dense slabs or a paged pool); ``Scheduler`` owns batch policy
 (admission, eviction, page allocation); ``PageAllocator`` is the host-side
 free list behind paged admission.  See docs/serving.md for the architecture.
 """
+from repro.serve.audit import (AuditError, check_allocator,  # noqa: F401
+                               check_page_tables, check_swap)
 from repro.serve.engine import (ServeEngine, make_decode_step,  # noqa: F401
                                 make_mixed_step, make_prefill_step,
                                 mask_vocab_tail, sample_tokens)
-from repro.serve.paging import PageAllocator  # noqa: F401
-from repro.serve.scheduler import (Request, RequestResult,  # noqa: F401
-                                   Scheduler, ServeStats,
+from repro.serve.faults import FaultPlan  # noqa: F401
+from repro.serve.paging import (PageAllocator, PrefixIndex,  # noqa: F401
+                                SwapArea)
+from repro.serve.scheduler import (STATUSES, Request,  # noqa: F401
+                                   RequestResult, Scheduler, ServeStats,
                                    run_restart_batching)

@@ -13,6 +13,7 @@ the device tensors keep their static shapes.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -21,6 +22,29 @@ import jax.numpy as jnp
 from repro.core.integerize import integerize_weights_only
 from repro.core.policy import QuantPolicy
 from repro.nn.module import Context
+
+# The sublane tile below which a per-page DMA stops amortizing on real
+# hardware: pages shorter than this make paged attention DMA-bound.
+HW_MIN_PAGE_SIZE = 128
+_small_page_warned = False
+
+
+def _warn_small_page(page_size: int) -> None:
+    """One explicit warning per process when a paged engine is built with a
+    sub-sublane page size while kernels dispatch as compiled Pallas — each
+    page is a separate DMA, so tiny pages run silently slow on hardware
+    (interpret/ref dispatch is unaffected; tests reset the latch via
+    ``engine._small_page_warned``)."""
+    global _small_page_warned
+    if _small_page_warned:
+        return
+    _small_page_warned = True
+    warnings.warn(
+        f"paged KV with page_size={page_size} on a hardware Pallas "
+        f"backend: every page is a separate DMA and {page_size} rows is "
+        f"below the {HW_MIN_PAGE_SIZE}-row sublane tile — attention will "
+        f"be DMA-bound; use page_size >= {HW_MIN_PAGE_SIZE} on hardware",
+        RuntimeWarning, stacklevel=3)
 
 
 def mask_vocab_tail(logits: jax.Array, vocab: int) -> jax.Array:
@@ -78,17 +102,32 @@ def make_prefill_step(model, *, mesh=None, axis_rules=None,
 
 def make_decode_step(model, *, mesh=None, axis_rules=None,
                      policy: Optional[QuantPolicy] = None,
-                     temperature: float = 0.0) -> Callable:
-    """(params, token (B,1), cache, rng, [enc]) -> (next (B,1), cache')."""
+                     temperature: float = 0.0,
+                     with_health: bool = False) -> Callable:
+    """(params, token (B,1), cache, rng, [enc]) -> (next (B,1), cache').
 
-    def decode(params, token, cache, rng, enc=None):
+    ``with_health=True`` (the scheduler's audit mode) adds a per-row logit
+    health flag and an additive ``poison`` hook: the step becomes
+    ``(params, token, cache, rng, enc, poison (B,) f32) ->
+    (next, healthy (B,) bool, cache')`` where ``healthy[b]`` is False iff
+    row b's last-position logits hold any NaN/Inf.  ``poison`` is added to
+    the logits before sampling — all-zeros is an exact no-op, a NaN entry
+    is the fault harness's injection seam (serve/faults.py).
+    """
+
+    def decode(params, token, cache, rng, enc=None, poison=None):
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
                       mesh=mesh, axis_rules=axis_rules)
         kw = {"enc": enc} if enc is not None else {}
         logits, new_cache = model.apply(params, token, ctx, cache=cache,
                                         decode=True, **kw)
         vocab = getattr(model, "vocab", logits.shape[-1])
-        nxt = sample_tokens(logits[:, -1], rng, vocab, temperature)
+        row = logits[:, -1]
+        if poison is not None:
+            row = row + poison[:, None]
+        nxt = sample_tokens(row, rng, vocab, temperature)
+        if with_health:
+            return nxt, jnp.all(jnp.isfinite(row), axis=-1), new_cache
         return nxt, new_cache
 
     return decode
@@ -96,7 +135,8 @@ def make_decode_step(model, *, mesh=None, axis_rules=None,
 
 def make_mixed_step(model, *, mesh=None, axis_rules=None,
                     policy: Optional[QuantPolicy] = None,
-                    temperature: float = 0.0) -> Callable:
+                    temperature: float = 0.0,
+                    with_health: bool = False) -> Callable:
     """Chunked-prefill mixed step: one fused jitted computation that advances
     *all* live decode slots by one token AND prefills one fixed-size prompt
     chunk in place into a target slot's KV slice (nn KVChunk path — no
@@ -117,16 +157,26 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
     The decode half cross-attends each slot to its own row; the batch-1
     chunk half slices the target slot's row — handing it the full batch
     would shape-mismatch (and silently decode against the wrong context).
+
+    ``with_health=True`` (audit mode): the step gains a trailing ``poison``
+    arg (a (B,) f32 vector added to the decode logits — see
+    ``make_decode_step``) and returns
+    ``(next, first, dec_healthy (B,), first_healthy (1,), cache')``.
     """
     from repro.nn.attention import KVChunk
 
     decode = make_decode_step(model, mesh=mesh, axis_rules=axis_rules,
-                              policy=policy, temperature=temperature)
+                              policy=policy, temperature=temperature,
+                              with_health=with_health)
 
     def mixed(params, tok, cache, rng, chunk_tok, slot, start, length,
-              enc=None):
+              enc=None, poison=None):
         rng_d, rng_c = jax.random.split(rng)
-        nxt, cache = decode(params, tok, cache, rng_d, enc)
+        if with_health:
+            nxt, dec_ok, cache = decode(params, tok, cache, rng_d, enc,
+                                        poison)
+        else:
+            nxt, cache = decode(params, tok, cache, rng_d, enc)
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
                       mesh=mesh, axis_rules=axis_rules)
         kw = {}
@@ -139,6 +189,9 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
             logit_pos=length - 1, **kw)
         vocab = getattr(model, "vocab", logits.shape[-1])
         first = sample_tokens(logits[:, 0], rng_c, vocab, temperature)
+        if with_health:
+            first_ok = jnp.all(jnp.isfinite(logits[:, 0]), axis=-1)
+            return nxt, first, dec_ok, first_ok, cache
         return nxt, first, cache
 
     return mixed
@@ -146,7 +199,8 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
 
 def make_ragged_step(model, *, mesh=None, axis_rules=None,
                      policy: Optional[QuantPolicy] = None,
-                     temperature: float = 0.0) -> Callable:
+                     temperature: float = 0.0,
+                     with_health: bool = False) -> Callable:
     """One ragged forward per tick: decode tokens for *all* live slots and
     prefill-chunk tokens from up to L concurrent admission lanes flatten into
     a single (1, T) token batch, T = B + L*C, so every layer runs exactly one
@@ -171,11 +225,16 @@ def make_ragged_step(model, *, mesh=None, axis_rules=None,
 
     ``enc`` (EncDec serving): per-slot encoder outputs (B, S_enc, D); the
     ragged block gathers each token's own slot row (nn/transformer.py).
+
+    ``with_health=True`` (audit mode): the step gains a trailing ``poison``
+    arg ((R,) f32 added to the sampled logit rows — rows < B are decode
+    slots, row B+l is lane l) and returns
+    ``(next (R,1), healthy (R,) bool, cache')``.
     """
     from repro.nn.attention import RaggedBatch
 
     def ragged_step(params, tok, cache, rng, chunk_tok, slot_ids, positions,
-                    logit_rows, enc=None):
+                    logit_rows, enc=None, poison=None):
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
                       mesh=mesh, axis_rules=axis_rules)
         flat = jnp.concatenate(
@@ -187,7 +246,12 @@ def make_ragged_step(model, *, mesh=None, axis_rules=None,
             params, flat, ctx, cache=cache, decode=True, ragged=rb,
             logit_rows=jnp.asarray(logit_rows, jnp.int32), **kw)
         vocab = getattr(model, "vocab", logits.shape[-1])
-        nxt = sample_tokens(logits[0], rng, vocab, temperature)    # (R, 1)
+        rows = logits[0]                                           # (R, V)
+        if poison is not None:
+            rows = rows + poison[:, None]
+        nxt = sample_tokens(rows, rng, vocab, temperature)         # (R, 1)
+        if with_health:
+            return nxt, jnp.all(jnp.isfinite(rows), axis=-1), new_cache
         return nxt, new_cache
 
     return ragged_step
@@ -228,6 +292,11 @@ class ServeEngine:
     def __post_init__(self):
         if self.paged_kv and self.page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.paged_kv and self.page_size < HW_MIN_PAGE_SIZE:
+            from repro.kernels import ops as _kops
+
+            if _kops.is_hardware_dispatch():
+                _warn_small_page(self.page_size)
         if self.weight_quant:
             self.params = integerize_weights_only(self.params)
         self._prefill = jax.jit(make_prefill_step(

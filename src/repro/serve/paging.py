@@ -72,6 +72,11 @@ class PageAllocator:
         """Pages currently held (refcount > 0) by live requests."""
         return self.num_pages - len(self._free)
 
+    @property
+    def free_list(self) -> Sequence[int]:
+        """The free list (LIFO order), read-only — the auditor's view."""
+        return tuple(self._free)
+
     def refcount(self, page: int) -> int:
         """How many slots currently map ``page`` (0 = free)."""
         return self._ref.get(page, 0)
@@ -240,10 +245,20 @@ class SwapArea:
     (``gather_pool_pages`` / ``scatter_pool_pages``).  ``peak_bytes`` is the
     reporting hook: swap traffic is the cost knob the serve bench surfaces
     next to the admission win.
+
+    ``capacity_bytes`` bounds the area (None = unbounded): the scheduler
+    checks :meth:`fits` before parking and falls back to the recompute
+    preemption path when a victim's pages do not fit — host memory refusal
+    degrades, it does not crash.  :meth:`put` past capacity still raises
+    (the loud net behind the polite check).
     """
 
-    def __init__(self):
-        """Create an empty swap area."""
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        """Create an empty swap area (``capacity_bytes=None`` = unbounded)."""
+        if capacity_bytes is not None and capacity_bytes < 0:
+            raise ValueError(
+                f"capacity_bytes must be >= 0, got {capacity_bytes}")
+        self.capacity_bytes = capacity_bytes
         self._data: Dict[int, Any] = {}
         self.bytes_held = 0
         self.peak_bytes = 0
@@ -254,12 +269,23 @@ class SwapArea:
     def __len__(self) -> int:
         return len(self._data)
 
+    def fits(self, nbytes: int) -> bool:
+        """Would ``nbytes`` more fit under ``capacity_bytes``?"""
+        return (self.capacity_bytes is None
+                or self.bytes_held + nbytes <= self.capacity_bytes)
+
     def put(self, rid: int, data: Any) -> None:
         """Park ``rid``'s swapped page contents (a numpy tree)."""
         if rid in self._data:
             raise ValueError(f"request {rid} already swapped out")
+        nbytes = _tree_bytes(data)
+        if not self.fits(nbytes):
+            raise ValueError(
+                f"request {rid}: {nbytes} swap bytes exceed capacity "
+                f"{self.capacity_bytes} (held {self.bytes_held}) — the "
+                f"scheduler should have checked fits() and recomputed")
         self._data[rid] = data
-        self.bytes_held += _tree_bytes(data)
+        self.bytes_held += nbytes
         self.peak_bytes = max(self.peak_bytes, self.bytes_held)
 
     def pop(self, rid: int) -> Any:

@@ -89,10 +89,14 @@ from repro.nn.attention import (copy_kv_page, gather_pool_pages,
                                 reset_kv_slot, scatter_pool_pages,
                                 set_kv_slot_len, set_page_entry, set_page_row,
                                 write_kv_slot)
+from repro.serve.audit import (check_allocator, check_page_tables,
+                               check_swap)
 from repro.serve.engine import (make_decode_step, make_mixed_step,
                                 make_prefill_step, make_ragged_step,
                                 sample_tokens)
-from repro.serve.paging import PageAllocator, PrefixIndex, SwapArea
+from repro.serve.faults import FaultPlan
+from repro.serve.paging import (PageAllocator, PrefixIndex, SwapArea,
+                                _tree_bytes)
 
 
 # --------------------------------------------------------------------------
@@ -102,7 +106,11 @@ from repro.serve.paging import PageAllocator, PrefixIndex, SwapArea
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival`` is the decode-step tick at which
-    the request becomes visible to the scheduler (0 = available at start)."""
+    the request becomes visible to the scheduler (0 = available at start).
+    ``deadline_steps`` (optional) is a per-request latency bound in the
+    same virtual clock: a request still unfinished ``deadline_steps`` ticks
+    after arrival is evicted (or dropped from the queue/parked set) and
+    returned with ``status="timeout"`` — tokens emitted so far included."""
 
     rid: int
     prompt: Any                 # (P,) int32 token ids (list / np / jnp)
@@ -111,13 +119,27 @@ class Request:
     enc: Any = None             # EncDec serving: this request's encoder
     #                             output (S_enc, D) or (1, S_enc, D); None
     #                             for decoder-only models
+    deadline_steps: Optional[int] = None
+
+
+#: Terminal request statuses: ``ok`` (ran to EOS/length), ``timeout``
+#: (deadline_steps expired), ``cancelled`` (host-side cancel), ``rejected``
+#: (bounded-queue backpressure), ``failed`` (unservable deadlock or a
+#: NaN/Inf-poisoned slot evicted by the audit sentinel).
+STATUSES = ("ok", "timeout", "cancelled", "rejected", "failed")
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """Everything the scheduler knows about one finished request: the
-    generated ids and the (arrival, admitted, finished) tick timeline the
-    latency percentiles are computed from."""
+    """Everything the scheduler knows about one *terminal* request: the
+    generated ids, the (arrival, admitted, finished) tick timeline the
+    latency percentiles are computed from, and how it ended (``status``).
+
+    Every request passed to ``run()`` gets exactly one result — degraded
+    outcomes (timeout/cancelled/rejected/failed) carry whatever tokens were
+    emitted before termination instead of vanishing into an exception.
+    ``admitted_at`` is -1 for requests that never reached a slot.
+    """
 
     rid: int
     tokens: List[int]           # generated ids (includes EOS if hit)
@@ -126,6 +148,7 @@ class RequestResult:
     admitted_at: int            # tick the slot-targeted prefill ran
     finished_at: int            # tick the last token was emitted
     eos: bool                   # True: stopped on EOS, False: length limit
+    status: str = "ok"          # one of STATUSES
 
     @property
     def latency_steps(self) -> int:
@@ -188,6 +211,29 @@ class ServeStats:
     #                             per request: first-admission tick - arrival
     #                             (first leg only — a preempted request's
     #                             first token was already served)
+    completed: int = 0          # requests that ended status="ok"
+    rejections: int = 0         # bounded-queue backpressure: requests shed
+    #                             (reject_policy) with status="rejected"
+    timeouts: int = 0           # deadline_steps expiries (status="timeout")
+    cancellations: int = 0      # host-side cancels (status="cancelled")
+    failed: int = 0             # status="failed": deadlock conversions +
+    #                             NaN-sentinel evictions
+    deadlock_failures: int = 0  # failed subset: idle-branch unservable
+    #                             requests (previously a RuntimeError)
+    nan_evictions: int = 0      # failed subset: slots evicted by the
+    #                             NaN/Inf logit sentinel (audit mode)
+    swap_refusals: int = 0      # swap parks refused (SwapArea capacity or
+    #                             an injected fault) -> recompute fallback
+    fault_events: int = 0       # injected FaultPlan denials/poisons fired
+    audited_ticks: int = 0      # ticks the invariant auditor ran clean
+
+    @property
+    def completion_rate(self) -> float:
+        """ok results / all terminal results (1.0 when nothing terminated —
+        vacuously complete); the chaos gate's headline number."""
+        total = (self.completed + self.rejections + self.timeouts
+                 + self.cancellations + self.failed)
+        return self.completed / total if total else 1.0
 
     @property
     def steady_tok_s(self) -> float:
@@ -252,6 +298,16 @@ class ServeStats:
                 np.asarray(self.ttft_steps or [0]), 50)),
             "p99_ttft_steps": float(np.percentile(
                 np.asarray(self.ttft_steps or [0]), 99)),
+            "rejections": self.rejections,
+            "timeouts": self.timeouts,
+            "cancellations": self.cancellations,
+            "failed": self.failed,
+            "completion_rate": round(self.completion_rate, 4),
+            "deadlock_failures": self.deadlock_failures,
+            "nan_evictions": self.nan_evictions,
+            "swap_refusals": self.swap_refusals,
+            "fault_events": self.fault_events,
+            "audited_ticks": self.audited_ticks,
         }
 
 
@@ -326,6 +382,32 @@ def pick_preemption_victim(candidates: Sequence[Tuple[int, int, int, int]],
 
 def _is_kv(node) -> bool:
     return isinstance(node, dict) and "k" in node and "len" in node
+
+
+def _find_paged_kv(cache):
+    """First per-layer KV dict carrying a page table, or None (dense cache).
+
+    Every layer shares one logical page assignment (the allocator hands out
+    pool indices per request, not per layer), so auditing a single layer's
+    table/lens audits them all."""
+    found: List[Any] = []
+
+    def rec(node):
+        if found:
+            return
+        if _is_kv(node):
+            if "page_table" in node:
+                found.append(node)
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                rec(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v)
+
+    rec(cache)
+    return found[0] if found else None
 
 
 def _map_slot_op(cache, fn):
@@ -515,8 +597,26 @@ class Scheduler:
                  preempt_aging: int = 2,
                  oversize: str = "reject",
                  ragged: bool = False,
-                 prefill_lanes: int = 1):
-        """Bind the scheduler's jitted steps to ``engine`` (see class doc)."""
+                 prefill_lanes: int = 1,
+                 max_queue: Optional[int] = None,
+                 reject_policy: str = "reject",
+                 swap_bytes: Optional[int] = None,
+                 audit: bool = False):
+        """Bind the scheduler's jitted steps to ``engine`` (see class doc).
+
+        ``max_queue`` bounds the *arrived-and-waiting* queue (backpressure):
+        an arrival past the bound is terminated with ``status="rejected"``
+        under ``reject_policy="reject"``, or, under ``"shed_oldest"``, the
+        oldest waiting request is shed in its favor (preemption
+        continuations are never shed — they hold served tokens).
+        ``swap_bytes`` caps the swap policy's host SwapArea; a victim whose
+        pages do not fit falls back to recompute preemption
+        (``ServeStats.swap_refusals``).  ``audit=True`` runs the invariant
+        auditor (serve/audit.py) every tick and arms the NaN/Inf logit
+        sentinel: a poisoned slot is evicted as ``failed`` instead of
+        streaming garbage — the per-tick health readback costs pipeline
+        overlap, so it is opt-in (CI keeps it always-on in the chaos lane).
+        """
         self.engine = engine
         self.eos_id = eos_id
         self.pad_id = int(pad_id)
@@ -531,7 +631,20 @@ class Scheduler:
         self.oversize = oversize
         self.ragged = bool(ragged)
         self.prefill_lanes = int(prefill_lanes)
+        self.max_queue = max_queue
+        self.reject_policy = reject_policy
+        self.swap_bytes = swap_bytes
+        self.audit = bool(audit)
+        self._cancel_box: set = set()
         self.encdec = hasattr(engine.model, "encode")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if reject_policy not in ("reject", "shed_oldest"):
+            raise ValueError(
+                f"reject_policy must be 'reject' or 'shed_oldest', "
+                f"got {reject_policy!r}")
+        if swap_bytes is not None and swap_bytes < 0:
+            raise ValueError(f"swap_bytes must be >= 0, got {swap_bytes}")
         if self.oversubscribe and not self.paged:
             raise ValueError(
                 "oversubscribe=True requires a paged engine "
@@ -584,12 +697,18 @@ class Scheduler:
         model = engine.model
         vocab = engine.vocab
         temperature = engine.temperature
+        health = self.audit     # audit mode threads per-row logit health
         decode = make_decode_step(
             model, mesh=engine.mesh, axis_rules=engine.axis_rules,
-            temperature=temperature)
+            temperature=temperature, with_health=health)
         pad = jnp.int32(self.pad_id)
 
-        def masked_decode(params, tok, cache, rng, active, enc=None):
+        def masked_decode(params, tok, cache, rng, active, enc=None,
+                          poison=None):
+            if health:
+                nxt, ok, cache = decode(params, tok, cache, rng, enc,
+                                        poison)
+                return jnp.where(active[:, None], nxt, pad), ok, cache
             nxt, cache = decode(params, tok, cache, rng, enc)
             return jnp.where(active[:, None], nxt, pad), cache
 
@@ -689,11 +808,18 @@ class Scheduler:
             # one compile shape for the entire run.
             rag = make_ragged_step(
                 model, mesh=engine.mesh, axis_rules=engine.axis_rules,
-                temperature=temperature)
+                temperature=temperature, with_health=health)
             nslots = engine.batch_slots
 
             def masked_ragged(params, tok, cache, rng, active, chunk_tok,
-                              slot_ids, positions, logit_rows, enc=None):
+                              slot_ids, positions, logit_rows, enc=None,
+                              poison=None):
+                if health:
+                    nxt, ok, cache = rag(params, tok, cache, rng, chunk_tok,
+                                         slot_ids, positions, logit_rows,
+                                         enc, poison)
+                    dec = jnp.where(active[:, None], nxt[:nslots], pad)
+                    return dec, nxt[nslots:], ok, cache
                 nxt, cache = rag(params, tok, cache, rng, chunk_tok,
                                  slot_ids, positions, logit_rows, enc)
                 dec = jnp.where(active[:, None], nxt[:nslots], pad)
@@ -707,10 +833,16 @@ class Scheduler:
             # chunked admission: one fused mixed step, one compile shape
             mixed = make_mixed_step(
                 model, mesh=engine.mesh, axis_rules=engine.axis_rules,
-                temperature=temperature)
+                temperature=temperature, with_health=health)
 
             def masked_mixed(params, tok, cache, rng, active, chunk_tok,
-                             slot, start, length, enc=None):
+                             slot, start, length, enc=None, poison=None):
+                if health:
+                    nxt, first, dec_ok, first_ok, cache = mixed(
+                        params, tok, cache, rng, chunk_tok, slot, start,
+                        length, enc, poison)
+                    return (jnp.where(active[:, None], nxt, pad), first,
+                            dec_ok, first_ok, cache)
                 nxt, first, cache = mixed(params, tok, cache, rng, chunk_tok,
                                           slot, start, length, enc)
                 return jnp.where(active[:, None], nxt, pad), first, cache
@@ -726,6 +858,15 @@ class Scheduler:
         many distinct prompt lengths a run serves."""
         return sum(f._cache_size() for f in self._jits
                    if hasattr(f, "_cache_size"))
+
+    def cancel(self, rid: int) -> None:
+        """Request host-side cancellation of ``rid`` (thread/callback-safe
+        in the sense that it only mutates a host set): the running ``run()``
+        drains the box at its next tick and terminates the request —
+        wherever it is (queued, mid-prefill, parked, or live) — with
+        ``status="cancelled"`` and its tokens emitted so far.  Cancelling an
+        unknown or already-finished rid is a no-op."""
+        self._cancel_box.add(int(rid))
 
     # ---- paged admission sizing -------------------------------------------
     def _pages_needed(self, plen: int, max_new: int) -> int:
@@ -870,6 +1011,10 @@ class Scheduler:
         tok = jnp.full((eng.batch_slots, 1), self.pad_id, jnp.int32)
         active = jnp.ones((eng.batch_slots,), bool)
         slot0 = jnp.int32(0)
+        # audit mode: the health-threading steps take a poison vector — an
+        # all-zeros one is an exact no-op (see engine.make_decode_step)
+        pz = jnp.zeros((eng.batch_slots,), jnp.float32) \
+            if self.audit else None
         if enc is not None:
             enc = self._set_enc(jnp.zeros_like(enc), enc[:1], slot0)
         if self.chunk_size is not None:
@@ -895,17 +1040,28 @@ class Scheduler:
                 sids = jnp.zeros((T,), jnp.int32)
                 poss = jnp.full((T,), -1, jnp.int32)
                 lrows = jnp.zeros((eng.batch_slots + L,), jnp.int32)
-                tok, firsts, cache = self._masked_ragged(
-                    eng.params, tok, cache, rng, active, ctok, sids, poss,
-                    lrows, enc)
+                if self.audit:
+                    rp = jnp.zeros((eng.batch_slots + L,), jnp.float32)
+                    tok, firsts, _ok, cache = self._masked_ragged(
+                        eng.params, tok, cache, rng, active, ctok, sids,
+                        poss, lrows, enc, rp)
+                else:
+                    tok, firsts, cache = self._masked_ragged(
+                        eng.params, tok, cache, rng, active, ctok, sids,
+                        poss, lrows, enc)
                 tok = self._set_tok(tok, firsts[:1], slot0)
                 cache = self._evict(cache, slot0)
                 jax.block_until_ready((tok, cache))
                 return time.perf_counter() - t0
             ctok = jnp.full((1, self.chunk_size), self.pad_id, jnp.int32)
-            tok, first, cache = self._masked_mixed(
-                eng.params, tok, cache, rng, active, ctok, slot0,
-                jnp.int32(0), jnp.int32(self.chunk_size), enc)
+            if self.audit:
+                tok, first, _dok, _fok, cache = self._masked_mixed(
+                    eng.params, tok, cache, rng, active, ctok, slot0,
+                    jnp.int32(0), jnp.int32(self.chunk_size), enc, pz)
+            else:
+                tok, first, cache = self._masked_mixed(
+                    eng.params, tok, cache, rng, active, ctok, slot0,
+                    jnp.int32(0), jnp.int32(self.chunk_size), enc)
             tok = self._set_tok(tok, first, slot0)
         else:
             for p in sorted({self._bucket(int(p)) for p in prompt_lens}):
@@ -914,8 +1070,12 @@ class Scheduler:
                                                   jnp.int32(p), rng)
                 cache = self._admit(cache, small, slot0, jnp.int32(p))
                 tok = self._set_tok(tok, first, slot0)
-        tok, cache = self._masked_decode(eng.params, tok, cache, rng, active,
-                                         enc)
+        if self.audit:
+            tok, _ok, cache = self._masked_decode(eng.params, tok, cache,
+                                                  rng, active, enc, pz)
+        else:
+            tok, cache = self._masked_decode(eng.params, tok, cache, rng,
+                                             active, enc)
         cache = self._evict(cache, slot0)
         jax.block_until_ready((tok, cache))
         return time.perf_counter() - t0
@@ -923,8 +1083,11 @@ class Scheduler:
     # ---- the serving loop --------------------------------------------------
     def run(self, requests: Sequence[Request], *, seed: int = 0,
             warmup: bool = True, time_ticks: bool = False,
+            cancels: Optional[Dict[int, int]] = None,
+            fault_plan: Optional[FaultPlan] = None,
+            on_tick=None,
             ) -> Tuple[Dict[int, RequestResult], ServeStats]:
-        """Serve all requests to completion; returns ({rid: result}, stats).
+        """Serve all requests to a *terminal* status; ({rid: result}, stats).
 
         Time is discrete: one tick per batched step.  Queued requests become
         visible at their ``arrival`` tick and are admitted into the
@@ -932,6 +1095,24 @@ class Scheduler:
         stop-the-world batch-1 prefill between ticks) or, with
         ``chunk_size`` set, chunked (each tick's fused mixed step carries one
         prompt chunk alongside every live decode slot).
+
+        Every request gets exactly one ``RequestResult`` — ``status="ok"``
+        or a degraded terminal (``STATUSES``) carrying the tokens emitted so
+        far: a ``deadline_steps`` expiry is a ``timeout`` wherever the
+        request currently lives (queued, prefilling, parked, or decoding); a
+        host cancel (``cancels={rid: tick}`` or :meth:`cancel` from a
+        callback) is a ``cancelled``; a bounded-queue shed is a
+        ``rejected``; an unservable request under a dry pool (previously a
+        RuntimeError mid-run) is a ``failed``, as is a slot evicted by the
+        audit-mode NaN/Inf logit sentinel.  ``run()`` itself only raises for
+        invalid *inputs* (and :class:`~repro.serve.audit.AuditError` for
+        genuine state corruption) — operational overload degrades per
+        request instead of burning the whole batch.
+
+        ``fault_plan`` (serve/faults.py) injects deterministic failures at
+        the scheduler's seams for testing; ``on_tick(t)`` is a host hook
+        called at the top of every tick (the cancellation tests drive
+        :meth:`cancel` from it).
 
         Without an ``eos_id`` termination is length-only, so scheduling never
         needs token *values* mid-flight: the loop runs fully async (device
@@ -948,6 +1129,18 @@ class Scheduler:
         nslots = eng.batch_slots
         C = self.chunk_size
         stats = ServeStats()
+        if fault_plan is not None:
+            if fault_plan.nan and not self.audit:
+                raise ValueError(
+                    "FaultPlan.nan requires Scheduler(audit=True): the "
+                    "NaN/Inf sentinel is audit mode's per-tick health "
+                    "readback — without it the poison would stream garbage "
+                    "tokens undetected")
+            for tk, sj in fault_plan.nan.items():
+                if not 0 <= sj < nslots:
+                    raise ValueError(
+                        f"FaultPlan.nan[{tk}] targets slot {sj} outside "
+                        f"[0, {nslots})")
         plen_of: Dict[int, int] = {}
         checked: List[Request] = []
         for r in requests:
@@ -956,6 +1149,10 @@ class Scheduler:
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
             if plen < 1:
                 raise ValueError(f"request {r.rid}: empty prompt")
+            if r.deadline_steps is not None and r.deadline_steps < 1:
+                raise ValueError(
+                    f"request {r.rid}: deadline_steps must be >= 1, got "
+                    f"{r.deadline_steps}")
             if self.encdec and r.enc is None:
                 raise ValueError(
                     f"request {r.rid}: EncDec serving needs the request's "
@@ -1039,10 +1236,29 @@ class Scheduler:
                  for r in requests], seed=seed, enc=enc_buf)
 
         use_eos = self.eos_id is not None
-        queue = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        # pending: not yet arrived; queue: arrived and waiting.  The split
+        # is what bounded-queue backpressure measures — max_queue bounds the
+        # *waiting* set, not the future schedule.
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        queue: deque = deque()
+        cont_rids: set = set()     # recompute continuations: never shed —
+        #                            they hold already-served tokens
+        cancels = {int(k): int(v) for k, v in (cancels or {}).items()}
+        cancel_pending: set = set()
+        has_deadlines = any(r.deadline_steps is not None for r in requests)
+        fault = fault_plan
+        poison_plan = deque(sorted(fault.nan.items())) \
+            if fault is not None else deque()
+        fault_hold = False         # this tick idled because of an injected
+        #                            fault denial (not a genuine deadlock)
+        zero_poison = None
+        if self.audit:
+            R = nslots + (self.prefill_lanes if self.ragged else 0)
+            zero_poison = jnp.zeros((R,), jnp.float32)
         slots: List[Optional[_Slot]] = [None] * nslots
         results: Dict[int, RequestResult] = {}
-        finished: List[Tuple[_Slot, int, int, bool]] = []  # slot, j, t, eos
+        # (slot, j, finish tick, eos, status) per terminal leg
+        finished: List[Tuple[_Slot, int, int, bool, str]] = []
         step_cols: List[jax.Array] = []    # async mode: one (B, 1) per step
         arrival_wall: Dict[int, float] = {}
         cache = eng.new_cache(per_slot=True)
@@ -1064,8 +1280,9 @@ class Scheduler:
         carry: Dict[int, List[int]] = {}     # recompute: earlier legs' tokens
         first_admit: Dict[int, int] = {}     # rid -> first admission tick
         preempted: List[_Preempted] = []     # swap policy: parked requests
-        swap = SwapArea() if (self.oversubscribe
-                              and self.preempt_policy == "swap") else None
+        swap = SwapArea(capacity_bytes=self.swap_bytes) \
+            if (self.oversubscribe
+                and self.preempt_policy == "swap") else None
         t = 0
 
         def digests_of(r: Request) -> Optional[List[bytes]]:
@@ -1078,13 +1295,31 @@ class Scheduler:
                 prompt_keys[r.rid] = keys
             return keys
 
-        def finish(j: int, slot: _Slot, eos: bool):
+        def bump(status: str) -> None:
+            """Route a terminal status into its ServeStats counter."""
+            if status == "ok":
+                stats.completed += 1
+            elif status == "timeout":
+                stats.timeouts += 1
+            elif status == "cancelled":
+                stats.cancellations += 1
+            elif status == "rejected":
+                stats.rejections += 1
+            else:
+                stats.failed += 1
+
+        def finish(j: int, slot: _Slot, eos: bool, status: str = "ok"):
             nonlocal cache
-            finished.append((slot, j, t, eos))
-            stats.latencies_steps.append(t - slot.req.arrival)
-            if time_ticks and slot.req.rid in arrival_wall:
-                stats.latencies_s.append(
-                    time.perf_counter() - arrival_wall[slot.req.rid])
+            finished.append((slot, j, t, eos, status))
+            if status == "ok":
+                # degraded terminals are excluded from the latency
+                # percentiles: a timeout's latency is its deadline by
+                # construction, and mixing it in would poison the p99
+                stats.latencies_steps.append(t - slot.req.arrival)
+                if time_ticks and slot.req.rid in arrival_wall:
+                    stats.latencies_s.append(
+                        time.perf_counter() - arrival_wall[slot.req.rid])
+            bump(status)
             # ORDER MATTERS: enqueue the device-side page-table unmap
             # (evict_cache_slot) BEFORE returning the pages to the host
             # allocator.  The very next admission may be handed these pages
@@ -1126,12 +1361,79 @@ class Scheduler:
                 finish(j, slot, False)
 
         def requeue(r: Request) -> None:
-            """Put a request back into the queue in (arrival, rid) order."""
+            """Put a request back into the queue in (arrival, rid) order.
+
+            Only preemption continuations come through here; they bypass the
+            ``max_queue`` bound (they hold served tokens — shedding one
+            would throw away completed work) and are marked shed-immune.
+            """
+            cont_rids.add(r.rid)
             items = list(queue)
             items.append(r)
             items.sort(key=lambda q: (q.arrival, q.rid))
             queue.clear()
             queue.extend(items)
+
+        def terminal_queued(r: Request, status: str) -> None:
+            """Emit the result for a request terminated outside a live slot
+            (still queued / mid-prefill / parked): tokens are whatever
+            earlier legs banked in ``carry`` (empty for a fresh request)."""
+            results[r.rid] = RequestResult(
+                rid=r.rid, tokens=carry.pop(r.rid, []),
+                prompt_len=orig_plen[r.rid], arrival=r.arrival,
+                admitted_at=first_admit.get(r.rid, -1), finished_at=t,
+                eos=False, status=status)
+            bump(status)
+
+        def fail_slot_state(slot_j: int, r: Request, status: str) -> None:
+            """Tear down a reserved/mid-prefill slot's device + pool state
+            (same evict-before-free ordering as ``finish``) and emit the
+            request's terminal result."""
+            nonlocal cache
+            cache = self._evict(cache, jnp.int32(slot_j))
+            if alloc is not None and slot_j in slot_pages:
+                released = alloc.free(slot_pages.pop(slot_j))
+                if index is not None:
+                    index.drop_pages(released)
+            terminal_queued(r, status)
+
+        def abort_lane(p: _Prefill, status: str) -> None:
+            """Terminate a mid-prefill admission lane."""
+            lanes.remove(p)
+            fail_slot_state(p.slot, p.req, status)
+
+        def terminal_parked(p: _Preempted, status: str) -> None:
+            """Terminate a parked (swapped-out) request: free its kept
+            prefix refs, drop its swapped bytes, harvest its tokens."""
+            preempted.remove(p)
+            finished.append((p.slot, -1, t, False, status))
+            bump(status)
+            released = alloc.free(p.kept)
+            if index is not None:
+                index.drop_pages(released)
+            rid = p.slot.req.rid
+            if rid in swap:
+                swap.pop(rid)
+
+        def reap_status(r: Request) -> Optional[str]:
+            """Terminal status a live/waiting request must take this tick
+            (cancellation beats timeout), or None to keep serving."""
+            if r.rid in cancel_pending:
+                return "cancelled"
+            if r.deadline_steps is not None \
+                    and t >= r.arrival + r.deadline_steps:
+                return "timeout"
+            return None
+
+        def pool_alloc(n: int) -> Optional[List[int]]:
+            """``alloc.alloc`` through the fault seam: a ``deny_alloc``
+            tick answers None (pool exhausted) regardless of free pages."""
+            nonlocal fault_hold
+            if fault is not None and fault.deny_alloc(t):
+                stats.fault_events += 1
+                fault_hold = True
+                return None
+            return alloc.alloc(n)
 
         def harvest_slot_tokens(slot: _Slot) -> List[int]:
             """Tokens this leg emitted so far (device sync in async mode)."""
@@ -1159,7 +1461,13 @@ class Scheduler:
             stats.preemptions += 1
             stats.preempted_rids[rid] = stats.preempted_rids.get(rid, 0) + 1
             pages = slot_pages.pop(j)
-            if swap is not None:
+            park = swap is not None
+            if park and fault is not None and fault.deny_swap(t):
+                # injected host-memory refusal: degrade to recompute
+                stats.fault_events += 1
+                stats.swap_refusals += 1
+                park = False
+            if park:
                 # COW admission keeps shared mappings a contiguous row
                 # prefix; split it from the private tail
                 m = 0
@@ -1180,7 +1488,12 @@ class Scheduler:
                     # device_get blocks: the host copy is complete before
                     # the pages re-enter the free list below
                     data = jax.device_get(self._gather_pages(cache, idx))
-                    stats.swapped_pages += len(priv)
+                if not swap.fits(_tree_bytes(data)):
+                    # SwapArea capacity (swap_bytes) refusal: recompute
+                    stats.swap_refusals += 1
+                    park = False
+            if park:
+                stats.swapped_pages += len(priv)
                 swap.put(rid, data)
                 stats.swap_peak_bytes = swap.peak_bytes
                 preempted.append(_Preempted(
@@ -1218,7 +1531,7 @@ class Scheduler:
                 if not free:
                     stats.resume_stalls += 1
                     return
-                got = alloc.alloc(p.n_priv)
+                got = pool_alloc(p.n_priv)
                 if got is None:
                     stats.resume_stalls += 1
                     return
@@ -1267,7 +1580,7 @@ class Scheduler:
                             f"{need_rows} past its page table "
                             f"({eng.kv_max_pages} pages) — run() validation "
                             f"should have rejected this request")
-                    got = alloc.alloc(1)
+                    got = pool_alloc(1)
                     if got is not None:
                         pos = len(slot_pages[j])
                         slot_pages[j].append(got[0])
@@ -1287,13 +1600,68 @@ class Scheduler:
                     preempt(victim)
 
         t0 = time.perf_counter()
-        while queue or lanes or preempted \
+        while pending or queue or lanes or preempted \
                 or any(s is not None for s in slots):
-            if time_ticks:      # stamp the wall clock at each arrival tick
-                for r in queue:
-                    if r.arrival > t:
-                        break
+            if on_tick is not None:
+                on_tick(t)
+            fault_hold = False
+
+            # -- arrivals + bounded-queue backpressure ----------------------
+            while pending and pending[0].arrival <= t:
+                r = pending.popleft()
+                if time_ticks:
                     arrival_wall.setdefault(r.rid, time.perf_counter())
+                if self.max_queue is not None \
+                        and len(queue) >= self.max_queue:
+                    if self.reject_policy == "shed_oldest":
+                        victim = next(
+                            (q for q in queue if q.rid not in cont_rids),
+                            None)
+                        if victim is not None:
+                            queue.remove(victim)
+                            print(f"serve: queue full ({self.max_queue}) — "
+                                  f"shedding oldest waiting request "
+                                  f"{victim.rid} for arrival {r.rid}")
+                            terminal_queued(victim, "rejected")
+                            queue.append(r)
+                            continue
+                    print(f"serve: queue full ({self.max_queue}) — "
+                          f"rejecting request {r.rid}")
+                    terminal_queued(r, "rejected")
+                    continue
+                queue.append(r)
+
+            # -- cancellation + deadline sweep, every residence state -------
+            if cancels:
+                for rid_, tk_ in cancels.items():
+                    if tk_ <= t:
+                        cancel_pending.add(rid_)
+            if self._cancel_box:
+                cancel_pending |= self._cancel_box
+                self._cancel_box = set()
+            if cancel_pending or has_deadlines:
+                for r in list(queue):
+                    st = reap_status(r)
+                    if st:
+                        queue.remove(r)
+                        cancel_pending.discard(r.rid)
+                        terminal_queued(r, st)
+                for p in list(lanes):
+                    st = reap_status(p.req)
+                    if st:
+                        cancel_pending.discard(p.req.rid)
+                        abort_lane(p, st)
+                for p in list(preempted):
+                    st = reap_status(p.slot.req)
+                    if st:
+                        cancel_pending.discard(p.slot.req.rid)
+                        terminal_parked(p, st)
+                for j in range(nslots):
+                    if slots[j] is not None:
+                        st = reap_status(slots[j].req)
+                        if st:
+                            cancel_pending.discard(slots[j].req.rid)
+                            finish(j, slots[j], False, status=st)
 
             # Oversubscription housekeeping runs before admission: parked
             # requests get first claim on freed pages (no starvation behind
@@ -1308,7 +1676,11 @@ class Scheduler:
             if C is None:
                 # -- one-shot admission: freed slots pull from the queue ----
                 free = [j for j in range(nslots) if slots[j] is None]
-                while free and queue and queue[0].arrival <= t:
+                while free and queue:
+                    if fault is not None and fault.deny_admission(t):
+                        stats.fault_events += 1
+                        fault_hold = True
+                        break
                     j, r = free.pop(0), queue.popleft()
                     if any(s is not None for s in slots):
                         stats.admission_stalls += 1
@@ -1324,8 +1696,12 @@ class Scheduler:
                 # -- chunked admission: reserve a slot (and, when paged, the
                 # request's full page extent) per open lane for the oldest
                 # arrived requests; chunks ride the mixed/ragged step -------
-                while len(lanes) < max_lanes and queue \
-                        and queue[0].arrival <= t:
+                while len(lanes) < max_lanes and queue:
+                    if fault is not None and fault.deny_admission(t):
+                        # injected admission stall: nobody enters this tick
+                        stats.fault_events += 1
+                        fault_hold = True
+                        break
                     free = [j for j in range(nslots) if slots[j] is None
                             and all(p.slot != j for p in lanes)]
                     if not free:
@@ -1333,6 +1709,12 @@ class Scheduler:
                     r = queue[0]
                     plan = None
                     if alloc is not None:
+                        if fault is not None and fault.deny_alloc(t):
+                            # injected pool exhaustion at the admission seam
+                            stats.fault_events += 1
+                            stats.page_stalls += 1
+                            fault_hold = True
+                            break
                         plan = self._plan_admission(r, plen_of[r.rid],
                                                     alloc, index,
                                                     keys=digests_of(r))
@@ -1391,27 +1773,42 @@ class Scheduler:
             if not any(s is not None for s in slots) and chunk_job is None \
                     and not (self.ragged and lanes):
                 if not lanes:
+                    if fault_hold:
+                        # this tick idled because an injected fault denial
+                        # blocked admission/alloc — a transient stall, not a
+                        # deadlock.  Fault windows are finite by contract
+                        # (serve/faults.py), so just let time pass.
+                        t += 1
+                        continue
                     # With nothing live, no pages will ever be freed again —
                     # a blocked resume or a page-stalled head request is a
-                    # genuine deadlock, not a transient stall.  Raise loudly
-                    # instead of spinning forever.
+                    # genuine deadlock, not a transient stall.  Convert ONE
+                    # victim to status="failed" (freeing whatever it pins)
+                    # and retry: the remaining requests usually survive.
+                    # This used to raise mid-run and burn the whole batch.
                     if preempted:
-                        raise RuntimeError(
-                            f"oversubscription deadlock: {len(preempted)} "
-                            f"preempted request(s) cannot resume (pool "
-                            f"pages pinned by parked shared prefixes) and "
-                            f"no live slot remains to free pages — the "
-                            f"pool is too small for this workload (raise "
-                            f"kv_pool_pages)")
-                    if queue and queue[0].arrival <= t:
-                        raise RuntimeError(
-                            f"request {queue[0].rid} can never be admitted: "
-                            f"nothing is live yet its admission plan still "
-                            f"cannot be served from the pool "
-                            f"({eng.kv_num_pages} pages) — raise "
-                            f"kv_pool_pages or shrink the request")
-                    if queue:   # idle gap: jump to the next arrival
-                        t = max(t + 1, queue[0].arrival)
+                        p = preempted[0]
+                        stats.deadlock_failures += 1
+                        print(f"serve: unservable deadlock — parked request "
+                              f"{p.slot.req.rid} cannot resume (pool pages "
+                              f"pinned by parked shared prefixes, nothing "
+                              f"live to free any); failing it to unblock "
+                              f"(raise kv_pool_pages to avoid this)")
+                        terminal_parked(p, "failed")
+                        continue
+                    if queue:
+                        r = queue.popleft()
+                        stats.deadlock_failures += 1
+                        print(f"serve: request {r.rid} can never be "
+                              f"admitted — nothing is live yet its "
+                              f"admission plan still cannot be served from "
+                              f"the pool ({eng.kv_num_pages} pages); "
+                              f"failing it (raise kv_pool_pages or shrink "
+                              f"the request)")
+                        terminal_queued(r, "failed")
+                        continue
+                    if pending:   # idle gap: jump to the next arrival
+                        t = max(t + 1, pending[0].arrival)
                 continue
 
             # -- one batched step; finished slots emit masked pads -----------
@@ -1421,6 +1818,19 @@ class Scheduler:
             if active != active_host:       # rebuild device mask only on change
                 active_host, active_dev = active, jnp.asarray(active)
             rng, sub = jax.random.split(rng)
+            poison_dev, ok_host = None, None
+            if self.audit:
+                # all-zeros poison is an exact logits no-op; a scheduled
+                # FaultPlan.nan event poisons its target slot's row the
+                # first tick >= its tick where that slot is live
+                poison_dev = zero_poison
+                if poison_plan and t >= poison_plan[0][0] \
+                        and slots[poison_plan[0][1]] is not None:
+                    _, sj_ = poison_plan.popleft()
+                    stats.fault_events += 1
+                    vec = np.zeros(zero_poison.shape, np.float32)
+                    vec[sj_] = np.nan
+                    poison_dev = jnp.asarray(vec)
             admitted = []               # (slot, request, first) on last chunks
             if self.ragged:
                 # -- ONE ragged forward: B decode rows + L lanes x C chunk
@@ -1467,16 +1877,32 @@ class Scheduler:
                         self._assert_private_write(
                             slot_pages[p.slot], start, start + clen, alloc)
                     ran.append((li, clen))
-                tok, firsts, cache = self._masked_ragged(
-                    eng.params, tok, cache, sub, active_dev,
-                    jnp.asarray(ctok), jnp.asarray(sids), jnp.asarray(poss),
-                    jnp.asarray(lrows), enc_buf)
+                if self.audit:
+                    tok, firsts, ok, cache = self._masked_ragged(
+                        eng.params, tok, cache, sub, active_dev,
+                        jnp.asarray(ctok), jnp.asarray(sids),
+                        jnp.asarray(poss), jnp.asarray(lrows), enc_buf,
+                        poison_dev)
+                    ok_host = np.asarray(ok).reshape(-1)
+                else:
+                    tok, firsts, cache = self._masked_ragged(
+                        eng.params, tok, cache, sub, active_dev,
+                        jnp.asarray(ctok), jnp.asarray(sids),
+                        jnp.asarray(poss), jnp.asarray(lrows), enc_buf)
                 done = []
                 for li, clen in ran:
                     p = lanes[li]
                     stats.prefill_chunks += 1
                     p.next_start += clen
                     if p.next_start >= int(p.prompt.shape[0]):
+                        if ok_host is not None \
+                                and not bool(ok_host[nslots + li]):
+                            # NaN/Inf first-token logits: evict the lane's
+                            # poisoned slot state instead of admitting it
+                            stats.nan_evictions += 1
+                            fail_slot_state(p.slot, p.req, "failed")
+                            done.append(li)
+                            continue
                         first = firsts[li:li + 1]
                         tok = self._set_tok(tok, first, jnp.int32(p.slot))
                         admitted.append((p.slot, p.req, first))
@@ -1494,20 +1920,44 @@ class Scheduler:
                     # go through a shared mapping (COW ran at admission)
                     self._assert_private_write(
                         slot_pages[chunk_job.slot], start, start + C, alloc)
-                tok, first, cache = self._masked_mixed(
-                    eng.params, tok, cache, sub, active_dev,
-                    jnp.asarray(ctok), jnp.int32(chunk_job.slot),
-                    jnp.int32(start), jnp.int32(clen), enc_buf)
+                first_ok = None
+                if self.audit:
+                    tok, first, dec_ok, first_ok, cache = self._masked_mixed(
+                        eng.params, tok, cache, sub, active_dev,
+                        jnp.asarray(ctok), jnp.int32(chunk_job.slot),
+                        jnp.int32(start), jnp.int32(clen), enc_buf,
+                        poison_dev)
+                    ok_host = np.asarray(dec_ok).reshape(-1)
+                else:
+                    tok, first, cache = self._masked_mixed(
+                        eng.params, tok, cache, sub, active_dev,
+                        jnp.asarray(ctok), jnp.int32(chunk_job.slot),
+                        jnp.int32(start), jnp.int32(clen), enc_buf)
                 stats.prefill_chunks += 1
                 chunk_job.next_start = start + clen
                 if chunk_job.next_start >= plen:
-                    tok = self._set_tok(tok, first,
-                                        jnp.int32(chunk_job.slot))
-                    admitted.append((chunk_job.slot, chunk_job.req, first))
+                    if first_ok is not None \
+                            and not bool(np.asarray(first_ok).reshape(-1)[0]):
+                        # NaN/Inf first-token logits: evict, don't admit
+                        stats.nan_evictions += 1
+                        fail_slot_state(chunk_job.slot, chunk_job.req,
+                                        "failed")
+                    else:
+                        tok = self._set_tok(tok, first,
+                                            jnp.int32(chunk_job.slot))
+                        admitted.append((chunk_job.slot, chunk_job.req,
+                                         first))
                     lanes.pop(0)
             else:
-                tok, cache = self._masked_decode(eng.params, tok, cache, sub,
-                                                 active_dev, enc_buf)
+                if self.audit:
+                    tok, ok, cache = self._masked_decode(
+                        eng.params, tok, cache, sub, active_dev, enc_buf,
+                        poison_dev)
+                    ok_host = np.asarray(ok).reshape(-1)
+                else:
+                    tok, cache = self._masked_decode(eng.params, tok, cache,
+                                                     sub, active_dev,
+                                                     enc_buf)
             if time_ticks:
                 jax.block_until_ready(tok)
             t += 1
@@ -1545,6 +1995,14 @@ class Scheduler:
                 slot = slots[j]
                 if slot is None:
                     continue
+                if ok_host is not None and not bool(ok_host[j]):
+                    # NaN/Inf logits in row j: evict the poisoned slot as
+                    # failed — its garbage token is never recorded (emitted
+                    # is not bumped, so the harvest stops at the last
+                    # healthy token)
+                    stats.nan_evictions += 1
+                    finish(j, slot, False, status="failed")
+                    continue
                 slot.emitted += 1
                 stats.tokens_out += 1
                 hit_eos = False
@@ -1559,13 +2017,47 @@ class Scheduler:
                     finish(j, slot, hit_eos)
             for a in admitted:
                 admit_live(*a)
+
+            # -- invariant audit: allocator/table/swap agreement every tick -
+            if self.audit:
+                holders: Dict[Any, List[int]] = {
+                    ("slot", j_): pgs for j_, pgs in slot_pages.items()}
+                for p_ in preempted:
+                    holders[("parked", p_.slot.req.rid)] = p_.kept
+                if alloc is not None:
+                    check_allocator(alloc, holders)
+                    kv = _find_paged_kv(cache)
+                    if kv is not None:
+                        table = np.asarray(kv["page_table"])
+                        lens = np.asarray(kv["len"])
+                        if table.ndim == 3:    # scan-stacked layer axis
+                            table = table[0]
+                        if lens.ndim == 2:
+                            lens = lens[0]
+                        # live decode slots pin their device len exactly
+                        # (plen + emitted - 1 rows written); mid-prefill
+                        # lanes only lower-bound it — the fused mixed
+                        # step's masked junk appends may run a lane's len
+                        # ahead of its chunk cursor (see nn/attention.py
+                        # append_kv_decode)
+                        exact = {j_: s_.plen + s_.emitted - 1
+                                 for j_, s_ in enumerate(slots)
+                                 if s_ is not None}
+                        mins = {p_.slot: p_.next_start for p_ in lanes}
+                        check_page_tables(
+                            table, lens, slot_pages, alloc.refcount,
+                            exact_lens=exact, min_lens=mins,
+                            page_size=eng.page_size)
+                check_swap(swap, [(p_.slot.req.rid, p_.data)
+                                  for p_ in preempted])
+                stats.audited_ticks += 1
         stats.steady_s = time.perf_counter() - t0
         stats.num_jit_compiles = self._count_jit_compiles()
 
         # -- harvest: one device->host sync for the whole run (async mode) --
         if step_cols:
             mat = np.asarray(jnp.concatenate(step_cols, axis=1))
-        for slot, j, t_fin, eos in finished:
+        for slot, j, t_fin, eos, status in finished:
             r = slot.req
             if not use_eos:
                 slot.tokens = [int(np.asarray(slot.first)[0, 0])] \
@@ -1578,7 +2070,7 @@ class Scheduler:
                 prompt_len=orig_plen[r.rid],
                 arrival=r.arrival,
                 admitted_at=first_admit.get(r.rid, slot.admitted_at),
-                finished_at=t_fin, eos=eos)
+                finished_at=t_fin, eos=eos, status=status)
         return results, stats
 
 
@@ -1643,4 +2135,5 @@ def run_restart_batching(engine, requests: Sequence[Request], *, seed: int = 0,
         stats.decode_steps += horizon
         t += horizon
     stats.steady_s = time.perf_counter() - t0
+    stats.completed = len(results)    # the baseline serves everything "ok"
     return results, stats

@@ -1,0 +1,432 @@
+"""Hardened serving: per-request deadlines, host-side cancellation,
+bounded-queue backpressure, the deterministic fault-injection harness
+(serve/faults.py), deadlock-to-``failed`` conversion, the NaN/Inf logit
+sentinel behind ``audit=True``, and the hardware page-size guard."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config
+from repro.serve import FaultPlan, Request, ServeEngine, STATUSES
+import repro.serve.engine as serve_engine
+import repro.serve.scheduler as sched_mod
+from repro.kernels import ops as kops
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config("smollm-135m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("batch_slots", 4)
+    return ServeEngine(model=model, params=params, **kw)
+
+
+def _workload(vocab, *, n_requests=4, plen=16, max_new=8, spacing=1, seed=5,
+              deadline=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=plen, dtype=np.int32),
+                    max_new=max_new, arrival=i * spacing,
+                    deadline_steps=deadline)
+            for i in range(n_requests)]
+
+
+# --------------------------------------------------------------------------
+# FaultPlan: the schedule object itself
+# --------------------------------------------------------------------------
+
+def test_faultplan_normalizes_and_validates():
+    p = FaultPlan(alloc_fail=[3, 3, "5"], swap_fail=(2,), nan={np.int64(7): 1})
+    assert p.alloc_fail == frozenset({3, 5})
+    assert p.deny_alloc(5) and not p.deny_alloc(4)
+    assert p.deny_swap(2) and not p.deny_admission(2)
+    assert p.nan == {7: 1} and p.nan_events() == [(7, 1)]
+    assert not p.empty and p.max_tick == 7
+    assert FaultPlan().empty and FaultPlan().max_tick == -1
+    with pytest.raises(ValueError):
+        FaultPlan(alloc_fail={-1})
+    with pytest.raises(ValueError):
+        FaultPlan(nan={3: -2})
+
+
+def test_faultplan_json_and_spec_roundtrip(tmp_path):
+    p = FaultPlan(alloc_fail={4}, swap_fail={6}, admit_stall={1},
+                  nan={9: 0, 3: 2})
+    assert FaultPlan.from_json(p.to_json()) == p
+    inline = json.dumps(p.to_json())
+    assert FaultPlan.from_spec(inline) == p
+    f = tmp_path / "plan.json"
+    f.write_text(inline)
+    assert FaultPlan.from_spec(str(f)) == p
+    with pytest.raises(ValueError, match="unknown FaultPlan keys"):
+        FaultPlan.from_json({"alloc_fail": [1], "typo": []})
+
+
+def test_faultplan_random_is_seed_deterministic():
+    a = FaultPlan.random(11, ticks=64, slots=4, nan_events=2)
+    b = FaultPlan.random(11, ticks=64, slots=4, nan_events=2)
+    c = FaultPlan.random(12, ticks=64, slots=4, nan_events=2)
+    assert a == b and a != c
+    assert a.max_tick < 64
+    with pytest.raises(ValueError):
+        FaultPlan.random(0, ticks=0, slots=4)
+
+
+# --------------------------------------------------------------------------
+# Deadlines
+# --------------------------------------------------------------------------
+
+def test_deadline_times_out_live_request(smoke_lm):
+    """A live request past its deadline is evicted as ``timeout`` carrying a
+    clean prefix of its reference stream; co-resident requests are not
+    perturbed (greedy decode: eviction frees a slot, never moves tokens)."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=3, max_new=16, spacing=0)
+    eng = _engine(model, params)
+    base, _ = eng.scheduler(chunk_size=8).run(reqs)
+    tight = [r if r.rid != 1 else
+             dataclasses.replace(r, deadline_steps=8)
+             for r in reqs]
+    got, st = eng.scheduler(chunk_size=8).run(tight)
+    assert got[1].status == "timeout"
+    assert 0 < len(got[1].tokens) < len(base[1].tokens)
+    assert got[1].tokens == base[1].tokens[:len(got[1].tokens)]
+    for rid in (0, 2):
+        assert got[rid].status == "ok" and got[rid].tokens == base[rid].tokens
+    assert st.timeouts == 1 and st.completed == 2
+    assert st.summary()["timeouts"] == 1
+    assert 0 < st.completion_rate < 1
+
+
+def test_deadline_times_out_queued_request(smoke_lm):
+    """A request whose deadline expires while still waiting in the queue is
+    reaped without ever being admitted: no tokens, admitted_at == -1."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=3, max_new=16, spacing=0)
+    reqs[2] = dataclasses.replace(reqs[2], deadline_steps=4)
+    eng = _engine(model, params, batch_slots=2)   # rid 2 must wait
+    got, st = eng.scheduler(chunk_size=8).run(reqs)
+    assert got[2].status == "timeout"
+    assert got[2].tokens == [] and got[2].admitted_at == -1
+    assert got[0].status == "ok" and got[1].status == "ok"
+    assert st.timeouts == 1
+
+
+def test_deadline_validation(smoke_lm):
+    cfg, model, params = smoke_lm
+    bad = _workload(cfg.vocab, n_requests=1, deadline=0)
+    with pytest.raises(ValueError, match="deadline_steps"):
+        _engine(model, params).scheduler(chunk_size=8).run(bad)
+
+
+# --------------------------------------------------------------------------
+# Cancellation
+# --------------------------------------------------------------------------
+
+def test_cancellation_via_schedule_and_mid_run_hook(smoke_lm):
+    """Both cancellation paths — the pre-declared ``cancels={rid: tick}``
+    schedule and a mid-run ``Scheduler.cancel`` from the ``on_tick`` hook —
+    land status="cancelled" with a clean token prefix."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=3, max_new=16, spacing=0)
+    eng = _engine(model, params)
+    base, _ = eng.scheduler(chunk_size=8).run(reqs)
+    got, st = eng.scheduler(chunk_size=8).run(reqs, cancels={0: 6})
+    assert got[0].status == "cancelled"
+    assert got[0].tokens == base[0].tokens[:len(got[0].tokens)]
+    assert len(got[0].tokens) < len(base[0].tokens)
+    assert got[1].tokens == base[1].tokens
+    assert st.cancellations == 1 and st.summary()["cancellations"] == 1
+
+    sched = eng.scheduler(chunk_size=8)
+    got2, st2 = sched.run(reqs, on_tick=lambda t:
+                          sched.cancel(2) if t == 6 else None)
+    assert got2[2].status == "cancelled"
+    assert got2[2].tokens == base[2].tokens[:len(got2[2].tokens)]
+    assert got2[0].tokens == base[0].tokens
+    assert st2.cancellations == 1
+
+
+# --------------------------------------------------------------------------
+# Bounded-queue backpressure
+# --------------------------------------------------------------------------
+
+def test_backpressure_reject(smoke_lm, capsys):
+    """With the waiting queue bounded, a same-tick arrival burst past the
+    bound is terminated loudly as ``rejected``; the survivors' streams
+    match the unbounded run."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=6, max_new=6, spacing=0)
+    eng = _engine(model, params, batch_slots=2)
+    base, _ = eng.scheduler(chunk_size=8).run(reqs)
+    got, st = eng.scheduler(chunk_size=8, max_queue=2).run(reqs)
+    rejected = sorted(r for r in got if got[r].status == "rejected")
+    kept = sorted(r for r in got if got[r].status == "ok")
+    assert st.rejections == len(rejected) > 0
+    assert "queue full" in capsys.readouterr().out
+    for r in rejected:
+        assert got[r].tokens == [] and got[r].admitted_at == -1
+    for r in kept:
+        assert got[r].tokens == base[r].tokens
+    assert set(got) == {r.rid for r in reqs}   # every rid is terminal
+    assert st.completion_rate == pytest.approx(len(kept) / len(reqs))
+
+
+def test_backpressure_shed_oldest(smoke_lm):
+    """``shed_oldest`` sheds the longest-waiting request instead of the
+    arrival, so later arrivals displace earlier queued ones."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=6, max_new=6, spacing=0)
+    eng = _engine(model, params, batch_slots=2)
+    r_rej, _ = eng.scheduler(chunk_size=8, max_queue=1,
+                             reject_policy="reject").run(reqs)
+    r_shed, st = eng.scheduler(chunk_size=8, max_queue=1,
+                               reject_policy="shed_oldest").run(reqs)
+    assert st.rejections > 0
+    rej_reject = {r for r in r_rej if r_rej[r].status == "rejected"}
+    rej_shed = {r for r in r_shed if r_shed[r].status == "rejected"}
+    # same pressure, opposite victims: reject drops the newcomers,
+    # shed_oldest drops the waiters — the highest rid always survives shed
+    assert max(r.rid for r in reqs) not in rej_shed
+    assert max(r.rid for r in reqs) in rej_reject
+    assert len(rej_shed) == len(rej_reject)
+
+    with pytest.raises(ValueError, match="reject_policy"):
+        eng.scheduler(chunk_size=8, max_queue=1, reject_policy="drop")
+    with pytest.raises(ValueError, match="max_queue"):
+        eng.scheduler(chunk_size=8, max_queue=0)
+
+
+# --------------------------------------------------------------------------
+# Injected faults: the three denial seams
+# --------------------------------------------------------------------------
+
+def test_admission_stall_fault_shifts_schedule_not_streams(smoke_lm):
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=3, max_new=8, spacing=0)
+    eng = _engine(model, params, paged_kv=True, page_size=8)
+    base, _ = eng.scheduler(chunk_size=8).run(reqs)
+    plan = FaultPlan(admit_stall={0, 1, 2})
+    got, st = eng.scheduler(chunk_size=8).run(reqs, fault_plan=plan)
+    assert st.fault_events > 0
+    for r in reqs:
+        assert got[r.rid].status == "ok"
+        assert got[r.rid].tokens == base[r.rid].tokens
+    # the stall delayed first tokens, visible in virtual-time TTFT
+    assert got[0].admitted_at > base[0].admitted_at
+
+
+def test_alloc_denial_fault_defers_and_preempts(smoke_lm):
+    """``alloc_fail`` ticks behave as a momentarily-empty pool: admission
+    defers, decode growth preempts — and the streams still match the
+    fault-free run once the window passes."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=4, max_new=16, spacing=0)
+    eng = _engine(model, params, paged_kv=True, page_size=8,
+                  kv_pool_pages=16)
+    sched = lambda: eng.scheduler(chunk_size=8, prefix_sharing=False,  # noqa: E731
+                                  oversubscribe=True)
+    base, _ = sched().run(reqs)
+    plan = FaultPlan(alloc_fail={0, 1, 5})
+    got, st = sched().run(reqs, fault_plan=plan)
+    assert st.fault_events > 0
+    for r in reqs:
+        assert got[r.rid].status == "ok"
+        assert got[r.rid].tokens == base[r.rid].tokens, r.rid
+
+
+@pytest.mark.parametrize("via", ["fault", "capacity"])
+def test_swap_refusal_falls_back_to_recompute(smoke_lm, via):
+    """A refused swap park — injected (``swap_fail``) or a genuinely full
+    ``SwapArea`` (``swap_bytes``) — degrades that preemption to the
+    recompute path: tokens stay identical, ``swap_refusals`` counts it."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=4, plen=16, max_new=12, spacing=0)
+    dense = _engine(model, params, batch_slots=3)
+    base, _ = dense.scheduler(chunk_size=8, prefix_sharing=False).run(reqs)
+    eng = _engine(model, params, batch_slots=3, paged_kv=True, page_size=8,
+                  kv_pool_pages=9)
+    kw = dict(chunk_size=8, prefix_sharing=False, oversubscribe=True,
+              preempt_policy="swap")
+    plan = None
+    if via == "fault":
+        plan = FaultPlan(swap_fail=frozenset(range(200)))
+    else:
+        kw["swap_bytes"] = 1          # no park ever fits
+    got, st = eng.scheduler(**kw).run(reqs, fault_plan=plan)
+    assert st.preemptions > 0 and st.swap_refusals > 0
+    assert st.swapped_pages == 0      # every park degraded to recompute
+    for r in reqs:
+        assert got[r.rid].status == "ok"
+        assert got[r.rid].tokens == base[r.rid].tokens, (via, r.rid)
+
+
+# --------------------------------------------------------------------------
+# NaN/Inf sentinel (audit=True)
+# --------------------------------------------------------------------------
+
+def test_nan_sentinel_evicts_exactly_the_poisoned_slot(smoke_lm):
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=3, max_new=16, spacing=0)
+    eng = _engine(model, params, paged_kv=True, page_size=8)
+    sched = lambda: eng.scheduler(chunk_size=8, audit=True)  # noqa: E731
+    base, base_st = sched().run(reqs)
+    assert base_st.audited_ticks > 0
+    plan = FaultPlan(nan={6: 1})
+    got, st = sched().run(reqs, fault_plan=plan)
+    failed = [r for r in got if got[r].status == "failed"]
+    assert len(failed) == 1 and st.nan_evictions == 1
+    v = failed[0]
+    # the poisoned step's garbage token is never recorded
+    assert got[v].tokens == base[v].tokens[:len(got[v].tokens)]
+    assert len(got[v].tokens) < len(base[v].tokens)
+    for r in reqs:
+        if r.rid != v:
+            assert got[r.rid].tokens == base[r.rid].tokens
+    assert st.audited_ticks > 0 and st.failed == 1
+
+
+def test_nan_plan_requires_audit(smoke_lm):
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=1)
+    eng = _engine(model, params)
+    with pytest.raises(ValueError, match="audit"):
+        eng.scheduler(chunk_size=8).run(reqs, fault_plan=FaultPlan(nan={4: 0}))
+    with pytest.raises(ValueError, match="slot"):
+        eng.scheduler(chunk_size=8, audit=True).run(
+            reqs, fault_plan=FaultPlan(nan={4: 99}))
+
+
+# --------------------------------------------------------------------------
+# Deadlock -> failed conversion
+# --------------------------------------------------------------------------
+
+class _DyingAllocator(sched_mod.PageAllocator):
+    """A pool that permanently exhausts after a fixed allocation budget —
+    the state the old code answered with a mid-run RuntimeError."""
+
+    budget = 0
+
+    def alloc(self, n):
+        cls = _DyingAllocator
+        if cls.budget < n:
+            return None
+        out = super().alloc(n)
+        if out is not None:
+            cls.budget -= n
+        return out
+
+
+def test_deadlock_converts_victims_instead_of_raising(smoke_lm, monkeypatch,
+                                                      capsys):
+    """When the pool can never serve the remaining requests (nothing live,
+    resumes and admissions permanently blocked), the scheduler fails one
+    victim at a time instead of raising — both the parked branch and the
+    queued branch — and still returns a terminal status for every rid with
+    the auditor clean throughout."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=4, plen=16, max_new=24, spacing=1)
+    _DyingAllocator.budget = 10
+    monkeypatch.setattr(sched_mod, "PageAllocator", _DyingAllocator)
+    eng = _engine(model, params, paged_kv=True, page_size=8,
+                  kv_pool_pages=12)
+    got, st = eng.scheduler(chunk_size=8, oversubscribe=True,
+                            preempt_policy="swap", audit=True).run(reqs)
+    assert sorted(got) == [r.rid for r in reqs]
+    assert all(got[r].status in STATUSES for r in got)
+    assert st.deadlock_failures > 0
+    assert st.failed == st.deadlock_failures == \
+        sum(1 for r in got.values() if r.status == "failed")
+    assert st.audited_ticks > 0
+    out = capsys.readouterr().out
+    assert "unservable deadlock" in out          # parked-victim conversion
+    assert "can never be admitted" in out        # queued-victim conversion
+
+
+# --------------------------------------------------------------------------
+# The acceptance scenario: everything at once
+# --------------------------------------------------------------------------
+
+def test_full_chaos_scenario_contains_all_faults(smoke_lm):
+    """Deadlines + bounded queue + auditor + a combined fault plan (pool
+    exhaustion, swap refusal, admission stall, one NaN tick): ``run()``
+    completes without raising, every request lands a terminal status, the
+    NaN victim alone fails, and the non-faulted streams are token-identical
+    to the fault-free run."""
+    cfg, model, params = smoke_lm
+    reqs = _workload(cfg.vocab, n_requests=5, plen=16, max_new=16, spacing=1,
+                     deadline=300)
+    eng = _engine(model, params, batch_slots=4, paged_kv=True, page_size=8,
+                  kv_pool_pages=12)
+    sched = lambda: eng.scheduler(  # noqa: E731
+        chunk_size=8, prefix_sharing=False, oversubscribe=True,
+        preempt_policy="swap", audit=True, max_queue=5)
+    base, base_st = sched().run(reqs)
+    assert all(r.status == "ok" for r in base.values())
+    plan = FaultPlan(alloc_fail={4, 5}, swap_fail={4, 5, 6},
+                     admit_stall={2}, nan={9: 0})
+    got, st = sched().run(reqs, fault_plan=plan)
+    assert sorted(got) == [r.rid for r in reqs]
+    failed = [r for r in got if got[r].status == "failed"]
+    assert len(failed) == 1 and st.nan_evictions == 1
+    assert st.timeouts == 0 and st.rejections == 0
+    for r in reqs:
+        if r.rid in failed:
+            assert got[r.rid].tokens == \
+                base[r.rid].tokens[:len(got[r.rid].tokens)]
+        else:
+            assert got[r.rid].status == "ok"
+            assert got[r.rid].tokens == base[r.rid].tokens, r.rid
+    assert st.fault_events > 0 and st.audited_ticks > 0
+    s = st.summary()
+    for key in ("rejections", "timeouts", "cancellations", "failed",
+                "completion_rate", "steady_tok_s", "p99_latency_steps"):
+        assert key in s
+    assert s["completion_rate"] == pytest.approx((len(reqs) - 1) / len(reqs))
+
+
+# --------------------------------------------------------------------------
+# Hardware page-size guard
+# --------------------------------------------------------------------------
+
+def _no_runtime_warning(fn):
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        fn()
+    return not any(issubclass(w.category, RuntimeWarning) for w in record)
+
+
+def test_small_page_warns_once_on_hardware_dispatch(smoke_lm, monkeypatch):
+    """A paged engine with page_size below the sublane tile warns exactly
+    once per process when kernels dispatch as compiled Pallas, and never
+    under interpret/ref dispatch."""
+    cfg, model, params = smoke_lm
+    monkeypatch.setattr(kops, "FORCE", "pallas")
+    monkeypatch.setattr(serve_engine, "_small_page_warned", False)
+    with pytest.warns(RuntimeWarning, match="page_size"):
+        _engine(model, params, paged_kv=True, page_size=8)
+    # latch: second build in the same process is silent
+    assert _no_runtime_warning(
+        lambda: _engine(model, params, paged_kv=True, page_size=8))
+
+    monkeypatch.setattr(serve_engine, "_small_page_warned", False)
+    monkeypatch.setattr(kops, "FORCE", "interpret")
+    assert _no_runtime_warning(   # correctness dispatch: no warning
+        lambda: _engine(model, params, paged_kv=True, page_size=8))
+    # roomy pages never warn, even on hardware
+    monkeypatch.setattr(kops, "FORCE", "pallas")
+    assert _no_runtime_warning(
+        lambda: _engine(model, params, paged_kv=True,
+                        page_size=serve_engine.HW_MIN_PAGE_SIZE,
+                        max_len=256))

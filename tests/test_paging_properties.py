@@ -3,7 +3,12 @@ under adversarial alloc/share/free churn: a live (refcount > 0) page never
 re-enters the free list, alloc stays all-or-nothing under interleaving,
 ``peak_in_use`` is monotone within a run — plus the oversubscription layer:
 lazy one-page growth never aliases a live mapping, swap park/restore cycles
-conserve pages, and victim selection is deterministic and starvation-free."""
+conserve pages, and victim selection is deterministic and starvation-free.
+
+The serve/audit.py auditor gets the same treatment: any honestly churned
+state passes ``check_allocator``/``check_swap``, and a single injected
+corruption (double-map, leaked page, stale refcount, table/byte drift) is
+always caught as an :class:`AuditError`."""
 import pytest
 
 pytest.importorskip(
@@ -12,6 +17,8 @@ pytest.importorskip(
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.serve.audit import (AuditError, check_allocator,
+                               check_page_tables, check_swap)
 from repro.serve.paging import PageAllocator, SwapArea
 from repro.serve.scheduler import pick_preemption_victim
 
@@ -177,6 +184,156 @@ def test_swap_park_restore_conserves_pages(cycle):
         assert sa.bytes_held == sum(4 * pn for _, pn in parked)
         assert sa.peak_bytes >= sa.bytes_held
     assert len(sa) == len(parked)
+
+
+# --------------------------------------------------------------------------
+# The auditor: honest churn passes, injected corruption is always caught
+# --------------------------------------------------------------------------
+
+def _churn(a, ops):
+    """Drive alloc/share/free churn; returns the live holder map the
+    scheduler would hand ``check_allocator`` ({key: page list})."""
+    held = {}
+    nxt = 0
+    for op, arg in ops:
+        if op == "alloc":
+            got = a.alloc(arg % 5)
+            if got is not None:
+                held[("slot", nxt)] = list(got)
+                nxt += 1
+        elif op == "share" and held:
+            key = sorted(held)[arg % len(held)]
+            a.share(held[key])
+            held[("parked", nxt)] = list(held[key])
+            nxt += 1
+        elif op == "free" and held:
+            key = sorted(held)[arg % len(held)]
+            a.free(held.pop(key))
+    return held
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops=ops_strategy)
+def test_auditor_blesses_honest_churn(ops):
+    """Whatever alloc/share/free interleaving produced the state, the
+    auditor must pass it: the auditor's job is catching *bugs*, and the
+    allocator API, used correctly, cannot produce one."""
+    a = PageAllocator(POOL)
+    held = _churn(a, ops)
+    check_allocator(a, held)
+    for key in list(held):
+        a.free(held.pop(key))
+        check_allocator(a, held)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops=ops_strategy,
+       kind=st.sampled_from(["double_map", "leak", "stale_refcount",
+                             "out_of_pool"]),
+       pick=st.integers(0, 1000))
+def test_auditor_catches_injected_corruption(ops, kind, pick):
+    """One corruption of any flavor — a page mapped by a holder the
+    allocator never counted (double-map), a holder entry dropped while its
+    reference survives (leak), a refcount bumped with no holder (stale),
+    or a mapping outside the pool — must always raise AuditError."""
+    a = PageAllocator(POOL)
+    held = _churn(a, ops)
+    if not held:   # guarantee a live page to corrupt
+        held[("slot", 0)] = list(a.alloc(2))
+    key = sorted(held)[pick % len(held)]
+    if not held[key]:
+        held[key] = list(a.alloc(1) or [])
+        if not held[key]:
+            held.pop(key)
+            key = max(held, key=lambda k: len(held[k]))
+    page = held[key][pick % len(held[key])]
+    if kind == "double_map":
+        held[("evil", -1)] = [page]
+    elif kind == "leak":
+        held[key] = [p for p in held[key] if p != page]
+    elif kind == "stale_refcount":
+        a.share([page])
+    else:
+        held[("evil", -1)] = [POOL + 3]
+    with pytest.raises(AuditError):
+        check_allocator(a, held)
+
+
+@settings(max_examples=100, deadline=None)
+@given(cycle=st.lists(st.integers(1, POOL), max_size=30),
+       corrupt=st.sampled_from(["none", "missing_rid", "ghost_rid",
+                                "byte_drift"]))
+def test_auditor_swap_byte_conservation(cycle, corrupt):
+    """Honest park/restore churn always satisfies ``check_swap``; dropping
+    a parked rid, leaving a ghost entry behind, or drifting the byte
+    accounting is always caught."""
+    import numpy as np
+    sa = SwapArea()
+    parked = []
+    rid = 0
+    for n in cycle:
+        if parked and n % 2 == 0:
+            prid, _ = parked.pop(0)
+            sa.pop(prid)
+        else:
+            data = np.zeros((n, 4), np.int8)
+            sa.put(rid, data)
+            parked.append((rid, data))
+            rid += 1
+        check_swap(sa, parked)
+    check_swap(None, [])
+    if corrupt == "none" or not parked:
+        return
+    if corrupt == "missing_rid":
+        sa.pop(parked[0][0])
+    elif corrupt == "ghost_rid":
+        sa.put(10 ** 6, np.zeros((1, 4), np.int8))
+    else:
+        parked[0] = (parked[0][0], np.zeros((parked[0][1].shape[0] + 1, 4),
+                                            np.int8))
+    with pytest.raises(AuditError):
+        check_swap(sa, parked)
+
+
+def test_auditor_page_table_corruptions():
+    """The device-table check passes a consistent state and catches every
+    drift flavor: wrong page, mapping past the host list, a stale row on an
+    empty slot, a frontier mismatch, and a privately-aliased page."""
+    import numpy as np
+    rows = {0: [3, 5], 2: [7]}
+    refcount = {3: 1, 5: 1, 7: 2}.get
+    table = np.full((4, 4), -1, np.int32)
+    table[0, :2] = [3, 5]
+    table[2, 0] = 7
+    lens = np.array([9, 0, 4, 0], np.int32)
+    good = dict(exact_lens={0: 9}, min_lens={2: 4}, page_size=8)
+    check_page_tables(table, lens, rows, refcount, **good)
+    bad = table.copy()
+    bad[0, 1] = 6                       # wrong page
+    with pytest.raises(AuditError, match="host page list"):
+        check_page_tables(bad, lens, rows, refcount, **good)
+    bad = table.copy()
+    bad[0, 2] = 9                       # mapped past the host list
+    with pytest.raises(AuditError, match="past its host page list"):
+        check_page_tables(bad, lens, rows, refcount, **good)
+    bad = table.copy()
+    bad[1, 0] = 2                       # stale row on an empty slot
+    with pytest.raises(AuditError, match="holds no request"):
+        check_page_tables(bad, lens, rows, refcount, **good)
+    with pytest.raises(AuditError, match="write frontier"):
+        check_page_tables(table, lens, rows, refcount,
+                          exact_lens={0: 8}, page_size=8)
+    with pytest.raises(AuditError, match="exceeds its mapped extent"):
+        check_page_tables(table, np.array([17, 0, 4, 0], np.int32), rows,
+                          refcount, exact_lens={0: 17}, page_size=8)
+    with pytest.raises(AuditError, match="fell behind"):
+        check_page_tables(table, np.array([9, 0, 3, 0], np.int32), rows,
+                          refcount, min_lens={2: 4}, page_size=8)
+    alias = np.full((4, 4), -1, np.int32)
+    alias[0, 0] = alias[2, 0] = 3       # private page in two rows
+    with pytest.raises(AuditError, match="aliased"):
+        check_page_tables(alias, lens, {0: [3], 2: [3]}, refcount,
+                          page_size=8)
 
 
 victim_cands = st.lists(
