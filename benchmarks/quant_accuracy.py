@@ -5,12 +5,24 @@ compares against (Sec. 7).
 Synthetic datasets stand in for UCI-HAR/SMNIST/GTSRB (offline container);
 the claim validated is the *relative* ordering (C1, C2, C4), not absolute
 accuracies — see EXPERIMENTS.md §Paper-claims.
+
+``--smoke`` runs :func:`run_frontier` instead: the quality-vs-tok/s frontier
+joining this benchmark's accuracy side (weight-only fp32 / int8 / packed
+int4-per-block on the smoke task) with ``serve_bench.bench_weight_formats``'s
+serving side (tok/s + weight payload bytes per format) into
+``benchmarks/out/frontier.json``.  :func:`check_frontier` is the CI gate —
+warn-only on the int4-vs-int8 accuracy delta (sub-int8 is the frontier being
+*measured*, not a regression bar), hard only on the payload halving.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+
 from repro.core.policy import QMode, QuantPolicy
 
-from .common import accuracy, train_resnet, write_csv
+from .common import OUT_DIR, accuracy, train_resnet, write_csv
 
 AFFINE_PTQ = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8,
                          symmetric=False, power_of_two=False)
@@ -56,7 +68,107 @@ def run(quick: bool = True):
     return rows
 
 
-def main():
+def run_frontier(smoke: bool = True, seed: int = 0, out_path: str = None,
+                 weight_block: int = 16):
+    """Quality-vs-tok/s frontier: fp32 / int8 / packed int4-per-block.
+
+    Accuracy side: the smoke ResNet served through the weight-only paths
+    (``integerize_weights_only``; int4 packs kernels per-block).  Serving
+    side: ``serve_bench.bench_weight_formats`` on the smoke LM (tok/s,
+    kernel payload bytes, determinism).  One artifact so every format lands
+    with both numbers, like the paper's accuracy-and-ROM tables.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.integerize import integerize_weights_only
+    from repro.models.registry import get_config
+
+    from . import serve_bench
+
+    iters = 250 if smoke else 500
+    model, params, test = train_resnet("uci-har", 8, iters=iters,
+                                       extra_noise=2.2, seed=seed)
+    acc = {
+        "fp32": accuracy(model, params, test),
+        "int8": accuracy(model, integerize_weights_only(params, bits=8),
+                         test),
+        "int4": accuracy(model, integerize_weights_only(
+            params, bits=4, block_size=weight_block), test),
+    }
+
+    cfg = get_config("smollm-135m-smoke")
+    lm = cfg.build(dtype=jnp.float32, remat="off")
+    lm_params = lm.init(jax.random.PRNGKey(seed))
+    serving = serve_bench.bench_weight_formats(
+        lm, lm_params, cfg.vocab, smoke=smoke, seed=seed,
+        weight_block=weight_block)
+
+    frontier = {"task": {"dataset": "uci-har", "filters": 8, "iters": iters,
+                         "weight_block": weight_block,
+                         "serve_arch": "smollm-135m-smoke"},
+                "formats": {}}
+    for name in ("fp32", "int8", "int4"):
+        frontier["formats"][name] = {"accuracy": round(acc[name], 4),
+                                     **serving[name]}
+        f = frontier["formats"][name]
+        print(f"frontier/{name:5s} acc {f['accuracy']:.4f} | "
+              f"{f['tok_s']:8.1f} tok/s | kernel payload "
+              f"{f['kernel_bytes']} B")
+
+    out_path = out_path or os.path.join(OUT_DIR, "frontier.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(frontier, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out_path}")
+    return frontier
+
+
+def check_frontier(frontier, *, max_acc_delta: float = 0.05) -> bool:
+    """Frontier gate, mirroring the serve_bench ``check_*`` pattern.
+
+    Hard: the packed int4 kernel payload must be <= 0.5x the int8 payload
+    (exact for even K — a packing bug shows up here immediately).
+    Warn-only: int4 accuracy within ``max_acc_delta`` (5 points) of int8 on
+    the smoke task — printed as WARN, never failing the job, because the
+    smoke task's sub-int8 headroom is the quantity being charted.
+    """
+    f = frontier["formats"]
+    ok = True
+    ratio = f["int4"]["kernel_bytes"] / max(f["int8"]["kernel_bytes"], 1)
+    if ratio > 0.5:
+        print(f"REGRESSION frontier: int4 kernel payload {ratio:.3f}x int8 "
+              f"> 0.5x ({f['int4']['kernel_bytes']} vs "
+              f"{f['int8']['kernel_bytes']} B) — packing is broken")
+        ok = False
+    else:
+        print(f"ok frontier payload: int4 kernels {ratio:.3f}x int8 bytes")
+    delta = f["int8"]["accuracy"] - f["int4"]["accuracy"]
+    if delta > max_acc_delta:
+        print(f"WARN (not gated) frontier: int4 accuracy "
+              f"{f['int4']['accuracy']:.4f} is {delta:.3f} below int8 "
+              f"{f['int8']['accuracy']:.4f} (> {max_acc_delta:.2f})")
+    else:
+        print(f"ok frontier accuracy: int4 within {delta:.3f} of int8")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the quality-vs-tok/s frontier (fp32/int8/int4) "
+                         "and write benchmarks/out/frontier.json")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        frontier = run_frontier(smoke=True, seed=args.seed,
+                                out_path=args.out)
+        if not check_frontier(frontier):
+            raise SystemExit(1)
+        print("quant_accuracy frontier ok")
+        return
     run(quick=True)
 
 

@@ -190,6 +190,93 @@ def bench_variant(model, params, kw, workload, *, max_len, slots, chunk,
     }
 
 
+def weight_payload_bytes(params) -> dict:
+    """Serving weight-byte accounting for the frontier artifact.
+
+    ``kernel_bytes`` is the GEMM weight *payload* (container bytes: int8 =
+    1 byte/element, packed int4 = exactly half for even K); ``table_bytes``
+    the embedding tables (int8 containers in every quantized format);
+    ``scale_bytes`` the exponent grids (int32 each), kept separate so the
+    packed formats' sub-int8 payload claim is measured on the payload alone;
+    ``float_bytes`` everything left in float (norms, biases, ...).
+    """
+    from repro.core.qformat import PackedQTensor, QTensor
+
+    out = {"kernel_bytes": 0, "table_bytes": 0, "scale_bytes": 0,
+           "float_bytes": 0}
+
+    def rec(node, name):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, k)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v, name)
+        elif isinstance(node, PackedQTensor):
+            out["kernel_bytes"] += node.nbytes_packed
+            out["scale_bytes"] += int(np.prod(jnp.shape(node.n))) * 4
+        elif isinstance(node, QTensor):
+            key = "table_bytes" if name == "table" else "kernel_bytes"
+            out[key] += int(np.prod(node.q.shape)) * node.q.dtype.itemsize
+            out["scale_bytes"] += int(np.prod(jnp.shape(node.n))) * 4
+        elif hasattr(node, "shape"):
+            key = ("kernel_bytes" if name == "kernel"
+                   else "table_bytes" if name == "table" else "float_bytes")
+            out[key] += int(np.prod(node.shape)) * node.dtype.itemsize
+
+    rec(params, "")
+    return out
+
+
+# Weight formats on the serving frontier: engine ``weight_quant`` specs.
+WEIGHT_FORMATS = {
+    "fp32": False,
+    "int8": True,
+    "int4": "int4-block",
+}
+
+
+def bench_weight_formats(model, params, vocab, *, smoke=True, seed=0,
+                         weight_block=32):
+    """Tok/s + weight-byte side of the quality-vs-throughput frontier.
+
+    Each format in :data:`WEIGHT_FORMATS` serves the same workload through
+    the chunked scheduler; the run is repeated once and asserted
+    token-identical to itself (sub-int8 serving must stay deterministic).
+    Accuracy joins in ``benchmarks.quant_accuracy.run_frontier``.
+    """
+    if smoke:
+        wl = dict(n_requests=8, prompt_len=64, short_new=8, long_new=16,
+                  spacing=2, slots=4, chunk=32)
+    else:
+        wl = dict(n_requests=16, prompt_len=256, short_new=8, long_new=32,
+                  spacing=2, slots=4, chunk=64)
+    workload = make_workload(wl["n_requests"], wl["prompt_len"],
+                             wl["short_new"], wl["long_new"], wl["spacing"],
+                             vocab, seed=seed)
+    max_len = wl["prompt_len"] + wl["long_new"]
+    out = {"workload": {**wl, "max_len": max_len,
+                        "weight_block": weight_block}}
+    for name, spec in WEIGHT_FORMATS.items():
+        eng = ServeEngine(model=model, params=params, max_len=max_len,
+                          batch_slots=wl["slots"], weight_quant=spec,
+                          weight_block=weight_block)
+        sched = eng.scheduler(chunk_size=wl["chunk"])
+        res, st = sched.run(workload, seed=seed, time_ticks=True)
+        res2, _ = eng.scheduler(chunk_size=wl["chunk"]).run(workload,
+                                                            seed=seed)
+        for r in workload:   # acceptance bar: a repeat is token-identical
+            assert res2[r.rid].tokens == res[r.rid].tokens, (
+                f"weight format {name}: non-deterministic stream on "
+                f"rid {r.rid}")
+        pb = weight_payload_bytes(eng.params)
+        out[name] = {"tok_s": round(st.steady_tok_s, 2),
+                     "repeat_identical": True, **pb}
+        print(f"wfmt/{name:5s} {st.steady_tok_s:8.1f} tok/s | kernel payload "
+              f"{pb['kernel_bytes']} B | scales {pb['scale_bytes']} B")
+    return out
+
+
 def bench_paged(model, params, vocab, *, smoke=True, seed=0):
     """Paged-vs-dense sweep: token identity at parity, capacity at equal
     KV pool bytes, over a mixed short/long-prompt workload (3 short : 1

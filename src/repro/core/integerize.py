@@ -104,8 +104,20 @@ def integerize(
     return rec(params, "")
 
 
-def integerize_weights_only(params, *, bits: int = 8, per_channel: bool = True) -> Dict:
-    """Weight-only int conversion for TPU serving (embeddings included)."""
+def integerize_weights_only(params, *, bits: int = 8, per_channel: bool = True,
+                            block_size: Optional[int] = None) -> Dict:
+    """Weight-only int conversion for TPU serving (embeddings included).
+
+    ``bits`` 8/9/16 store :class:`QTensor` leaves as before.  ``bits`` 4/2
+    (beyond-paper sub-int8 frontier) pack GEMM ``kernel`` leaves into
+    :class:`~repro.core.qformat.PackedQTensor` containers — two (or four)
+    lanes per byte along K, with per-channel scales or, when ``block_size``
+    is given, per-block (MX-style) scales.  Embedding ``table`` leaves stay
+    unpacked :class:`QTensor` at the logical width, because the gather and
+    tied-logits paths index rows directly; their container is int8 either
+    way, so only kernels gain the packing byte win.
+    """
+    packed = bits in (2, 4)
 
     def rec(node, path):
         if isinstance(node, (list, tuple)):  # scanned-stack param lists
@@ -120,6 +132,11 @@ def integerize_weights_only(params, *, bits: int = 8, per_channel: bool = True) 
                 out[k] = rec(v, child_path)
             elif k in _WEIGHT_LEAVES and not _is_skipped(child_path, QuantPolicy.serve_int8()) \
                     and hasattr(v, "ndim") and v.ndim >= 2:
+                if packed and k == "kernel":
+                    out[k] = qformat.quantize_tensor_packed(
+                        jnp.asarray(v), bits, block_size=block_size,
+                        per_channel=per_channel)
+                    continue
                 if per_channel:
                     # per-out-channel; stacked leaves (scan layers / experts)
                     # additionally keep every leading dim distinct, so each
@@ -196,12 +213,15 @@ def model_rom_bytes(params) -> int:
     """Deployed model size at logical widths (paper Table A3 semantics)."""
     import jax
 
+    from repro.core.qformat import PackedQTensor
+
     total = 0
     for leaf in jax.tree_util.tree_leaves(
-        params, is_leaf=lambda x: isinstance(x, QTensor)
+        params, is_leaf=lambda x: isinstance(x, (QTensor, PackedQTensor))
     ):
-        if isinstance(leaf, QTensor):
-            total += leaf.nbytes_model + 4  # + exponent storage
+        if isinstance(leaf, (QTensor, PackedQTensor)):
+            # logical payload + exponent-grid storage
+            total += leaf.nbytes_model + 4 * int(np.prod(jnp.shape(leaf.n)))
         elif hasattr(leaf, "size"):
             total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
     return total

@@ -1,0 +1,124 @@
+"""Activation-range observers for PTQ calibration (prepare → observe → convert).
+
+The torch-AO style flow: an observer object rides the calibration loop,
+absorbing each batch's per-site max-|x| statistics (the model records them
+under a CALIB-mode :class:`~repro.nn.module.Context`), then *converts* the
+accumulated ranges into frozen pow2 exponents (the qstate consumed by EVAL
+fake-quant and by :mod:`repro.core.integerize`).  Two strategies:
+
+* :class:`MinMaxObserver` — running max over the whole stream.  Order- and
+  permutation-invariant: shuffling the calibration batches cannot change the
+  result.  This is what :func:`repro.core.ptq.calibrate` historically did
+  inline, now factored so it is swappable.
+* :class:`EMAObserver` — exponential moving average of per-batch maxima.
+  A single outlier batch moves the range only by ``(1 - decay)`` of its
+  excess, so the exponent tracks the stream's *typical* range rather than
+  its worst spike — the standard sub-int8 calibration choice, where a grid
+  of 8 or 4 values cannot afford to spend headroom on a one-off.
+
+:func:`calibrate_tokens` runs the flow over a real token stream for LM
+models (``model.apply(params, tokens, ctx)``), which is how the serve path
+calibrates activation exponents before :func:`repro.core.integerize.
+integerize_weights_only` packs sub-int8 weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class MinMaxObserver:
+    """Running max-|x| per quant site — the stream's true envelope."""
+
+    ranges: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def observe(self, stats: Dict[str, jax.Array]) -> None:
+        for k, v in stats.items():
+            v = jnp.asarray(v, jnp.float32)
+            self.ranges[k] = (jnp.maximum(self.ranges[k], v)
+                              if k in self.ranges else v)
+
+    def qstate(self, policy) -> Dict[str, jax.Array]:
+        from repro.core.ptq import ranges_to_qstate
+
+        return ranges_to_qstate(dict(self.ranges), policy)
+
+
+@dataclasses.dataclass
+class EMAObserver:
+    """EMA of per-batch max-|x| — converges to the stream's running range.
+
+    The first batch seeds the average directly (no zero-bias warmup), so a
+    constant-range stream yields exactly that range at any decay.
+    """
+
+    decay: float = 0.9
+    ranges: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def observe(self, stats: Dict[str, jax.Array]) -> None:
+        d = jnp.float32(self.decay)
+        for k, v in stats.items():
+            v = jnp.asarray(v, jnp.float32)
+            self.ranges[k] = (d * self.ranges[k] + (1.0 - d) * v
+                              if k in self.ranges else v)
+
+    def qstate(self, policy) -> Dict[str, jax.Array]:
+        from repro.core.ptq import ranges_to_qstate
+
+        return ranges_to_qstate(dict(self.ranges), policy)
+
+
+Observer = Union[MinMaxObserver, EMAObserver]
+
+_OBSERVERS = {"minmax": MinMaxObserver, "ema": EMAObserver}
+
+
+def make_observer(kind: Union[str, Observer] = "minmax", **kw) -> Observer:
+    """``"minmax"`` / ``"ema"`` (plus kwargs) or a ready observer instance."""
+    if not isinstance(kind, str):
+        return kind
+    try:
+        return _OBSERVERS[kind](**kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown observer {kind!r}; expected one of {sorted(_OBSERVERS)}"
+        ) from None
+
+
+def calibrate_tokens(
+    model,
+    params,
+    token_batches: Iterable,
+    policy,
+    *,
+    observer: Union[str, Observer] = "minmax",
+    existing: Optional[Dict[str, jax.Array]] = None,
+) -> Dict[str, jax.Array]:
+    """Calibrate activation exponents for an LM from a real token stream.
+
+    ``token_batches`` yields int32 token arrays ``(B, T)``; each is run
+    through ``model.apply`` under a CALIB-mode Context and the recorded
+    max-|x| stats are folded into the observer.  Returns the frozen qstate
+    dict ``{site: n}`` ready for EVAL / integerized serving.
+    """
+    from repro.core.policy import QMode
+    from repro.nn.module import Context
+
+    obs = make_observer(observer)
+    if existing:
+        obs.observe(existing)
+    calib_policy = policy.with_mode(QMode.CALIB)
+
+    @jax.jit
+    def step(p, toks):
+        ctx = Context(policy=calib_policy, train=False)
+        model.apply(p, toks, ctx)
+        return ctx.stats
+
+    for toks in token_batches:
+        obs.observe(step(params, jnp.asarray(toks, jnp.int32)))
+    return obs.qstate(policy)

@@ -38,13 +38,19 @@ def calibrate(
     policy: QuantPolicy,
     *,
     existing: Optional[Dict[str, jax.Array]] = None,
+    observer="minmax",
 ) -> Dict[str, jax.Array]:
     """Run CALIB-mode forward passes, return frozen activation exponents.
 
     ``apply_fn(params, batch, ctx) -> (out, stats)`` must thread a Context in
     CALIB mode and return the collected stats dict (see
     :func:`repro.train.trainer.make_calib_step` for the jit'd builder).
+
+    ``observer`` picks the range-accumulation strategy — ``"minmax"``
+    (default, the stream's true envelope; exactly the historical behavior),
+    ``"ema"``, or an instance from :mod:`repro.core.observers`.
     """
+    from repro.core.observers import make_observer
     from repro.nn.module import Context
 
     calib_policy = policy.with_mode(QMode.CALIB)
@@ -55,9 +61,9 @@ def calibrate(
         apply_fn(p, batch, ctx)
         return ctx.stats
 
-    acc: Dict[str, jax.Array] = dict(existing or {})
+    obs = make_observer(observer)
+    if existing:
+        obs.observe(existing)
     for batch in batches:
-        stats = step(params, batch)
-        for k, v in stats.items():
-            acc[k] = jnp.maximum(acc[k], v) if k in acc else v
-    return ranges_to_qstate(acc, policy)
+        obs.observe(step(params, batch))
+    return obs.qstate(policy)

@@ -34,8 +34,10 @@ import numpy as np
 N_MIN = -30
 N_MAX = 30
 
-_INT_DTYPES = {4: jnp.int8, 8: jnp.int8, 9: jnp.int16, 16: jnp.int16, 32: jnp.int32}
-_ACC_DTYPES = {4: jnp.int32, 8: jnp.int32, 9: jnp.int32, 16: jnp.int32, 32: jnp.int64}
+_INT_DTYPES = {2: jnp.int8, 4: jnp.int8, 8: jnp.int8, 9: jnp.int16, 16: jnp.int16,
+               32: jnp.int32}
+_ACC_DTYPES = {2: jnp.int32, 4: jnp.int32, 8: jnp.int32, 9: jnp.int32, 16: jnp.int32,
+               32: jnp.int64}
 
 
 def storage_dtype(width: int):
@@ -191,6 +193,83 @@ class QTensor:
         return int(np.prod(self.q.shape)) * self.width // 8
 
 
+# --------------------------------------------------------------------------
+# Sub-int8 packed storage (beyond-paper: int4/int2 weight frontier)
+# --------------------------------------------------------------------------
+
+def lanes_per_byte(width: int) -> int:
+    """How many ``width``-bit lanes fit one int8 container byte (4->2, 2->4)."""
+    if width not in (2, 4):
+        raise ValueError(f"packed storage supports widths 2 and 4, got {width}")
+    return 8 // width
+
+
+def pack_subint8(q: jax.Array, width: int, axis: int = -2) -> jax.Array:
+    """Pack ``width``-bit signed integers along ``axis`` into int8 bytes.
+
+    Lane ``i`` of a byte holds logical element ``lanes*j + i`` in bits
+    ``[width*i, width*(i+1))`` (two's complement), so lane 0 is the *low*
+    nibble — the layout ``wq4_matmul``'s in-kernel unpack assumes.  A length
+    not divisible by the lane count is zero-padded; the pad nibbles
+    dequantize to 0 and are sliced away by :func:`unpack_subint8`.
+    """
+    lanes = lanes_per_byte(width)
+    q = jnp.asarray(q)
+    ax = axis % q.ndim
+    k = q.shape[ax]
+    pad = (-k) % lanes
+    if pad:
+        spec = [(0, 0)] * q.ndim
+        spec[ax] = (0, pad)
+        q = jnp.pad(q, spec)
+    moved = jnp.moveaxis(q, ax, -1).astype(jnp.int32)
+    grp = moved.reshape(*moved.shape[:-1], -1, lanes)
+    mask = (1 << width) - 1
+    acc = jnp.zeros(grp.shape[:-1], jnp.int32)
+    for i in range(lanes):
+        acc = acc | ((grp[..., i] & mask) << (width * i))
+    packed = jax.lax.bitcast_convert_type(acc.astype(jnp.uint8), jnp.int8)
+    return jnp.moveaxis(packed, -1, ax)
+
+
+def unpack_subint8(packed: jax.Array, width: int, k: int, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`pack_subint8`: int8 bytes -> ``k`` signed lanes.
+
+    Bit-exact round trip for any value on the ``width``-bit grid and any
+    lane alignment (``k`` need not divide the lane count).
+    """
+    lanes = lanes_per_byte(width)
+    ax = axis % packed.ndim
+    moved = jnp.moveaxis(packed, ax, -1)
+    u = jax.lax.bitcast_convert_type(moved, jnp.uint8).astype(jnp.int32)
+    mask = (1 << width) - 1
+    half = 1 << (width - 1)
+    vals = jnp.stack([(u >> (width * i)) & mask for i in range(lanes)], axis=-1)
+    vals = jnp.where(vals >= half, vals - (1 << width), vals)
+    flat = vals.reshape(*vals.shape[:-2], -1)[..., :k].astype(jnp.int8)
+    return jnp.moveaxis(flat, -1, ax)
+
+
+def block_frac_bits(x: jax.Array, width: int, block_size: int,
+                    axis: int = -2) -> jax.Array:
+    """Per-block (MX-style) exponents: Eq. 1-2 over ``block_size`` runs of
+    ``axis``.  Returns the exponent grid with ``axis`` shrunk to the number
+    of blocks (the trailing partial block, if any, is ranged over its real
+    elements only — zero-padding cannot inflate a block's scale).
+    """
+    ax = axis % x.ndim
+    k = x.shape[ax]
+    pad = (-k) % block_size
+    if pad:
+        spec = [(0, 0)] * x.ndim
+        spec[ax] = (0, pad)
+        x = jnp.pad(x, spec)
+    moved = jnp.moveaxis(x, ax, -1)
+    grp = moved.reshape(*moved.shape[:-1], -1, block_size)
+    ma = jnp.max(jnp.abs(grp), axis=-1)
+    return jnp.moveaxis(frac_bits_for(ma, width), -1, ax)
+
+
 def _qtensor_flatten(t: QTensor):
     return (t.q, t.n), (t.width, t.channel_axis)
 
@@ -244,3 +323,112 @@ def quantize_tensor(
     shape = [1] * x.ndim
     shape[channel_axis] = -1
     return QTensor(quantize(x, n.reshape(shape), width), n, width, channel_axis % x.ndim)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedQTensor:
+    """A sub-int8 weight tensor: packed int8 container + pow2 exponents.
+
+    Storage is ``width``-bit (4 or 2) two's-complement lanes packed along the
+    *contraction* axis (axis -2 of a ``(..., K, N)`` GEMM weight — see
+    :func:`pack_subint8`), so ``q`` has shape ``(..., ceil(K/lanes), N)`` and
+    the container holds ``width/8`` bytes per logical element — the ROM /
+    HBM-bandwidth halving below int8.
+
+    ``n`` carries the exponents on the paper's pow2 grid:
+
+    * scalar                       — per-tensor
+    * ``(..., 1, N)``              — per-output-channel (``block_size=None``)
+    * ``(..., ceil(K/bs), N)``     — per-block (MX-style), ``block_size=bs``
+      runs of K share one exponent
+
+    Registered as a pytree (``q``/``n`` are children; ``width``, ``k`` and
+    ``block_size`` static aux), so packed weights ride param trees, jit
+    donation and ``lax.scan`` stacking exactly like :class:`QTensor`.
+    """
+
+    q: jax.Array
+    n: jax.Array
+    width: int
+    k: int
+    block_size: Optional[int] = None
+
+    @property
+    def shape(self):
+        """Logical (unpacked) shape ``(..., K, N)``."""
+        return (*self.q.shape[:-2], self.k, self.q.shape[-1])
+
+    @property
+    def nbytes_packed(self) -> int:
+        """Actual container bytes (int8 payload; scales excluded)."""
+        return int(np.prod(self.q.shape))
+
+    @property
+    def nbytes_model(self) -> int:
+        """Model-ROM bytes at the logical width (Table A3 semantics)."""
+        return int(np.prod(self.shape)) * self.width // 8
+
+    def unpack(self) -> jax.Array:
+        """The int8-held ``width``-bit integers, unpacked to ``(..., K, N)``."""
+        return unpack_subint8(self.q, self.width, self.k, axis=-2)
+
+    def scales(self) -> jax.Array:
+        """Float ``2^-n`` broadcastable against the unpacked ``(..., K, N)``."""
+        n = self.n
+        if self.block_size is not None and jnp.ndim(n) > 0:
+            n = jnp.repeat(n, self.block_size, axis=-2)[..., : self.k, :]
+        return jnp.exp2(-jnp.asarray(n, jnp.float32))
+
+    def dequantize(self) -> jax.Array:
+        """Float reconstruction: unpack * 2^-n (per-channel or per-block)."""
+        return self.unpack().astype(jnp.float32) * self.scales()
+
+
+def _packed_flatten(t: PackedQTensor):
+    return (t.q, t.n), (t.width, t.k, t.block_size)
+
+
+def _packed_unflatten(aux, children):
+    q, n = children
+    width, k, block_size = aux
+    return PackedQTensor(q=q, n=n, width=width, k=k, block_size=block_size)
+
+
+jax.tree_util.register_pytree_node(PackedQTensor, _packed_flatten, _packed_unflatten)
+
+
+def quantize_tensor_packed(
+    x: jax.Array,
+    width: int,
+    *,
+    block_size: Optional[int] = None,
+    per_channel: bool = True,
+) -> PackedQTensor:
+    """Quantize a ``(..., K, N)`` weight to packed ``width``-bit storage.
+
+    ``block_size=None`` uses one exponent per output channel over the whole
+    K axis (the per-channel Qm.n grid at sub-int8 width); ``block_size=bs``
+    gives every ``bs``-run of K its own exponent (MX-style block scaling —
+    tighter grids where a channel's dynamic range varies along K).
+    ``per_channel=False`` with ``block_size=None`` collapses to a single
+    per-tensor exponent.
+    """
+    if x.ndim < 2:
+        raise ValueError(f"packed weights need ndim >= 2, got {x.ndim}")
+    lanes = lanes_per_byte(width)
+    k = x.shape[-2]
+    if block_size is not None:
+        if block_size < lanes or block_size % lanes:
+            raise ValueError(
+                f"block_size must be a positive multiple of {lanes} "
+                f"(the byte lane count at width {width}), got {block_size}")
+        n = block_frac_bits(x, width, block_size, axis=-2)
+        nb = jnp.repeat(n, block_size, axis=-2)[..., :k, :]
+    elif per_channel:
+        n = frac_bits_for(jnp.max(jnp.abs(x), axis=-2, keepdims=True), width)
+        nb = n
+    else:
+        n = frac_bits_for(max_abs(x), width)
+        nb = n
+    q = quantize(x, nb, width)
+    return PackedQTensor(pack_subint8(q, width, axis=-2), n, width, k, block_size)

@@ -92,6 +92,37 @@ def _ste_int8_bwd(keep_axes, q_constraint, res, g):
 ste_int8_weight.defvjp(_ste_int8_fwd, _ste_int8_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fake_quant_blocked(x: jax.Array, width: int, block_size: int,
+                       axis: int = -2) -> jax.Array:
+    """Sub-int8 fake-quant on a per-block (MX-style) pow2 grid; STE backward.
+
+    Each ``block_size`` run of ``axis`` gets its own Eq. 1-2 exponent from
+    the live values, then the run is quantize-dequantized at ``width`` bits
+    (2 or 4).  The value set matches :func:`repro.core.qformat.
+    quantize_tensor_packed` exactly, so QAT with this forward converges onto
+    the grid the packed serving weights will actually store.
+    """
+    return _fqb_fwd(x, width, block_size, axis)[0]
+
+
+def _fqb_fwd(x, width, block_size, axis):
+    n = qformat.block_frac_bits(jax.lax.stop_gradient(x), width, block_size,
+                                axis=axis)
+    ax = axis % x.ndim
+    nb = jnp.repeat(n, block_size, axis=ax)
+    nb = jax.lax.slice_in_dim(nb, 0, x.shape[ax], axis=ax)
+    return qformat.quantize_dequantize(x, nb, width), None
+
+
+def _fqb_bwd(width, block_size, axis, res, g):
+    del width, block_size, axis, res
+    return (g,)
+
+
+fake_quant_blocked.defvjp(_fqb_fwd, _fqb_bwd)
+
+
 def dynamic_frac_bits(
     x: jax.Array, width: int, *, channel_axis: Optional[int] = None
 ) -> jax.Array:

@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.qformat import QTensor
+from repro.core.qformat import PackedQTensor, QTensor
 
 from . import ref
 from .fake_quant import fake_quant_pallas
@@ -32,7 +32,7 @@ from .qdecode_attn import qdecode_attn_pallas
 from .qmm import qmm_pallas, qmm_requant_pallas
 from .qpaged_attn import qpaged_chunk_attn_pallas, qpaged_decode_attn_pallas
 from .qragged_attn import qragged_attn_pallas
-from .wq_matmul import wq_matmul_pallas
+from .wq_matmul import wq4_matmul_pallas, wq_matmul_pallas
 
 # None | "pallas" | "ref" | "interpret"; seeded from the environment so a
 # plain `REPRO_KERNELS_FORCE=interpret python -m ...` flips every dispatch.
@@ -118,6 +118,43 @@ def wq_matmul(x: jax.Array, w: QTensor, *, transpose: bool = False) -> jax.Array
     else:
         out = ref.wq_matmul_ref(x2, w.q, scale, out_dtype=x.dtype)
     return out.reshape(*lead, w.q.shape[-1])
+
+
+def wq4_matmul(x: jax.Array, w: PackedQTensor) -> jax.Array:
+    """x (..., K) float @ dequant(w) — packed sub-int8 weight-only path.
+
+    ``w`` stores ``w.width``-bit lanes packed into int8 bytes along K with
+    per-channel or per-block (MX-style) pow2 scales.  The Pallas kernel
+    covers the serving-critical 2-D int4 case (unpack-in-VMEM, scales
+    applied before the dot); width-2 and exotic grids take the pure-JAX
+    dequant fallback, which is also what sharded paths trace.
+    """
+    if w.q.ndim != 2:
+        # stacked / sharded layouts: dequantize outside any kernel
+        return jnp.matmul(x, w.dequantize().astype(x.dtype))
+    x2, lead = _2d(x)
+    k = w.k
+    n_out = w.q.shape[-1]
+    scale = jnp.exp2(-w.n.astype(jnp.float32))
+    mode = _mode()
+    if w.width != 4 or mode not in ("pallas", "interpret", "ref"):
+        out = ref.wq4_matmul_ref(x2, w.q, scale, k=k, width=w.width,
+                                 block_size=w.block_size or 0,
+                                 out_dtype=x.dtype)
+        return out.reshape(*lead, n_out)
+    bs = w.block_size or 0
+    if bs:
+        scale = scale.reshape(-1, n_out)
+    if mode == "pallas":
+        out = wq4_matmul_pallas(x2, w.q, scale, k=k, block_size=bs,
+                                out_dtype=x.dtype)
+    elif mode == "interpret":
+        out = wq4_matmul_pallas(x2, w.q, scale, k=k, block_size=bs,
+                                out_dtype=x.dtype, interpret=True)
+    else:
+        out = ref.wq4_matmul_ref(x2, w.q, scale, k=k, width=4,
+                                 block_size=bs, out_dtype=x.dtype)
+    return out.reshape(*lead, n_out)
 
 
 def fake_quant_fused(x, n, *, width: int = 8):

@@ -39,6 +39,25 @@ def wq_matmul_ref(x, wq, scale, out_dtype=jnp.float32):
     return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)
 
 
+def wq4_matmul_ref(x, wq, scale, *, k, width: int = 4, block_size: int = 0,
+                   out_dtype=jnp.float32):
+    """Packed sub-int8 weight-only GEMM oracle.
+
+    ``wq`` is the int8 container from :func:`repro.core.qformat.pack_subint8`
+    (``width``-bit lanes along K); ``scale`` is ``2^-n`` — per-channel
+    (``block_size=0``, broadcastable to ``(1, N)``) or per-block
+    (``(ceil(K/block_size), N)``, each row covering ``block_size`` K rows).
+    """
+    n_out = wq.shape[-1]
+    w = qformat.unpack_subint8(wq, width, k, axis=-2).astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    if block_size:
+        s = jnp.repeat(scale.reshape(-1, n_out), block_size, axis=0)[:k]
+    else:
+        s = jnp.broadcast_to(jnp.atleast_2d(scale), (1, n_out))
+    return jnp.matmul(x.astype(jnp.float32), w * s).astype(out_dtype)
+
+
 def fake_quant_ref(x, n, *, width: int = 8):
     """Quantize-dequantize on the pow2 grid 2^-n (QAT fake-quant oracle)."""
     return qformat.quantize_dequantize(x, jnp.asarray(n, jnp.int32), width).astype(x.dtype)

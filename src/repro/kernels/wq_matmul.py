@@ -91,3 +91,121 @@ def wq_matmul_pallas(
         interpret=interpret,
     )(xp, wp, sp)
     return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Packed int4: two weight lanes per int8 byte, unpack-in-kernel
+# --------------------------------------------------------------------------
+
+def _wq4_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k_steps: int,
+                rows_per_scale: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Unpack the packed block in VMEM: byte row j holds logical weight rows
+    # 2j (low nibble) and 2j+1 (high nibble), two's complement.  int32 shift
+    # arithmetic sign-extends both nibbles exactly.
+    w8 = w_ref[...].astype(jnp.int32)                    # (bk/2, bn)
+    lo = jnp.right_shift(jnp.left_shift(w8, 28), 28)
+    hi = jnp.right_shift(w8, 4)
+    bkp, bn = w8.shape
+    w = jnp.stack([lo, hi], axis=1).reshape(2 * bkp, bn)  # (bk, bn)
+    # Scale rows cover rows_per_scale logical K rows each (block_size for
+    # per-block grids, the whole bk for per-channel) — applied BEFORE the
+    # dot, because a K-varying scale cannot ride the N epilogue.
+    s = s_ref[...]                                        # (bk/rps, bn)
+    wf = w.astype(jnp.float32) * jnp.repeat(s, rows_per_scale, axis=0)
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), wf, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_size", "bm", "bk",
+                                             "bn", "interpret", "out_dtype"))
+def wq4_matmul_pallas(
+    x: jax.Array,
+    wq: jax.Array,
+    scale: jax.Array,
+    *,
+    k: int,
+    block_size: int = 0,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M,K) f32/bf16 @ dequant((ceil(K/2),N) packed int4) -> (M,N).
+
+    ``wq`` packs two int4 lanes per int8 byte along K (``qformat.
+    pack_subint8`` layout: low nibble = even row).  ``scale`` is ``2^-n``:
+
+    * ``block_size=0`` — per-channel, shape ``(1, N)`` (or ``()``/(N,));
+    * ``block_size=bs`` — per-block (MX-style), shape ``(ceil(K/bs), N)``.
+
+    The kernel unpacks each weight block in VMEM and applies the scale rows
+    before the MXU dot, so HBM traffic is int4 bytes + the scale grid.
+    """
+    m = x.shape[0]
+    n = wq.shape[1]
+    kp2 = 2 * wq.shape[0]                     # logical K padded to lane pairs
+    if block_size:
+        if block_size % 2:
+            raise ValueError(f"block_size must be even, got {block_size}")
+        nblocks = -(-k // block_size)
+        scale = jnp.asarray(scale, jnp.float32).reshape(nblocks, n)
+        # pad the scale grid to the packed K extent (pad rows scale only
+        # zero-nibble pad weights, so their value is irrelevant)
+        scale = _pad_to(scale, -(-kp2 // block_size), 0)
+        rps = block_size
+        bk_ = max(block_size, min(bk, kp2) // block_size * block_size)
+    else:
+        scale = jnp.broadcast_to(
+            jnp.atleast_2d(jnp.asarray(scale, jnp.float32)), (1, n))
+        bk_ = min(bk, kp2)
+        bk_ = bk_ - (bk_ % 2)
+    bm_, bn_ = min(bm, m), min(bn, n)
+    # widen x's K axis to the packed extent (the extra logical rows hold
+    # zero nibbles, so the padding value is inert), then to the K tile
+    xp = jnp.pad(x, ((0, 0), (0, kp2 - x.shape[1])))
+    xp = _pad_to(_pad_to(xp, bm_, 0), bk_, 1)
+    wp = _pad_to(_pad_to(wq, bk_ // 2, 0), bn_, 1)
+    if block_size:
+        sp = _pad_to(_pad_to(scale, bk_ // block_size, 0), bn_, 1)
+        s_rows = bk_ // block_size
+    else:
+        sp = _pad_to(scale, bn_, 1)
+        s_rows = 1
+        rps = bk_
+    mp, kpad = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kpad // bk_
+    grid = (mp // bm_, np_ // bn_, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_wq4_kernel, k_steps=k_steps, rows_per_scale=rps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bk_ // 2, bn_), lambda i, j, kk: (kk, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((s_rows, bn_),
+                         (lambda i, j, kk: (kk, j)) if block_size
+                         else (lambda i, j, kk: (0, j)),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]

@@ -4,7 +4,9 @@
         --slots 4 --prompt-len 16 --requests 12 --max-new 32 --max-new-min 8 \\
         --arrival-spacing 2 [--wq] [--qkv] [--policy scheduler]
 
---wq   int8 weight-only storage (integerize_weights_only → wq_matmul path)
+--wq   weight-only storage (bare = int8 → wq_matmul; int4[-block] /
+       int2[-block] pack sub-int8 lanes → wq4_matmul; --wq-block sets the
+       per-block scale granularity)
 --qkv  int8 KV cache on the paper's Qm.n grid
 Both reproduce the paper's deployment flow (train fp → quantize → deploy) at
 the serving layer — now under realistic traffic instead of one lockstep batch.
@@ -161,8 +163,9 @@ def main(argv=None):
                     help="paged KV cache: shared page pool + per-slot page "
                          "tables with block-allocated admission (chunked "
                          "policy only; see docs/serving.md)")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page (paged mode; 0 = auto: 128 on "
+                         "hardware Pallas dispatch, 16 elsewhere)")
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="KV pool pages shared by all slots (0 = dense "
                          "parity: slots * ceil(max_len/page_size)); smaller "
@@ -214,7 +217,14 @@ def main(argv=None):
                          "scheduler policy only)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop a slot when this token is sampled (-1 = off)")
-    ap.add_argument("--wq", action="store_true")
+    ap.add_argument("--wq", nargs="?", const="int8", default=False,
+                    choices=["int8", "int4", "int4-block", "int2",
+                             "int2-block"],
+                    help="weight-only storage format (bare --wq = int8; "
+                         "int4/int2 pack two/four lanes per byte, -block "
+                         "adds per-block scales)")
+    ap.add_argument("--wq-block", type=int, default=32,
+                    help="K rows per scale block for --wq *-block formats")
     ap.add_argument("--qkv", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -229,8 +239,10 @@ def main(argv=None):
     engine = ServeEngine(model=model, params=params,
                          max_len=args.prompt_len + args.max_new,
                          batch_slots=args.slots, quantized_kv=args.qkv,
-                         weight_quant=args.wq, temperature=args.temperature,
-                         paged_kv=args.paged, page_size=args.page_size,
+                         weight_quant=args.wq, weight_block=args.wq_block,
+                         temperature=args.temperature,
+                         paged_kv=args.paged,
+                         page_size=args.page_size or None,
                          kv_pool_pages=args.pool_pages or None)
 
     if args.policy == "lockstep":

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import qformat
 from repro.core.policy import QMode
-from repro.core.qformat import QTensor
+from repro.core.qformat import PackedQTensor, QTensor
 from repro.core.quantizers import quantize_activation, quantize_weight
 from repro.nn.module import Context, Params
 
@@ -148,6 +148,8 @@ class Dense:
         skip = self.kind in ctx.policy.skip_kinds
 
         # ---- integer / weight-only paths --------------------------------
+        if isinstance(kernel, PackedQTensor):
+            return self._packed_apply(kernel, bias, x)
         if isinstance(kernel, QTensor):
             if isinstance(x, QTensor):
                 return self._integer_apply(params, x, ctx)
@@ -190,6 +192,16 @@ class Dense:
         from repro.kernels import ops as kops
 
         y = kops.wq_matmul(x.astype(self.dtype), kernel)
+        if bias is not None:
+            b = bias.dequantize() if isinstance(bias, QTensor) else bias
+            y = y + b.astype(y.dtype)
+        return y
+
+    # ---- sub-int8 serving path: packed int4/int2 weights, float activations
+    def _packed_apply(self, kernel: PackedQTensor, bias, x):
+        from repro.kernels import ops as kops
+
+        y = kops.wq4_matmul(x.astype(self.dtype), kernel)
         if bias is not None:
             b = bias.dequantize() if isinstance(bias, QTensor) else bias
             y = y + b.astype(y.dtype)
@@ -248,9 +260,11 @@ class ConvND:
         kernel = params["kernel"]
         bias = params.get("bias")
 
-        if isinstance(kernel, QTensor):
-            if isinstance(x, QTensor):
+        if isinstance(kernel, (QTensor, PackedQTensor)):
+            if isinstance(x, QTensor) and isinstance(kernel, QTensor):
                 return self._integer_apply(params, x, ctx)
+            # weight-only serving (packed sub-int8 included): conv has no
+            # packed kernel, so dequantize the weight and convolve in float.
             w = kernel.dequantize().astype(self.dtype)
             y = self._conv(x.astype(self.dtype), w)
             if bias is not None:

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,24 @@ def _warn_small_page(page_size: int) -> None:
         f"below the {HW_MIN_PAGE_SIZE}-row sublane tile — attention will "
         f"be DMA-bound; use page_size >= {HW_MIN_PAGE_SIZE} on hardware",
         RuntimeWarning, stacklevel=3)
+
+
+def _weight_quant_kwargs(spec: Union[bool, str], weight_block: int) -> dict:
+    """Map an engine ``weight_quant`` spec to ``integerize_weights_only``
+    kwargs.  ``True``/``"int8"`` keep the historical per-channel int8 path;
+    ``"int4"``/``"int2"`` pack sub-int8 per-channel; the ``"-block"``
+    suffix switches to per-block scales of ``weight_block`` K rows."""
+    if spec is True or spec == "int8":
+        return {}
+    if isinstance(spec, str):
+        base, _, tail = spec.partition("-")
+        bits = {"int4": 4, "int2": 2}.get(base)
+        if bits is not None and tail in ("", "block"):
+            return {"bits": bits,
+                    "block_size": weight_block if tail == "block" else None}
+    raise ValueError(
+        f"weight_quant={spec!r}: expected True, 'int8', 'int4[-block]' "
+        f"or 'int2[-block]'")
 
 
 def mask_vocab_tail(logits: jax.Array, vocab: int) -> jax.Array:
@@ -274,7 +292,12 @@ class ServeEngine:
     max_len: int
     batch_slots: int
     quantized_kv: bool = False
-    weight_quant: bool = False
+    # Weight format for serving: False = float, True / "int8" = per-channel
+    # int8 QTensors, "int4" / "int2" = packed sub-int8 per-channel,
+    # "int4-block" / "int2-block" = packed with per-block (MX-style) scales
+    # of ``weight_block`` K rows each.
+    weight_quant: Union[bool, str] = False
+    weight_block: int = 32
     temperature: float = 0.0
     mesh: Any = None
     axis_rules: Any = None
@@ -285,20 +308,30 @@ class ServeEngine:
     # the capacity knob: None = dense parity (slots * ceil(max_len/page_size)
     # pages); smaller pools trade worst-case headroom for more slots at the
     # same bytes — the continuous-batching capacity lever.
+    # page_size=None resolves to HW_MIN_PAGE_SIZE under compiled-Pallas
+    # dispatch (each page is one DMA on hardware) and to 16 elsewhere;
+    # explicit small values are honored but warned about on hardware.
     paged_kv: bool = False
-    page_size: int = 16
+    page_size: Optional[int] = None
     kv_pool_pages: Optional[int] = None
 
     def __post_init__(self):
-        if self.paged_kv and self.page_size < 1:
-            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
-        if self.paged_kv and self.page_size < HW_MIN_PAGE_SIZE:
-            from repro.kernels import ops as _kops
+        from repro.kernels import ops as _kops
 
-            if _kops.is_hardware_dispatch():
+        if self.page_size is None:
+            self.page_size = (HW_MIN_PAGE_SIZE
+                              if self.paged_kv and _kops.is_hardware_dispatch()
+                              else 16)
+        elif self.paged_kv:
+            if self.page_size < 1:
+                raise ValueError(
+                    f"page_size must be >= 1, got {self.page_size}")
+            if self.page_size < HW_MIN_PAGE_SIZE and _kops.is_hardware_dispatch():
                 _warn_small_page(self.page_size)
         if self.weight_quant:
-            self.params = integerize_weights_only(self.params)
+            self.params = integerize_weights_only(
+                self.params, **_weight_quant_kwargs(self.weight_quant,
+                                                    self.weight_block))
         self._prefill = jax.jit(make_prefill_step(
             self.model, mesh=self.mesh, axis_rules=self.axis_rules))
         self._decode = jax.jit(make_decode_step(

@@ -151,3 +151,97 @@ def test_qdecode_attn_matches_ref(b, hq, hkv, d, s, kv_len):
     got = qdecode_attn_pallas(q, kc, vc, k_n, v_n, jnp.int32(kv_len), bs=64, interpret=True)
     want = ref.qdecode_attn_ref(q, kc, vc, k_n, v_n, kv_len)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# Packed int4 weight-only GEMM: unpack-in-kernel vs the ref oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,block_size", [
+    (4, 16, 8, 0),          # single tile, per-channel
+    (33, 100, 77, 0),       # tiles don't divide any axis
+    (8, 31, 16, 0),         # odd K: last byte holds one live nibble
+    (64, 128, 256, 32),     # per-block, block divides K and tiles
+    (33, 100, 77, 4),       # per-block, nothing divides anything
+    (1, 700, 257, 16),      # GEMV row, K crosses several bk tiles
+    (7, 24, 5, 10),         # block > remaining K in last tile
+])
+def test_wq4_matmul_matches_ref(m, k, n, block_size):
+    from repro.core import qformat
+    from repro.kernels.wq_matmul import wq4_matmul_pallas
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    t = qformat.quantize_tensor_packed(w, 4, block_size=block_size or None)
+    scale = jnp.exp2(-t.n.astype(jnp.float32))
+    if block_size:
+        scale = scale.reshape(-1, n)
+    got = wq4_matmul_pallas(x, t.q, scale, k=k, block_size=block_size,
+                            bm=32, bk=64, bn=32, interpret=True)
+    want = ref.wq4_matmul_ref(x, t.q, scale, k=k, block_size=block_size)
+    # The integer unpack is bit-exact (asserted below); the f32 accumulation
+    # differs from the one-shot ref matmul only by K-tiling reassociation.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_wq4_matmul_single_k_tile_bit_exact():
+    """With one K step the kernel's accumulation order matches the ref's
+    single dot — the unpack+scale path must then agree bit for bit."""
+    from repro.core import qformat
+    from repro.kernels.wq_matmul import wq4_matmul_pallas
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(8))
+    x = jax.random.normal(kx, (16, 32), jnp.float32)
+    w = jax.random.normal(kw, (32, 24), jnp.float32)
+    for bs in (0, 8):
+        t = qformat.quantize_tensor_packed(w, 4, block_size=bs or None)
+        scale = jnp.exp2(-t.n.astype(jnp.float32))
+        if bs:
+            scale = scale.reshape(-1, 24)
+        got = wq4_matmul_pallas(x, t.q, scale, k=32, block_size=bs,
+                                bm=16, bk=32, bn=24, interpret=True)
+        want = ref.wq4_matmul_ref(x, t.q, scale, k=32, block_size=bs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wq4_ref_oracle_matches_dense_dequant():
+    """The oracle itself is anchored to the PackedQTensor dequantization."""
+    from repro.core import qformat
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.normal(kx, (5, 19), jnp.float32)
+    w = jax.random.normal(kw, (19, 7), jnp.float32)
+    for bs in (None, 4):
+        t = qformat.quantize_tensor_packed(w, 4, block_size=bs)
+        scale = jnp.exp2(-t.n.astype(jnp.float32))
+        if bs:
+            scale = scale.reshape(-1, 7)
+        got = ref.wq4_matmul_ref(x, t.q, scale, k=19, block_size=bs or 0)
+        want = jnp.matmul(x, t.dequantize())
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_wq4_ops_dispatch_int2_and_stacked_fall_back():
+    """ops.wq4_matmul: width-2 and stacked (scan) layouts take the pure-JAX
+    dequant fallback and still match the dense dequant matmul."""
+    from repro.core import qformat
+    from repro.kernels import ops as kops
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(10))
+    x = jax.random.normal(kx, (3, 6, 20), jnp.float32)
+    w = jax.random.normal(kw, (20, 9), jnp.float32)
+    t2 = qformat.quantize_tensor_packed(w, 2, block_size=8)
+    got = kops.wq4_matmul(x, t2)
+    want = jnp.einsum("btk,kn->btn", x, t2.dequantize())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    ws = jax.random.normal(kw, (2, 20, 9), jnp.float32)   # stacked layers
+    ts = qformat.quantize_tensor_packed(ws, 4, block_size=4)
+    got = kops.wq4_matmul(jnp.ones((4, 20), jnp.float32), ts)
+    want = jnp.matmul(jnp.ones((4, 20), jnp.float32), ts.dequantize())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -445,3 +445,51 @@ def test_async_harvest_mode_does_not_donate_tok(smoke_lm):
                     max_new=5) for i in range(2)]
     results, _ = eng.scheduler(chunk_size=3).run(reqs)   # async: no eos_id
     assert all(len(results[i].tokens) == 5 for i in range(2))
+
+
+# --------------------------------------------------------------------------
+# page_size default: hardware dispatch resolves to the sublane tile
+# --------------------------------------------------------------------------
+
+def test_page_size_default_resolves_by_dispatch(smoke_lm, monkeypatch):
+    """With no explicit page_size, a paged engine defaults to the 128-row
+    sublane tile under compiled-Pallas dispatch (one DMA per tile) and to a
+    small 16-row page everywhere else; the defaults never warn, while an
+    explicit sub-tile value on hardware still does."""
+    import warnings
+
+    from repro.kernels import ops as kops
+    from repro.serve import engine as serve_engine
+
+    cfg, model, params = smoke_lm
+
+    monkeypatch.setattr(kops, "FORCE", "pallas")
+    monkeypatch.setattr(serve_engine, "_small_page_warned", False)
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        eng = _engine(model, params, paged_kv=True, max_len=256)
+    assert eng.page_size == serve_engine.HW_MIN_PAGE_SIZE
+    assert not any(issubclass(w.category, RuntimeWarning) for w in record)
+
+    monkeypatch.setattr(kops, "FORCE", "interpret")
+    eng = _engine(model, params, paged_kv=True)
+    assert eng.page_size == 16
+    monkeypatch.setattr(kops, "FORCE", "ref")
+    eng = _engine(model, params, paged_kv=True)
+    assert eng.page_size == 16
+    # dense engines keep the small default too (page_size is inert there)
+    eng = _engine(model, params)
+    assert eng.page_size == 16
+
+    # the guard is about *explicit* small values, not the defaults
+    monkeypatch.setattr(kops, "FORCE", "pallas")
+    monkeypatch.setattr(serve_engine, "_small_page_warned", False)
+    with pytest.warns(RuntimeWarning, match="page_size"):
+        _engine(model, params, paged_kv=True, page_size=8)
+
+
+def test_page_size_zero_or_negative_rejected(smoke_lm):
+    cfg, model, params = smoke_lm
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="page_size"):
+            _engine(model, params, paged_kv=True, page_size=bad)

@@ -340,3 +340,103 @@ def test_qdecode_kernel_per_slot_lengths():
                                 jnp.int32(5), interpret=True)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(ref_s),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Observers: calibration range accumulation (core/observers.py)
+# --------------------------------------------------------------------------
+
+def test_minmax_observer_permutation_invariant():
+    """Shuffling calibration batches cannot change a min-max range."""
+    from repro.core.observers import make_observer
+
+    rng = np.random.default_rng(0)
+    stream = [{"a": jnp.float32(v), "b": jnp.float32(w)}
+              for v, w in rng.uniform(0.1, 9.0, size=(8, 2))]
+    fwd, rev = make_observer("minmax"), make_observer("minmax")
+    for s in stream:
+        fwd.observe(s)
+    for s in reversed(stream):
+        rev.observe(s)
+    for k in ("a", "b"):
+        want = max(float(s[k]) for s in stream)
+        assert float(fwd.ranges[k]) == pytest.approx(want)
+        assert float(fwd.ranges[k]) == float(rev.ranges[k])
+
+
+def test_ema_observer_converges_to_stream_range():
+    """First batch seeds directly; a constant tail pulls the EMA to the
+    stream's running range geometrically (decay^t), and one outlier moves
+    it by only (1 - decay) of its excess."""
+    from repro.core.observers import EMAObserver
+
+    obs = EMAObserver(decay=0.9)
+    obs.observe({"x": jnp.float32(100.0)})       # outlier seed
+    for _ in range(60):
+        obs.observe({"x": jnp.float32(2.0)})
+    assert float(obs.ranges["x"]) == pytest.approx(
+        2.0 + 0.9 ** 60 * 98.0, rel=1e-5)
+
+    single = EMAObserver(decay=0.9)
+    single.observe({"x": jnp.float32(2.0)})
+    assert float(single.ranges["x"]) == pytest.approx(2.0)   # direct seed
+    single.observe({"x": jnp.float32(100.0)})
+    assert float(single.ranges["x"]) == pytest.approx(0.9 * 2.0 + 0.1 * 100.0)
+
+
+def test_make_observer_rejects_unknown_kind():
+    from repro.core import observers
+
+    with pytest.raises(ValueError, match="unknown observer"):
+        observers.make_observer("percentile")
+    inst = observers.EMAObserver(decay=0.5)
+    assert observers.make_observer(inst) is inst   # pass-through
+
+
+def test_calibrate_qstate_reproduces_observed_ranges():
+    """calibrate() through an observer lands on the same frozen exponents as
+    hand-folding the stream's max-|x| into frac_bits_for — and the ema
+    strategy shrugs off a spike that minmax must honor."""
+    from repro.core import qformat
+    from repro.core.policy import QMode, QuantPolicy
+    from repro.core.ptq import calibrate
+
+    def apply_fn(params, batch, ctx):
+        ctx.record("act", batch)
+
+    policy = QuantPolicy(mode=QMode.EVAL, weight_bits=8, act_bits=8)
+    batches = [jnp.full((4,), v, jnp.float32)
+               for v in (0.5, 0.9, 0.7, 0.6, 0.8)]
+    qstate = calibrate(apply_fn, {}, batches, policy)
+    (site, n), = qstate.items()
+    want = qformat.frac_bits_for(jnp.float32(0.9), policy.act_bits)
+    assert int(n) == int(want)
+
+    spiked = batches + [jnp.full((4,), 200.0, jnp.float32)] + batches * 4
+    n_minmax = next(iter(calibrate(apply_fn, {}, spiked, policy).values()))
+    n_ema = next(iter(calibrate(apply_fn, {}, spiked, policy,
+                                observer="ema").values()))
+    assert int(n_minmax) == int(
+        qformat.frac_bits_for(jnp.float32(200.0), policy.act_bits))
+    assert int(n_ema) > int(n_minmax)   # ema keeps a finer grid past a spike
+
+
+def test_scheduler_int4_weights_token_identical_repeat(smoke_lm):
+    """Packed int4-per-block weights serve deterministically: a rebuilt
+    engine over the same params replays the exact token stream."""
+    cfg, model, params = smoke_lm
+
+    def reqs():
+        return [Request(rid=i,
+                        prompt=np.asarray((np.arange(8) * 3 + i) % cfg.vocab,
+                                          np.int32),
+                        max_new=8) for i in range(2)]
+
+    runs = []
+    for _ in range(2):
+        eng = _engine(model, params, weight_quant="int4-block",
+                      weight_block=32)
+        results, _ = eng.scheduler().run(reqs())
+        runs.append({i: results[i].tokens for i in range(2)})
+    assert runs[0] == runs[1]
+    assert all(0 <= t < cfg.vocab for toks in runs[0].values() for t in toks)

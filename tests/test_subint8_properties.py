@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) for the packed sub-int8 formats:
+int4/int2 pack→unpack round-trips bit-exactly for every lane alignment
+(odd K, blocks that don't divide K), per-block quantize→dequantize error is
+bounded by one grid step, and the width-2/4 edge cases (saturation, sign,
+all-zero blocks) land where the Qm.n math says they must."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'dev' extra (pip install -e .[dev])")
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import qformat
+
+WIDTHS = st.sampled_from([2, 4])
+
+
+# --------------------------------------------------------------------------
+# pack -> unpack round trip: bit-exact for every lane alignment
+# --------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(width=WIDTHS, k=st.integers(1, 33), n=st.integers(1, 5),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip_bit_exact(width, k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(qformat.qmin(width), qformat.qmax(width) + 1,
+                     size=(k, n)).astype(np.int8)
+    packed = qformat.pack_subint8(jnp.asarray(q), width, axis=-2)
+    lanes = qformat.lanes_per_byte(width)
+    assert packed.shape == (-(-k // lanes), n)
+    assert packed.dtype == jnp.int8
+    back = qformat.unpack_subint8(packed, width, k, axis=-2)
+    np.testing.assert_array_equal(np.asarray(back), q)
+
+
+@settings(max_examples=60, deadline=None)
+@given(width=WIDTHS, lead=st.integers(1, 3), k=st.integers(1, 17),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip_stacked_leading_dims(width, lead, k, seed):
+    """Scan-stacked weights (L, K, N) pack along -2 like their slices."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(qformat.qmin(width), qformat.qmax(width) + 1,
+                     size=(lead, k, 3)).astype(np.int8)
+    packed = qformat.pack_subint8(jnp.asarray(q), width, axis=-2)
+    back = qformat.unpack_subint8(packed, width, k, axis=-2)
+    np.testing.assert_array_equal(np.asarray(back), q)
+    # each leading slice packs independently to the same bytes
+    for i in range(lead):
+        np.testing.assert_array_equal(
+            np.asarray(qformat.pack_subint8(jnp.asarray(q[i]), width)),
+            np.asarray(packed[i]))
+
+
+# --------------------------------------------------------------------------
+# block-scale quantize -> dequantize: error bounded by the grid step
+# --------------------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(width=WIDTHS, k=st.integers(1, 40),
+       block_pow=st.integers(2, 4),        # block_size 4/8/16 (mult of lanes)
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_block_quantize_error_bounded_by_grid_step(width, k, block_pow,
+                                                   scale, seed):
+    """|x - dequant(quant(x))| < 2^-n per element, n the block's exponent:
+    truncation loses < one step, and saturation can't exceed one either
+    (the grid max is 2^m - 2^-n while every |x| in the block is < 2^m)."""
+    block_size = 2 ** block_pow
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((k, 3)) * scale).astype(np.float32)
+    t = qformat.quantize_tensor_packed(jnp.asarray(x), width,
+                                       block_size=block_size)
+    err = np.abs(np.asarray(t.dequantize()) - x)
+    step = np.asarray(t.scales())            # broadcast (k, 3) of 2^-n
+    step = np.broadcast_to(step, err.shape)
+    assert (err < step + 1e-12).all(), (err / step).max()
+
+
+@settings(max_examples=60, deadline=None)
+@given(width=WIDTHS, k=st.integers(2, 24), seed=st.integers(0, 2**31 - 1))
+def test_per_channel_packed_matches_qtensor_grid(width, k, seed):
+    """Per-channel packed quantization lands on the same value grid as the
+    unpacked QTensor route at the same width."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((k, 4)).astype(np.float32)
+    packed = qformat.quantize_tensor_packed(jnp.asarray(x), width)
+    plain = qformat.quantize_tensor(jnp.asarray(x), width, channel_axis=-1)
+    np.testing.assert_array_equal(np.asarray(packed.unpack()),
+                                  np.asarray(plain.q))
+    np.testing.assert_allclose(np.asarray(packed.dequantize()),
+                               np.asarray(plain.dequantize()), rtol=0, atol=0)
+
+
+# --------------------------------------------------------------------------
+# width-2/4 edge cases: saturation, sign, zero blocks
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [2, 4])
+def test_saturation_pins_to_grid_extremes(width):
+    """Values far past the range saturate to qmin/qmax, and the saturated
+    codes survive the pack→unpack trip with their sign."""
+    n = jnp.int32(0)
+    x = jnp.array([[1e6], [-1e6]], jnp.float32)
+    q = qformat.quantize(x, n, width)
+    assert int(q[0, 0]) == qformat.qmax(width)
+    assert int(q[1, 0]) == qformat.qmin(width)
+    back = qformat.unpack_subint8(qformat.pack_subint8(q, width), width, 2)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@pytest.mark.parametrize("width", [2, 4])
+def test_zero_block_gets_clamped_exponent_and_zero_codes(width):
+    """An all-zero block drives Eq. 1 to -inf; the N_MAX clamp keeps the
+    exponent finite and the codes exactly zero, so dequantize is exact."""
+    x = jnp.zeros((8, 2), jnp.float32)
+    t = qformat.quantize_tensor_packed(x, width, block_size=4)
+    assert int(jnp.max(t.n)) == qformat.N_MAX
+    assert not np.asarray(t.q).any()         # zero codes pack to zero bytes
+    np.testing.assert_array_equal(np.asarray(t.dequantize()),
+                                  np.zeros((8, 2), np.float32))
+
+
+@pytest.mark.parametrize("width", [2, 4])
+def test_sign_preserved_in_every_lane_position(width):
+    """The minimum code (sign bit set, magnitude bits clear) survives in
+    every lane slot — the sign-extension shift can't borrow across lanes."""
+    lanes = qformat.lanes_per_byte(width)
+    for pos in range(lanes):
+        q = np.zeros((lanes, 1), np.int8)
+        q[pos, 0] = qformat.qmin(width)
+        back = qformat.unpack_subint8(
+            qformat.pack_subint8(jnp.asarray(q), width), width, lanes)
+        np.testing.assert_array_equal(np.asarray(back), q)
+
+
+def test_block_size_must_respect_lane_count():
+    x = jnp.ones((8, 2), jnp.float32)
+    with pytest.raises(ValueError, match="block_size"):
+        qformat.quantize_tensor_packed(x, 4, block_size=3)
+    with pytest.raises(ValueError, match="block_size"):
+        qformat.quantize_tensor_packed(x, 2, block_size=2)
+
+
+def test_partial_trailing_block_ignores_padding():
+    """The last (short) block's exponent ranges over its real elements only:
+    zero-padding must not inflate max|x| (and can't shrink it either)."""
+    x = jnp.concatenate([jnp.ones((4, 1), jnp.float32) * 0.01,
+                         jnp.ones((2, 1), jnp.float32) * 100.0])
+    t = qformat.quantize_tensor_packed(x, 4, block_size=4)
+    n = np.asarray(t.n).ravel()
+    assert n.shape == (2,)
+    # first block scaled for 0.01, second for 100 — distinct grids
+    assert n[0] > n[1]
+    err = np.abs(np.asarray(t.dequantize()) - np.asarray(x))
+    step = np.broadcast_to(np.asarray(t.scales()), err.shape)
+    assert (err < step).all()
