@@ -72,6 +72,15 @@ never the streams.  The gate (``check_chaos``) requires non-faulted
 completion rate == 1.0.  ``--chaos-only`` runs just this sweep (the CI
 chaos lane's entry point, cheap enough for interpreted-kernel mode).
 
+A seventh sweep (``bench_hetero``) covers the **non-KV slot-state
+adapters** (serve/slot_state.py): a long-encoder EncDec workload served
+with per-slot cross-attention K/V caching (``CrossAttnState`` — project
+once at admission) vs per-step recomputation, token identity asserted
+in-run and the steady tok/s ratio gated >= 1.15x (``check_hetero``); plus
+recurrent (mamba) bytes-per-slot vs an equal-config transformer KV slab at
+two ``max_len`` geometries — constant vs linear in sequence length,
+constancy asserted in-run.
+
 CI-enforced gates (all deterministic or same-run relative):
 
   * the same-run relative gate — chunked must beat one-shot on p99
@@ -81,7 +90,9 @@ CI-enforced gates (all deterministic or same-run relative):
     fixed seed, so effectively exact;
   * the shared-prefix capacity gate (``check_shared``) — deterministic too;
   * the oversubscription capacity gate (``check_oversub``) — deterministic
-    too.
+    too;
+  * the heterogeneous-state gate (``check_hetero``) — same-run cached vs
+    recomputed cross-attn K/V tok/s ratio, best-of-N both sides.
 
 With ``--baseline``, steady tok/s and p99 latency are also compared against
 the checked-in ``benchmarks/baselines/serve_bench.json`` at --tolerance —
@@ -606,6 +617,139 @@ def bench_burst(model, params, vocab, *, smoke=True, seed=0):
     return out
 
 
+def bench_hetero(*, smoke=True, seed=0):
+    """Heterogeneous-state sweep: the slot-state adapters' two new workload
+    classes (serve/slot_state.py).
+
+    **EncDec cross-attention cache**: the same whisper-style workload (long
+    encoder context, decode-heavy requests) served with the per-slot xkv
+    cache (``CrossAttnState``: K/V projected ONCE at admission) vs
+    ``cross_attn_cache=False`` (every decode step re-projects ``enc``
+    through every cross layer).  Token identity is asserted in-run; the
+    gate (``check_hetero``) is steady tok/s, cached vs recomputed,
+    best-of-3 same-process repeats so the ratio is noise-robust.
+
+    **SSM bytes-per-slot**: ``state_bytes_per_slot`` over a mamba cache at
+    two ``max_len`` geometries vs an equal-config transformer KV cache —
+    recurrent state is constant in sequence length (asserted in-run) while
+    the KV slab grows linearly; reported alongside a small served mamba
+    workload's steady tok/s.
+    """
+    from repro.serve import state_bytes_per_slot
+
+    if smoke:
+        wl = dict(n_requests=16, plen=8, max_new=32, spacing=2, slots=8,
+                  chunk=8, s_enc=768, d_model=128, repeats=3)
+    else:
+        wl = dict(n_requests=24, plen=16, max_new=64, spacing=2, slots=8,
+                  chunk=16, s_enc=1280, d_model=128, repeats=3)
+    import dataclasses as _dc
+
+    # long encoder + widened d_model on the smoke skeleton: the cached-vs-
+    # recomputed gap is the per-step K/V projection, O(S_enc * d^2) — at the
+    # smoke config's d=64 it hides under fixed per-tick cost
+    ecfg = _dc.replace(get_config("whisper-tiny-smoke"), enc_seq=wl["s_enc"],
+                       d_model=wl["d_model"], n_heads=8, n_kv_heads=8,
+                       d_ff=2 * wl["d_model"])
+    emodel = ecfg.build(dtype=jnp.float32, remat="off")
+    eparams = emodel.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    ctx_rng = jax.random.PRNGKey(seed + 1)
+    from repro.nn.module import eval_context
+
+    encs = []
+    for i in range(wl["n_requests"]):
+        ctx_rng, sub = jax.random.split(ctx_rng)
+        embeds = 0.1 * jax.random.normal(
+            sub, (1, wl["s_enc"], emodel.d_model), jnp.float32)
+        encs.append(emodel.encode(eparams, embeds, eval_context()))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, ecfg.vocab, size=wl["plen"],
+                                        dtype=np.int32),
+                    max_new=wl["max_new"], arrival=i * wl["spacing"],
+                    enc=encs[i])
+            for i in range(wl["n_requests"])]
+    max_len = wl["plen"] + wl["max_new"]
+    cached_eng = ServeEngine(model=emodel, params=eparams, max_len=max_len,
+                             batch_slots=wl["slots"])
+    recomp_eng = ServeEngine(model=emodel, params=eparams, max_len=max_len,
+                             batch_slots=wl["slots"], cross_attn_cache=False)
+    cached_p = cached_eng.scheduler(chunk_size=wl["chunk"])
+    recomp_p = recomp_eng.scheduler(chunk_size=wl["chunk"])
+    c_tok, r_tok = 0.0, 0.0
+    c_res = r_res = None
+    c_st = r_st = None
+    for _ in range(wl["repeats"]):   # interleaved best-of-N: noise-robust
+        c_res, c_st = cached_p.run(reqs, seed=seed)
+        r_res, r_st = recomp_p.run(reqs, seed=seed)
+        c_tok = max(c_tok, c_st.steady_tok_s)
+        r_tok = max(r_tok, r_st.steady_tok_s)
+    for r in reqs:    # acceptance bar: the cache is a FLOPs cut, not a
+        #               semantics change
+        assert c_res[r.rid].tokens == r_res[r.rid].tokens, (
+            f"cached/recomputed cross-attn token divergence on rid {r.rid}")
+    ratio = c_tok / max(r_tok, 1e-9)
+    xkv_bytes = state_bytes_per_slot(
+        emodel.init_cache(wl["slots"], max_len, per_slot_len=True,
+                          kv_dtype=jnp.float32), wl["slots"])
+    out = {"workload": {**wl, "max_len": max_len},
+           "encdec": {
+               "tokens_identical": True,
+               "cached_tok_s": round(c_tok, 2),
+               "recompute_tok_s": round(r_tok, 2),
+               "cross_cache_ratio": round(ratio, 3),
+               "cached_state_kinds": c_st.state_kinds,
+               "recompute_state_kinds": r_st.state_kinds,
+               "cross_bytes_per_slot": xkv_bytes["cross"],
+           }}
+    print(f"hetero/encdec identity ok | cached {c_tok:.1f} tok/s vs "
+          f"recomputed {r_tok:.1f} ({ratio:.2f}x, S_enc {wl['s_enc']}) | "
+          f"xkv {xkv_bytes['cross']} B/slot")
+
+    # --- SSM: constant bytes/slot + a served workload -----------------------
+    scfg = get_config("mamba-130m-smoke")
+    smodel = scfg.build(dtype=jnp.float32, remat="off")
+    sparams = smodel.init(jax.random.PRNGKey(seed))
+    tcfg = get_config("smollm-135m-smoke")
+    tmodel = tcfg.build(dtype=jnp.float32, remat="off")
+    lens = (max_len, 2 * max_len)
+    rec = [state_bytes_per_slot(
+        smodel.init_cache(wl["slots"], n, per_slot_len=True,
+                          kv_dtype=jnp.float32), wl["slots"]) for n in lens]
+    kvb = [state_bytes_per_slot(
+        tmodel.init_cache(wl["slots"], n, per_slot_len=True,
+                          kv_dtype=jnp.float32), wl["slots"]) for n in lens]
+    assert rec[0]["recurrent"] == rec[1]["recurrent"] > 0, (
+        "recurrent bytes/slot moved with max_len — the state is no longer "
+        "constant-size")
+    sreqs = [Request(rid=i,
+                     prompt=rng.integers(0, scfg.vocab, size=wl["plen"],
+                                         dtype=np.int32),
+                     max_new=wl["max_new"], arrival=i * wl["spacing"])
+             for i in range(wl["n_requests"])]
+    s_res, s_st = ServeEngine(
+        model=smodel, params=sparams, max_len=max_len,
+        batch_slots=wl["slots"]).scheduler(chunk_size=wl["chunk"]).run(
+            sreqs, seed=seed)
+    assert sorted(s_res) == sorted(r.rid for r in sreqs)
+    assert all(r.status == "ok" for r in s_res.values())
+    out["ssm"] = {
+        "state_kinds": s_st.state_kinds,
+        "tok_s": round(s_st.steady_tok_s, 2),
+        "recurrent_bytes_per_slot": rec[0]["recurrent"],
+        "recurrent_bytes_per_slot_2x_len": rec[1]["recurrent"],
+        "kv_bytes_per_slot": kvb[0]["kv"],
+        "kv_bytes_per_slot_2x_len": kvb[1]["kv"],
+        "kv_over_recurrent": round(kvb[0]["kv"]
+                                   / max(rec[0]["recurrent"], 1), 2),
+    }
+    print(f"hetero/ssm    {s_st.steady_tok_s:8.1f} tok/s "
+          f"({s_st.state_kinds}) | recurrent {rec[0]['recurrent']} B/slot "
+          f"constant across max_len {lens[0]}->{lens[1]} | transformer KV "
+          f"{kvb[0]['kv']} -> {kvb[1]['kv']} B/slot (linear)")
+    return out
+
+
 def bench_chaos(model, params, vocab, *, smoke=True, seed=0):
     """Chaos sweep: the hardening stack under an injected fault schedule.
 
@@ -759,6 +903,7 @@ def run(smoke: bool = True, seed: int = 0, out_path: str = None):
                                    seed=seed)
     results["chaos"] = bench_chaos(model, params, cfg.vocab, smoke=smoke,
                                    seed=seed)
+    results["hetero"] = bench_hetero(smoke=smoke, seed=seed)
 
     out_path = out_path or os.path.join(OUT_DIR, "serve_bench.json")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -931,6 +1076,38 @@ def check_chaos(results) -> bool:
     return ok
 
 
+def check_hetero(results, *, min_hetero_ratio: float = 1.15) -> bool:
+    """The heterogeneous-state gate: on the long-encoder EncDec workload,
+    per-slot cross-attention K/V caching (project once at admission) must
+    beat per-step recomputation on steady tok/s by >= ``min_hetero_ratio``.
+    Best-of-N same-process repeats on both sides keeps the ratio
+    noise-robust (box-level contention moves both runs together); token
+    identity of the cached vs recomputed streams and the constant-size
+    recurrent bytes/slot were already asserted inside the run."""
+    h = results.get("hetero", {})
+    if not h:
+        return True
+    e = h["encdec"]
+    ok = True
+    r = e["cross_cache_ratio"]
+    if r < min_hetero_ratio:
+        print(f"REGRESSION hetero/encdec: cross-attn cache speedup "
+              f"{r:.2f}x < {min_hetero_ratio:.2f}x (cached "
+              f"{e['cached_tok_s']:.1f} tok/s, recomputed "
+              f"{e['recompute_tok_s']:.1f})")
+        ok = False
+    else:
+        print(f"ok hetero/encdec: cross-attn cache {r:.2f}x faster "
+              f"({e['recompute_tok_s']:.1f} -> {e['cached_tok_s']:.1f} "
+              f"tok/s, S_enc {h['workload']['s_enc']})")
+    s = h["ssm"]
+    print(f"ok hetero/ssm: recurrent {s['recurrent_bytes_per_slot']} B/slot "
+          f"constant in max_len; transformer KV "
+          f"{s['kv_bytes_per_slot']} -> {s['kv_bytes_per_slot_2x_len']} "
+          f"B/slot ({s['kv_over_recurrent']:.1f}x recurrent at parity)")
+    return ok
+
+
 def check_baseline(results, baseline_path: str, tolerance: float,
                    *, strict: bool = False) -> bool:
     """Per variant x policy: compare steady tok/s and p99 latency (in
@@ -1010,6 +1187,10 @@ def main(argv=None):
     ap.add_argument("--min-burst-ttft-ratio", type=float, default=1.2,
                     help="burst gate floor: ragged multi-lane vs single-lane "
                          "mixed p99 TTFT on a one-tick arrival burst")
+    ap.add_argument("--min-hetero-ratio", type=float, default=1.15,
+                    help="heterogeneous-state gate floor: cached vs "
+                         "recomputed cross-attn K/V steady tok/s on the "
+                         "long-encoder EncDec workload")
     ap.add_argument("--chaos-only", action="store_true",
                     help="run only the fault-injection chaos sweep + its "
                          "gate (the CI chaos lane; cheap enough for "
@@ -1048,6 +1229,8 @@ def main(argv=None):
     ok = check_burst(results,
                      min_burst_ttft_ratio=args.min_burst_ttft_ratio) and ok
     ok = check_chaos(results) and ok
+    ok = check_hetero(results,
+                      min_hetero_ratio=args.min_hetero_ratio) and ok
     if args.baseline:
         ok = check_baseline(results, args.baseline, args.tolerance,
                             strict=args.strict_baseline) and ok

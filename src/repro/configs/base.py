@@ -156,7 +156,7 @@ class ArchConfig:
                 decoder=Stack(body=(dec_block,), n_periods=self.n_layers,
                               remat=remat, scan_layers=scan_layers),
                 max_target_len=SHAPES["decode_32k"].seq_len,
-                norm=self.norm, dtype=dtype)
+                norm=self.norm, enc_len=self.enc_seq, dtype=dtype)
         return CausalLM(
             vocab=self.vocab, vocab_padded=self.vocab_padded,
             d_model=self.d_model, stack=self._stack(dtype, remat, scan_layers),

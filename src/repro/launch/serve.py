@@ -119,6 +119,8 @@ def report(name: str, stats) -> None:
         extra += (f" | completion {s['completion_rate']:.2f} "
                   f"(rej {s['rejections']}, timeout {s['timeouts']}, "
                   f"cancel {s['cancellations']}, failed {s['failed']})")
+    if s.get("state_kinds"):
+        extra += f" | state {s['state_kinds']}"
     if s.get("audited_ticks"):
         extra += f" | audited {s['audited_ticks']} ticks clean"
     if s.get("fault_events"):

@@ -27,6 +27,32 @@ def _final_norm(norm: str, d_model: int):
         else RMSNorm(d_model, name="final_norm")
 
 
+def _set_xkv_slot(node, k, v, slot, length, *, layer_axis: bool):
+    """Write projected cross K/V rows into one slot of an ``xkv`` cache node.
+
+    ``k``/``v``: (1, S_row, Hkv, D) — or (L, 1, S_row, Hkv, D) when
+    ``layer_axis`` (scan-stacked projections from a vmap over layer params).
+    Sets ``xlen[slot] = length``; rows past ``S_row`` keep whatever they held
+    (consumers mask on ``xlen``).
+    """
+    z = jnp.int32(0)
+    if layer_axis:
+        xk = jax.lax.dynamic_update_slice(
+            node["xk"], k.astype(node["xk"].dtype), (z, slot, z, z, z))
+        xv = jax.lax.dynamic_update_slice(
+            node["xv"], v.astype(node["xv"].dtype), (z, slot, z, z, z))
+        upd = jnp.full((node["xlen"].shape[0], 1), length, jnp.int32)
+        xlen = jax.lax.dynamic_update_slice(node["xlen"], upd, (z, slot))
+    else:
+        xk = jax.lax.dynamic_update_slice(
+            node["xk"], k.astype(node["xk"].dtype), (slot, z, z, z))
+        xv = jax.lax.dynamic_update_slice(
+            node["xv"], v.astype(node["xv"].dtype), (slot, z, z, z))
+        xlen = jax.lax.dynamic_update_slice(
+            node["xlen"], jnp.asarray(length, jnp.int32).reshape(1), (slot,))
+    return {"xk": xk, "xv": xv, "xlen": xlen}
+
+
 @dataclasses.dataclass(frozen=True)
 class CausalLM:
     vocab: int                    # true vocabulary size
@@ -163,7 +189,12 @@ class CausalLM:
 
 @dataclasses.dataclass(frozen=True)
 class EncDecLM:
-    """Encoder-decoder (whisper-style). Encoder input is stub frame embeddings."""
+    """Encoder-decoder (whisper-style). Encoder input is stub frame embeddings.
+
+    ``enc_len`` (the config's encoder sequence ceiling) sizes the per-slot
+    cross-attention K/V cache for serving; ``None`` disables it and decode
+    re-projects ``enc`` every step (the pre-cache behavior).
+    """
 
     vocab: int
     vocab_padded: int
@@ -172,6 +203,7 @@ class EncDecLM:
     decoder: Stack
     max_target_len: int = 448
     norm: str = "ln"
+    enc_len: Optional[int] = None
     dtype: Any = jnp.float32
     name: str = "encdec"
 
@@ -194,11 +226,17 @@ class EncDecLM:
     def init_cache(self, batch: int, max_len: int, *, quantized_kv: bool = False,
                    kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
                    page_size: Optional[int] = None,
-                   num_pages: Optional[int] = None):
+                   num_pages: Optional[int] = None,
+                   cross_attn_cache: bool = True):
+        """Decoder caches; per-slot serving caches grow ``xkv`` cross-attn
+        nodes (sized by ``enc_len``) unless ``cross_attn_cache=False``.
+        """
+        enc_len = self.enc_len if (cross_attn_cache and per_slot_len) else None
         return self.decoder.init_cache(batch, max_len, quantized_kv=quantized_kv,
                                        kv_dtype=kv_dtype,
                                        per_slot_len=per_slot_len,
-                                       page_size=page_size, num_pages=num_pages)
+                                       page_size=page_size, num_pages=num_pages,
+                                       enc_len=enc_len)
 
     def encode(self, params: Params, embeds: jax.Array, ctx: Context) -> jax.Array:
         ctx = ctx.scope(self.name)
@@ -211,6 +249,57 @@ class EncDecLM:
         x = embeds.astype(self.dtype) + pe.astype(self.dtype)
         x, _ = self.encoder.apply(params["encoder"], x, ctx)
         return _final_norm(self.norm, self.d_model).apply(params["enc_norm"], x, ctx)
+
+    def write_cross_kv(self, params: Params, cache, enc_row: jax.Array,
+                       slot: jax.Array, ctx: Context):
+        """Project one slot's encoder rows into every cross block's xkv cache.
+
+        ``enc_row``: (1, S_row, D) — the slot's (already encoded) encoder
+        output, S_row <= ``enc_len``.  Runs each cross-attention layer's K/V
+        projection ONCE and scatters the rows into slot ``slot`` of the
+        per-layer ``xkv`` nodes (scan-stacked layers project under ``vmap``
+        over the stacked params), setting ``xlen[slot] = S_row``.  Decode
+        steps then read the cached rows (``Attention.apply(cross_cache=...)``)
+        instead of re-projecting ``enc`` — the admission-time half of the
+        cached-cross-attention trade.  Jitted by the scheduler with the cache
+        donated; layers without an ``xkv`` node pass through untouched.
+        """
+        ctx = ctx.scope(self.name)
+        sctx = ctx.scope(self.decoder.name)
+        slot = jnp.asarray(slot, jnp.int32)
+        length = jnp.int32(enc_row.shape[1])
+        dec = self.decoder
+        new_cache = dict(cache)
+        if dec.prelude and cache.get("prelude"):
+            pres = []
+            for i, blk in enumerate(dec.prelude):
+                c = cache["prelude"][i]
+                if blk.cross and isinstance(c, dict) and "xkv" in c:
+                    bctx = sctx.scope(f"pre{i}").scope(blk.name)
+                    k, v = blk._xattn().project_kv(
+                        params["decoder"]["prelude"][i]["xattn"], enc_row, bctx)
+                    c = dict(c, xkv=_set_xkv_slot(c["xkv"], k, v, slot, length,
+                                                  layer_axis=False))
+                pres.append(c)
+            new_cache["prelude"] = pres
+        stacked = dec.scan_layers and dec.n_periods > 1
+        bodies = []
+        for i, c in enumerate(cache["body"]):
+            blk = dec.body[i % len(dec.body)]
+            if not (blk.cross and isinstance(c, dict) and "xkv" in c):
+                bodies.append(c)
+                continue
+            p_x = params["decoder"]["body"][i]["xattn"]
+            bctx = sctx.scope(f"p{i}" if stacked else f"l{i}").scope(blk.name)
+            if stacked:
+                k, v = jax.vmap(
+                    lambda pl: blk._xattn().project_kv(pl, enc_row, bctx))(p_x)
+            else:
+                k, v = blk._xattn().project_kv(p_x, enc_row, bctx)
+            bodies.append(dict(c, xkv=_set_xkv_slot(c["xkv"], k, v, slot,
+                                                    length, layer_axis=stacked)))
+        new_cache["body"] = bodies
+        return new_cache
 
     def _decoder_len(self, cache):
         """Live length of the decoder's self-attention cache (first KV leaf).

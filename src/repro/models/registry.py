@@ -19,6 +19,7 @@ _MODULES = {
     "whisper-tiny": "repro.configs.whisper_tiny",
     "internvl2-2b": "repro.configs.internvl2_2b",
     "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "mamba-130m": "repro.configs.mamba_130m",
 }
 
 _cache: Dict[str, "ArchConfig"] = {}

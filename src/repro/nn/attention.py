@@ -611,6 +611,23 @@ def init_kv_cache(
     }
 
 
+def init_cross_cache(slots: int, enc_len: int, n_kv_heads: int, head_dim: int,
+                     *, dtype=jnp.float32) -> Dict[str, Any]:
+    """Per-slot cross-attention K/V cache for EncDec serving.
+
+    ``xk``/``xv`` hold each slot's encoder K/V rows — projected ONCE at
+    admission (``EncDecLM.write_cross_kv``) instead of re-projected from
+    ``enc`` every decode step — and ``xlen`` the live encoder length per slot
+    (0 = evicted/inert; consumers mask rows past it).  Deliberately NOT the
+    ``{"k", "len"}`` shape of a self-attention KV cache, so the scheduler's
+    cache-tree walkers (keyed on that pair) never mistake it for one: slot
+    length bookkeeping, paged growth and NaN audits all pass it by.
+    """
+    shape = (slots, enc_len, n_kv_heads, head_dim)
+    return {"xk": jnp.zeros(shape, dtype), "xv": jnp.zeros(shape, dtype),
+            "xlen": jnp.zeros((slots,), jnp.int32)}
+
+
 def _insert_rows(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
     """Write (B, S_new, H, D) into (B, S, H, D) at position ``idx`` on axis 1.
 
@@ -1010,6 +1027,24 @@ class Attention:
         projs = self._projs()
         return {nm: layer.init(k) for (nm, layer), k in zip(projs.items(), ks)}
 
+    def project_kv(self, params: Params, kv_in: jax.Array, ctx: Context,
+                   ) -> Tuple[jax.Array, jax.Array]:
+        """Project ``kv_in`` (B, S, d_model) to K/V exactly as ``apply`` would.
+
+        The cross-attention cache writer (``EncDecLM.write_cross_kv``) runs
+        this once per slot at admission; ``apply(cross_cache=...)`` then reads
+        the projected rows every decode step instead of re-projecting ``enc``.
+        Shares the module scope with ``apply`` so quant-stat paths line up.
+        """
+        ctx = ctx.scope(self.name)
+        projs = self._projs()
+        b, skv, _ = kv_in.shape
+        k = projs["wk"].apply(params["wk"], kv_in, ctx).reshape(
+            b, skv, self.n_kv_heads, self.head_dim)
+        v = projs["wv"].apply(params["wv"], kv_in, ctx).reshape(
+            b, skv, self.n_kv_heads, self.head_dim)
+        return k, v
+
     def apply(
         self,
         params: Params,
@@ -1019,16 +1054,53 @@ class Attention:
         positions: Optional[jax.Array] = None,
         cache: Optional[Dict[str, Any]] = None,
         kv_source: Optional[jax.Array] = None,  # cross-attention
+        cross_cache: Optional[Dict[str, Any]] = None,
         decode: bool = False,
         chunk: Optional[KVChunk] = None,
         ragged: Optional[RaggedBatch] = None,
     ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
         """Attend over ``x``; with ``cache`` set, run the decode / chunk /
         ragged serving path selected by the keyword arguments.
+
+        ``cross_cache`` is the cached-cross-attention read path: a dict
+        ``{"xk"/"xv": (slots, S_enc, Hkv, D), "xlen": (slots,)}`` whose rows
+        were projected once at admission.  Only the query/output projections
+        run — the per-step K/V re-projection of ``enc`` (and its RoPE-free
+        flash over S_enc) drops out, which is the EncDec serving FLOPs win.
         """
         ctx = ctx.scope(self.name)
         projs = self._projs()
         b, s, _ = x.shape
+
+        if cross_cache is not None:
+            q = projs["wq"].apply(params["wq"], x, ctx).reshape(
+                b, s, self.n_heads, self.head_dim)
+            q = ctx.constrain(q, "batch", None, "heads", None)
+            if chunk is not None:
+                # one slot's prompt chunk: flash over that slot's cached rows
+                # (flash_attention takes a scalar kv_len, so gather first)
+                slot = jnp.asarray(chunk.slot, jnp.int32)
+                kr = jax.lax.dynamic_index_in_dim(cross_cache["xk"], slot,
+                                                  axis=0, keepdims=True)
+                vr = jax.lax.dynamic_index_in_dim(cross_cache["xv"], slot,
+                                                  axis=0, keepdims=True)
+                xl = jax.lax.dynamic_index_in_dim(cross_cache["xlen"], slot,
+                                                  axis=0, keepdims=False)
+                out = flash_attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
+                                      jnp.int32(0), xl, False)
+            else:
+                # decode / tokens-as-batch: every batch row is one slot's
+                # single token; per-row xlen masks each slot's live S_enc
+                if s != 1:
+                    raise NotImplementedError(
+                        "cached cross-attention expects single-token rows "
+                        "(decode / tokens-as-batch) or a chunk")
+                out = decode_attention(q, cross_cache["xk"], cross_cache["xv"],
+                                       cross_cache["xlen"]).astype(q.dtype)
+            out = ctx.constrain(out, "batch", None, "heads", None)
+            y = projs["wo"].apply(params["wo"],
+                                  out.reshape(b, s, self._q_dim), ctx)
+            return y, None
 
         q = projs["wq"].apply(params["wq"], x, ctx).reshape(b, s, self.n_heads, self.head_dim)
         kv_in = x if kv_source is None else kv_source

@@ -83,13 +83,22 @@ class Mamba:
         return p
 
     def _conv1d(self, params, x, conv_state=None):
-        """Causal depthwise conv; returns (y, new_conv_state).
+        """Causal depthwise conv; returns (y, padded_input).
 
         ``conv_state`` is the trailing (K-1) inputs of the previous call
         (zeros for a fresh sequence), so prefill-with-state and single-token
-        decode share one code path.
+        decode share one code path.  The second return value is the full
+        left-padded input ``xp``; callers slice their own carry window out of
+        it (the trailing K-1 rows for dense decode, the K-1 rows ending at
+        the chunk's live length for per-slot chunked prefill).
         """
-        w = params["conv"]["kernel"].astype(self.dtype)   # (K, 1, di)
+        w = params["conv"]["kernel"]                      # (K, 1, di)
+        if hasattr(w, "dequantize"):
+            # weight-only int8 serving stores every >=2-dim kernel as a
+            # QTensor; the depthwise conv reads its weight directly (no
+            # Dense/wq_matmul path), so dequantize here
+            w = w.dequantize()
+        w = w.astype(self.dtype)
         b = params["conv"]["bias"].astype(self.dtype)
         k = self.d_conv
         if conv_state is not None:
@@ -99,7 +108,7 @@ class Mamba:
         y = jax.lax.conv_general_dilated(
             xp, w, (1,), "VALID", dimension_numbers=("NWC", "WIO", "NWC"),
             feature_group_count=self._di) + b
-        return y, (xp[:, -(k - 1):] if k > 1 else None)
+        return y, xp
 
     def _ssm_inputs(self, params, xc, ctx):
         """Data-dependent dt, B, C from the conv output."""
@@ -145,24 +154,43 @@ class Mamba:
 
     def apply(self, params: Params, x, ctx: Context,
               state: Optional[Dict[str, Any]] = None,
+              chunk=None,
               ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
-        """x: (B, S, D).  state: {'h': (B,di,N) f32, 'conv': (B,K-1,di)} or None."""
+        """x: (B, S, D).  state: {'h': (B,di,N) f32, 'conv': (B,K-1,di)} or None.
+
+        With ``chunk`` (a ``KVChunk(slot, start, length)``), x is one (1, S, D)
+        prompt chunk of a single serving slot: the slot's state row is
+        gathered, advanced over the chunk's live ``length`` positions (the pad
+        tail is masked to dt=0, an identity state update), and scattered back.
+        """
         ctx = ctx.scope(self.name)
         projs = self._projs()
         b, s, _ = x.shape
         di, n = self._di, self.d_state
+        k = self.d_conv
 
         xz = projs["in_proj"].apply(params["in_proj"], x, ctx)
         xin, z = jnp.split(xz, 2, axis=-1)
         xin = ctx.constrain(xin, "batch", None, "ff")
 
-        decode = state is not None
-        conv_state = state["conv"] if decode else None
-        xc, new_conv = self._conv1d(params, xin, conv_state)
+        decode = state is not None and chunk is None
+        if chunk is not None:
+            h0 = jax.lax.dynamic_index_in_dim(state["h"], chunk.slot, 0,
+                                              keepdims=True)
+            conv_state = jax.lax.dynamic_index_in_dim(state["conv"], chunk.slot,
+                                                      0, keepdims=True)
+        else:
+            h0 = state["h"] if decode else jnp.zeros((b, di, n), jnp.float32)
+            conv_state = state["conv"] if decode else None
+        xc, xp = self._conv1d(params, xin, conv_state)
         xc = jax.nn.silu(xc)
 
         dt, bmat, cmat = self._ssm_inputs(params, xc, ctx)
-        h0 = state["h"] if decode else jnp.zeros((b, di, n), jnp.float32)
+        if chunk is not None:
+            # dt=0 on the pad tail: da=exp(0)=1, dbx=0 — identity update, so
+            # the scanned state lands exactly at position `length`.
+            live = jnp.arange(s)[None, :, None] < chunk.length
+            dt = jnp.where(live, dt, 0.0)
 
         if decode and s == 1:
             A = -jnp.exp(params["ssm"]["a_log"])
@@ -177,7 +205,24 @@ class Mamba:
 
         y = (y.astype(self.dtype) * jax.nn.silu(z)).astype(self.dtype)
         out = projs["out_proj"].apply(params["out_proj"], y, ctx)
-        new_state = {"h": h, "conv": new_conv} if decode else None
+        if chunk is not None:
+            # conv carry: the K-1 inputs ending at the live length (xp is the
+            # conv-state-prepended input, so row `length` is the first carry row)
+            new_state = {"h": jax.lax.dynamic_update_slice_in_dim(
+                state["h"], h, chunk.slot, axis=0)}
+            if k > 1:
+                carry = jax.lax.dynamic_slice_in_dim(xp, chunk.length, k - 1,
+                                                     axis=1)
+                new_state["conv"] = jax.lax.dynamic_update_slice_in_dim(
+                    state["conv"], carry.astype(state["conv"].dtype),
+                    chunk.slot, axis=0)
+            else:
+                new_state["conv"] = state["conv"]
+        elif decode:
+            new_state = {"h": h,
+                         "conv": xp[:, -(k - 1):] if k > 1 else None}
+        else:
+            new_state = None
         return out, new_state
 
     def init_state(self, batch: int) -> Dict[str, Any]:
@@ -271,16 +316,31 @@ class RWKV6TimeMix:
 
     def apply(self, params: Params, x, ctx: Context,
               state: Optional[Dict[str, Any]] = None,
+              chunk=None,
               ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
-        """Run the WKV recurrence over ``x``; returns output and new state."""
+        """Run the WKV recurrence over ``x``; returns output and new state.
+
+        With ``chunk``, x is one (1, S, D) prompt chunk of a single serving
+        slot: the slot's (s, shift) rows are gathered, the pad tail is masked
+        to an identity update (decay 1, k 0), and the final state is scattered
+        back into the slot row.
+        """
         ctx = ctx.scope(self.name)
         projs = self._projs()
         b, s, d = x.shape
         h, n = self.n_heads, self.head_dim
 
-        last = state["shift"] if state is not None else jnp.zeros(
-            (b, 1, d), x.dtype)
-        prev = self._token_shift(x, last)
+        if chunk is not None:
+            last = jax.lax.dynamic_index_in_dim(state["shift"], chunk.slot, 0,
+                                                keepdims=True)
+            s0 = jax.lax.dynamic_index_in_dim(state["s"], chunk.slot, 0,
+                                              keepdims=True)
+        else:
+            last = state["shift"] if state is not None else jnp.zeros(
+                (b, 1, d), x.dtype)
+            s0 = state["s"] if state is not None else jnp.zeros(
+                (b, h, n, n), jnp.float32)
+        prev = self._token_shift(x, last.astype(x.dtype))
         mix = params["mix"]["x"]                                      # (5, D)
         xr, xk, xv, xg, xw = (x + mix[i] * (prev - x) for i in range(5))
 
@@ -295,11 +355,14 @@ class RWKV6TimeMix:
         w = jnp.exp(-jnp.exp(wraw)).reshape(b, s, h, n)               # (0,1)
 
         r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
-        s0 = state["s"] if state is not None else jnp.zeros(
-            (b, h, n, n), jnp.float32)
+        if chunk is not None:
+            # identity update on the pad tail: decay 1 keeps S, k=0 adds nothing
+            live = jnp.arange(s)[None, :, None, None] < chunk.length
+            w = jnp.where(live, w, 1.0)
+            k32 = jnp.where(live, k32, 0.0)
         s0 = ctx.constrain(s0, "batch", "heads", None, None)
 
-        if state is not None and s == 1:
+        if state is not None and chunk is None and s == 1:
             kv = k32[:, 0, :, :, None] * v32[:, 0, :, None, :]
             o = jnp.einsum("bhn,bhnm->bhm",
                            r32[:, 0], s0 + params["bonus_u"][None, :, :, None] * kv)
@@ -317,7 +380,15 @@ class RWKV6TimeMix:
         out = (out.astype(self.dtype) * g).astype(self.dtype)
         y = projs["wo"].apply(params["wo"], out, ctx)
         new_state = None
-        if state is not None:
+        if chunk is not None:
+            tail = jax.lax.dynamic_slice_in_dim(x, chunk.length - 1, 1, axis=1)
+            new_state = {
+                "s": jax.lax.dynamic_update_slice_in_dim(
+                    state["s"], sT, chunk.slot, axis=0),
+                "shift": jax.lax.dynamic_update_slice_in_dim(
+                    state["shift"], tail.astype(state["shift"].dtype),
+                    chunk.slot, axis=0)}
+        elif state is not None:
             new_state = {"s": sT, "shift": x[:, -1:, :]}
         return y, new_state
 
@@ -355,12 +426,21 @@ class RWKV6ChannelMix:
         return p
 
     def apply(self, params: Params, x, ctx: Context,
-              state: Optional[Dict[str, Any]] = None):
-        """Squared-ReLU channel mix; returns output and shifted-token state."""
+              state: Optional[Dict[str, Any]] = None,
+              chunk=None):
+        """Squared-ReLU channel mix; returns output and shifted-token state.
+
+        With ``chunk``, x is a single slot's (1, S, D) prompt chunk; the
+        shift carry is gathered from / scattered back to the slot row.
+        """
         ctx = ctx.scope(self.name)
         projs = self._projs()
-        last = state["shift"] if state is not None else jnp.zeros(
-            (x.shape[0], 1, x.shape[-1]), x.dtype)
+        if chunk is not None:
+            last = jax.lax.dynamic_index_in_dim(state["shift"], chunk.slot, 0,
+                                                keepdims=True).astype(x.dtype)
+        else:
+            last = state["shift"] if state is not None else jnp.zeros(
+                (x.shape[0], 1, x.shape[-1]), x.dtype)
         prev = jnp.concatenate([last, x[:, :-1]], axis=1)
         mix = params["mix"]["x"]
         xk = x + mix[0] * (prev - x)
@@ -371,5 +451,13 @@ class RWKV6ChannelMix:
         kv = projs["wv"].apply(params["wv"], k, ctx)
         r = jax.nn.sigmoid(projs["wr"].apply(params["wr"], xr, ctx))
         y = r * kv
-        new_state = {"shift": x[:, -1:, :]} if state is not None else None
+        if chunk is not None:
+            tail = jax.lax.dynamic_slice_in_dim(x, chunk.length - 1, 1, axis=1)
+            new_state = {"shift": jax.lax.dynamic_update_slice_in_dim(
+                state["shift"], tail.astype(state["shift"].dtype),
+                chunk.slot, axis=0)}
+        elif state is not None:
+            new_state = {"shift": x[:, -1:, :]}
+        else:
+            new_state = None
         return y, new_state

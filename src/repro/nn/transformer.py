@@ -139,8 +139,14 @@ class Block:
                    kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
                    page_size: Optional[int] = None,
                    num_pages: Optional[int] = None,
+                   enc_len: Optional[int] = None,
                    ) -> Dict[str, Any]:
-        """Per-layer decode cache (KV slab or paged pool, or SSM state)."""
+        """Per-layer decode cache: KV slab or paged pool, or per-slot
+        recurrent state (SSM/RWKV — batch rows ARE slot rows, so the same
+        state dict serves lockstep and continuous batching), plus a per-slot
+        cross-attention K/V cache when ``cross`` and ``enc_len`` are set.
+        """
+        c: Dict[str, Any] = {}
         if self.mixer == "attn":
             from repro.nn.attention import init_kv_cache, init_paged_kv_cache
 
@@ -150,29 +156,33 @@ class Block:
                         "paged KV caches are per-slot by construction: pass "
                         "per_slot_len=True alongside page_size/num_pages")
                 max_pages = -(-max_len // page_size)
-                return {"kv": init_paged_kv_cache(
+                c["kv"] = init_paged_kv_cache(
                     batch, max_pages, page_size,
                     num_pages if num_pages is not None else batch * max_pages,
                     self.n_kv_heads, self.head_dim, quantized=quantized_kv,
-                    dtype=kv_dtype)}
-            return {"kv": init_kv_cache(batch, max_len, self.n_kv_heads,
+                    dtype=kv_dtype)
+            else:
+                c["kv"] = init_kv_cache(batch, max_len, self.n_kv_heads,
                                         self.head_dim, quantized=quantized_kv,
                                         dtype=kv_dtype,
-                                        per_slot_len=per_slot_len)}
-        if per_slot_len:
-            raise NotImplementedError(
-                f"per-slot cache lifecycle needs an attention KV cache; "
-                f"{self.mixer!r} state has no length axis to mask")
-        if self.mixer == "mamba":
-            return {"ssm": Mamba(self.d_model, d_state=self.mamba_d_state,
-                                 dtype=self.dtype).init_state(batch)}
-        if self.mixer == "rwkv":
-            c = {"ssm": RWKV6TimeMix(self.d_model, head_dim=self.head_dim or 64,
-                                     dtype=self.dtype).init_state(batch)}
+                                        per_slot_len=per_slot_len)
+        elif self.mixer == "mamba":
+            c["ssm"] = Mamba(self.d_model, d_state=self.mamba_d_state,
+                             dtype=self.dtype).init_state(batch)
+        elif self.mixer == "rwkv":
+            c["ssm"] = RWKV6TimeMix(self.d_model, head_dim=self.head_dim or 64,
+                                    dtype=self.dtype).init_state(batch)
             if self.ffn == "rwkv":
-                c["cm"] = {"shift": jnp.zeros((batch, 1, self.d_model), self.dtype)}
-            return c
-        raise ValueError(self.mixer)
+                c["cm"] = {"shift": jnp.zeros((batch, 1, self.d_model),
+                                              self.dtype)}
+        else:
+            raise ValueError(self.mixer)
+        if self.cross and per_slot_len and enc_len is not None:
+            from repro.nn.attention import init_cross_cache
+
+            c["xkv"] = init_cross_cache(batch, enc_len, self.n_kv_heads,
+                                        self.head_dim, dtype=self.dtype)
+        return c
 
     # ---- forward ---------------------------------------------------------------
     def apply(self, params: Params, x, ctx: Context, *,
@@ -197,9 +207,15 @@ class Block:
             if kv is not None:
                 new_cache["kv"] = kv
         else:
+            if ragged is not None:
+                raise NotImplementedError(
+                    "the ragged step routes tokens by per-row cache "
+                    "positions; recurrent state has no position axis — "
+                    "serve recurrent mixers through the chunked path")
             mix_out, st = self._mixer().apply(
                 params["mixer"], h, ctx,
-                state=None if cache is None else cache["ssm"])
+                state=None if cache is None else cache["ssm"],
+                chunk=chunk)
             if st is not None:
                 new_cache["ssm"] = st
 
@@ -212,7 +228,27 @@ class Block:
         x = x + mix_out
         if self.cross:
             hx = self._norm("norm_x").apply(params["norm_x"], x, ctx)
-            if ragged is not None:
+            xkv = None if cache is None else cache.get("xkv")
+            if xkv is not None:
+                # cached cross-attention: read the per-slot projected rows;
+                # the cache itself is written at admission
+                # (EncDecLM.write_cross_kv) and passes through untouched —
+                # structure preservation under jit donation.
+                if ragged is not None:
+                    slots = jnp.clip(jnp.asarray(ragged.slots, jnp.int32),
+                                     0, None)
+                    sub = {"xk": jnp.take(xkv["xk"], slots, axis=0),
+                           "xv": jnp.take(xkv["xv"], slots, axis=0),
+                           "xlen": jnp.take(xkv["xlen"], slots, axis=0)}
+                    hx_t = jnp.swapaxes(hx, 0, 1)           # (T, 1, d)
+                    xo, _ = self._xattn().apply(params["xattn"], hx_t, ctx,
+                                                cross_cache=sub)
+                    xo = jnp.swapaxes(xo, 0, 1)             # (1, T, d)
+                else:
+                    xo, _ = self._xattn().apply(params["xattn"], hx, ctx,
+                                                cross_cache=xkv, chunk=chunk)
+                new_cache["xkv"] = xkv
+            elif ragged is not None:
                 # Ragged tick: hx is one (1, T, d) token batch mixing tokens
                 # from several decode slots, but cross-attention must pair
                 # each token with *its own* slot's encoder output.  Gather
@@ -233,7 +269,8 @@ class Block:
             h2 = self._norm("norm2").apply(params["norm2"], x, ctx)
             if self.ffn == "rwkv":
                 f_out, cm = ffn.apply(params["ffn"], h2, ctx,
-                                      state=None if cache is None else cache.get("cm"))
+                                      state=None if cache is None else cache.get("cm"),
+                                      chunk=chunk)
                 if cm is not None:
                     new_cache["cm"] = cm
             else:
@@ -284,11 +321,12 @@ class Stack:
                    kv_dtype=jnp.bfloat16, per_slot_len: bool = False,
                    page_size: Optional[int] = None,
                    num_pages: Optional[int] = None,
+                   enc_len: Optional[int] = None,
                    ) -> Dict[str, Any]:
         """Decode caches for all layers, stacked to match the scan layout."""
         kw = dict(quantized_kv=quantized_kv, kv_dtype=kv_dtype,
                   per_slot_len=per_slot_len, page_size=page_size,
-                  num_pages=num_pages)
+                  num_pages=num_pages, enc_len=enc_len)
         c: Dict[str, Any] = {}
         if self.prelude:
             c["prelude"] = [blk.init_cache(batch, max_len, **kw)
@@ -368,7 +406,13 @@ class Stack:
                     cache=None if c_list is None else c_list[pos],
                     enc=enc, positions=positions, decode=decode, chunk=chunk,
                     ragged=ragged)
-                ncs.append(nc if nc is not None else {})
+                nc = dict(nc) if nc is not None else {}
+                # xkv is read-only here (written only by write_cross_kv, at
+                # admission): returning it as a scan output would
+                # rematerialize the full per-layer encoder K/V every step —
+                # the original stacked buffers are reattached after the scan
+                nc.pop("xkv", None)
+                ncs.append(nc)
             return xc, (tuple(ncs), sctx.stats, sctx.losses)
 
         body_fn = _remat(period_body, self.remat)
@@ -377,5 +421,13 @@ class Stack:
         x, (ncs, stats, losses) = jax.lax.scan(body_fn, x, xs)
         ctx.merge_scanned(stats, losses)
         if new_cache is not None:
-            new_cache["body"] = list(ncs)
+            ncs = list(ncs)
+            for pos in range(len(ncs)):
+                cb = cache["body"][pos]
+                if isinstance(cb, dict) and "xkv" in cb:
+                    # identity passthrough outside the scan: under cache
+                    # donation this aliases, so the cached cross-attention
+                    # read path pays zero copy per step
+                    ncs[pos] = dict(ncs[pos], xkv=cb["xkv"])
+            new_cache["body"] = ncs
         return x, new_cache

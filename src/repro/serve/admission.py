@@ -1,0 +1,197 @@
+"""Admission planning and preemption policy, behind the slot-state interface.
+
+The scheduler's host-side admission logic — page sizing, prefix-match page
+plans, copy-on-write bookkeeping, the shared-write invariant, and the
+preemption victim policy — lives here, decoupled from the serving loop.
+Everything operates on host integers and the allocator/index objects
+(serve/paging.py); the *device* half of each decision (installing a page
+row, privatizing a page, evicting a slot) goes through the slot-state
+walkers (serve/slot_state.py) from the scheduler's jitted closures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.paging import PageAllocator, PrefixIndex
+
+
+@dataclasses.dataclass
+class PrefillLane:
+    """Chunked-admission state: one request currently being prefilled,
+    chunk by chunk, into its reserved (not yet live) slot."""
+
+    req: Any                     # serve.scheduler.Request
+    slot: int
+    prompt: np.ndarray           # (P,) int32
+    next_start: int = 0          # first row of the next chunk
+
+
+@dataclasses.dataclass
+class Preempted:
+    """Swap-policy parking state for one preempted request: everything the
+    scheduler needs to resume it bit-exactly once a slot and pages free up."""
+
+    slot: Any                    # the live-slot state, carried across
+    kept: List[int]              # shared prefix pages still resident (the
+    #                              refcount this request keeps holding)
+    n_priv: int                  # private pages swapped out (to re-alloc)
+    data: Any                    # host tree of the private pages' contents
+    #                              (None when n_priv == 0)
+    pad: int                     # padded page-vector length of ``data``
+    live_len: int                # cache len at preemption (rows written)
+    last_tok: Any                # (1, 1) device token feeding the next step
+
+
+def pick_preemption_victim(candidates: Sequence[Tuple[int, int, int, int]],
+                           counts: Dict[int, int], bound: int,
+                           ) -> Optional[int]:
+    """Choose which live slot to preempt; None when there are no candidates.
+
+    ``candidates``: (slot_index, rid, emitted, admitted_at) per live slot.
+    Starvation-free by an aging bound: a request already preempted
+    ``bound`` or more times is only chosen when *every* candidate is (so
+    re-admission is bounded — the victim eventually runs to completion).
+    Among eligible candidates the least decode progress goes first (least
+    recomputation/swap traffic wasted), most recent admission breaking ties
+    (FIFO fairness: the oldest admissions finish first).
+    """
+    if not candidates:
+        return None
+
+    def key(c):
+        j, rid, emitted, admitted_at = c
+        return (counts.get(rid, 0) >= bound, emitted, -admitted_at, j)
+
+    return min(candidates, key=key)[0]
+
+
+@dataclasses.dataclass
+class AdmissionPlanner:
+    """Host-side paged-admission sizing and page planning.
+
+    One instance per scheduler, parameterized by the engine's cache
+    geometry; stateless across calls (the allocator and prefix index carry
+    the state).  ``oversubscribe`` switches the reservation policy from
+    full-extent (decode can never exhaust the pool) to prompt-only (decode
+    pages grow lazily; exhaustion preempts a victim).
+    """
+
+    page_size: int
+    max_pages: int               # page-table width (per-slot ceiling)
+    chunk_size: int
+    oversubscribe: bool = False
+
+    def pages_needed(self, plen: int, max_new: int) -> int:
+        """Pages covering a request's full extent: the chunk-padded prompt
+        rows (the last chunk writes C rows even when partially valid) or
+        prompt+decode tokens, whichever is larger — what up-front admission
+        reserves so decode can never hit page exhaustion mid-request.
+        Under oversubscription this is still the request's *worst-case*
+        footprint (the pool-size feasibility floor), just no longer what
+        admission takes up front."""
+        c = self.chunk_size
+        extent = max(-(-plen // c) * c, plen + max_new)
+        return -(-extent // self.page_size)
+
+    def page_row(self, pages: List[int]) -> jax.Array:
+        """A (max_pages,) device row: allocated pool indices then -1s."""
+        row = np.full((self.max_pages,), -1, np.int32)
+        row[:len(pages)] = pages
+        return jnp.asarray(row)
+
+    def plan(self, r, plen: int, alloc: PageAllocator,
+             index: Optional[PrefixIndex],
+             keys: Optional[List[bytes]] = None):
+        """Page plan for admitting ``r``: match, share, allocate, COW — or
+        None when the pool cannot serve the fresh-page balance (page stall).
+
+        With sharing, the request maps the longest resident prefix chain
+        (full prompt pages only) and prefills from the divergence point
+        ``next_start``.  ``keys`` are the request's precomputed prompt
+        digests (``PrefixIndex.digests``) — the scheduler caches them per
+        request so a page-stalled admission retried every tick does not
+        re-hash its whole prompt every time.  A matched page the request
+        must still write — only the final prompt page, when the *whole*
+        prompt is resident and the last token is re-run for its first-token
+        logits — is privatized up front: a fresh page is allocated, the
+        shared page's rows are copied, and the table row points at the copy
+        (copy-on-write; eager because the write is certain).
+
+        Up-front mode reserves the full ``max(chunk_end, plen+max_new)``
+        extent so decode can never exhaust the pool; oversubscription
+        reserves only through ``chunk_end`` (the prompt's padded chunk
+        writes) and leaves decode pages to the lazy growth loop.  The page
+        count is clamped to the table width only when the overflow rows are
+        *droppable chunk padding* (the device scatter's OOB sentinel); a
+        plan that cannot cover the request's real rows raises — the silent
+        clamp that used to drop live KV here is the bug this replaces.
+
+        Returns ``(row_pages, copies, n_share, next_start)``: the table row
+        in logical order, the (src, dst) device copies to enqueue, how many
+        row entries are shared mappings, and the first prompt row to prefill.
+        """
+        ps = self.page_size
+        C = self.chunk_size
+        if index is None:
+            matched = []
+        elif keys is not None:
+            matched = index.match_keys(keys)
+        else:
+            matched = index.match(r.prompt)
+        s0 = len(matched) * ps
+        # always prefill >= 1 token: the last chunk's logits sample the
+        # request's first generated token
+        next_start = min(s0, plen - 1)
+        # pages covering the padded chunk writes (chunks write C rows from
+        # next_start, so the write extent shifts with the shared prefix)
+        # and, in up-front mode, the decode horizon
+        chunk_end = next_start + -(-(plen - next_start) // C) * C
+        if self.oversubscribe:
+            extent, required = chunk_end, plen
+        else:
+            extent, required = max(chunk_end, plen + r.max_new), \
+                plen + r.max_new
+        total = -(-extent // ps)
+        if total > self.max_pages:
+            # rows past the table edge are sentinel-dropped by the device
+            # scatter — benign for padded chunk tails, fatal for real rows
+            total = self.max_pages
+        if total * ps < required:
+            raise ValueError(
+                f"request {r.rid}: the page plan covers {total * ps} rows "
+                f"(page-table width {self.max_pages} pages x "
+                f"{ps}) but the request needs {required} "
+                f"(prompt {plen}{'' if self.oversubscribe else f' + max_new {r.max_new}'}) "
+                f"— the overflow rows would be silently dropped by the "
+                f"out-of-bounds sentinel and the request would decode "
+                f"garbage attention; raise max_len or shrink the request")
+        first_write_page = next_start // ps
+        n_share = min(len(matched), first_write_page)
+        copies_src = matched[n_share:]          # divergence page(s) to COW
+        fresh_n = total - n_share               # COW targets + fresh tail
+        got = alloc.alloc(fresh_n)
+        if got is None:
+            return None
+        alloc.share(matched[:n_share])
+        row_pages = matched[:n_share] + got
+        copies = list(zip(copies_src, got[:len(copies_src)]))
+        return row_pages, copies, n_share, next_start
+
+    def assert_private_write(self, pages: List[int], lo: int, hi: int,
+                             alloc: PageAllocator) -> None:
+        """The chunk-write invariant: rows [lo, hi) of a slot mapping
+        ``pages`` must touch only privately mapped (refcount <= 1) pages —
+        a write through a shared mapping would corrupt every other slot
+        reading that page.  COW at admission makes this structurally true;
+        this is the loud regression net in front of the device scatter."""
+        ps = self.page_size
+        for pi in range(lo // ps, min(-(-hi // ps), len(pages))):
+            rc = alloc.refcount(pages[pi])
+            assert rc <= 1, (
+                f"chunk write into shared page {pages[pi]} (refcount {rc}) "
+                f"— copy-on-write must privatize it first")

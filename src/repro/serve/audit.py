@@ -29,6 +29,19 @@ Invariants enforced:
 * **SwapArea byte conservation** — the area holds exactly the parked
   requests' page trees, and its byte counter matches their sizes.
 
+Per-adapter state invariants (serve/slot_state.py) ride the same per-tick
+hook:
+
+* **recurrent rows inert when dead** — a slot holding no request (and not
+  reserved by a prefill lane) must have exactly-zero recurrent state rows
+  (:func:`check_recurrent_rows`): admission starts every recurrence from
+  zeros, so any nonzero dead row means a masked step leaked state through
+  the ``merge_inactive`` barrier or an eviction skipped a row;
+* **cross-attention lens match the encoder** — a live/reserved EncDec
+  slot's cached ``xlen`` equals its request's encoder length, every other
+  slot's is 0 (:func:`check_cross_lens`): a mismatch means the slot decodes
+  against another request's (or a stale) encoder projection.
+
 The per-tick NaN/Inf *logit* sentinel is the scheduler's half (the jitted
 steps return per-row health flags under ``audit=True``); this module is
 the pool/state half.
@@ -36,11 +49,13 @@ the pool/state half.
 from __future__ import annotations
 
 from collections import Counter
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.serve.paging import PageAllocator, SwapArea, _tree_bytes
+from repro.serve.slot_state import (REC_BASE_RANK, find_cross_nodes,
+                                    find_recurrent_nodes)
 
 
 class AuditError(RuntimeError):
@@ -176,3 +191,59 @@ def check_swap(swap: Optional[SwapArea],
         raise AuditError(
             f"SwapArea bytes_held {swap.bytes_held} != parked page bytes "
             f"{expect} — byte-conservation breach")
+
+
+def check_recurrent_rows(cache, live: Set[int]) -> None:
+    """Dead slots' recurrent-state rows must be exactly zero.
+
+    ``live``: slot indices holding a request or reserved by a prefill lane
+    (their rows carry real state, partial for mid-prefill lanes).  Every
+    other slot's row in every recurrent leaf (Mamba ``h``/``conv``, RWKV
+    ``s``/``shift``) must be all-zeros — the inert state admission assumes.
+    A nonzero dead row means a masked batched step advanced it (a hole in
+    the ``merge_inactive`` barrier) or an eviction missed a leaf; either
+    way the *next* request admitted there would inherit foreign state and
+    decode plausible garbage.
+    """
+    for node in find_recurrent_nodes(cache):
+        for key, leaf in node.items():
+            if leaf is None:
+                continue
+            arr = np.asarray(leaf)
+            ax = 1 if arr.ndim == REC_BASE_RANK[key] + 1 else 0
+            for j in range(arr.shape[ax]):
+                if j in live:
+                    continue
+                row = np.take(arr, j, axis=ax)
+                if np.any(row != 0):
+                    raise AuditError(
+                        f"recurrent leaf {key!r}: dead slot {j} holds "
+                        f"nonzero state (max |x| = "
+                        f"{float(np.max(np.abs(row)))}) — leaked through "
+                        f"the inactive-merge barrier or missed by eviction")
+
+
+def check_cross_lens(cache, want: Mapping[int, int]) -> None:
+    """Cached cross-attention lengths vs the scheduler's live slots.
+
+    ``want``: slot index -> its request's encoder length, for every live
+    or lane-reserved slot; all other slots must read 0.  The cached
+    ``xk``/``xv`` rows are masked by ``xlen`` exactly like KV ``len``, so a
+    wrong value either truncates the encoder context or attends into
+    stale rows from a previous occupant.
+    """
+    for node in find_cross_nodes(cache):
+        xl = np.asarray(node["xlen"])
+        if xl.ndim == 2:        # scan-stacked (L, slots): layers agree
+            if np.any(xl != xl[0]):
+                raise AuditError(
+                    f"cross-attention xlen disagrees across stacked "
+                    f"layers: {xl.tolist()}")
+            xl = xl[0]
+        for j in range(xl.shape[0]):
+            exp = int(want.get(j, 0))
+            if int(xl[j]) != exp:
+                raise AuditError(
+                    f"slot {j}: cached cross-attention xlen {int(xl[j])} "
+                    f"!= expected {exp} ({'live' if j in want else 'dead'} "
+                    f"slot)")

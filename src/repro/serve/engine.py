@@ -154,7 +154,8 @@ def make_decode_step(model, *, mesh=None, axis_rules=None,
 def make_mixed_step(model, *, mesh=None, axis_rules=None,
                     policy: Optional[QuantPolicy] = None,
                     temperature: float = 0.0,
-                    with_health: bool = False) -> Callable:
+                    with_health: bool = False,
+                    merge: Optional[Callable] = None) -> Callable:
     """Chunked-prefill mixed step: one fused jitted computation that advances
     *all* live decode slots by one token AND prefills one fixed-size prompt
     chunk in place into a target slot's KV slice (nn KVChunk path — no
@@ -180,6 +181,15 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
     arg (a (B,) f32 vector added to the decode logits — see
     ``make_decode_step``) and returns
     ``(next, first, dec_healthy (B,), first_healthy (1,), cache')``.
+
+    ``merge`` (recurrent-state models): ``merge(old, new, active) -> cache``
+    runs BETWEEN the decode half and the chunk half, with the step's
+    trailing ``active`` arg ((B,) bool).  KV caches tolerate the decode
+    half's masked junk appends (rows >= ``len`` are dead), but a recurrence
+    has no position axis — one junk step through an inactive slot corrupts
+    its state, so the merge restores every inactive slot's recurrent rows
+    to their pre-step values before the chunk half reads/writes the lane
+    slot's row (serve/slot_state.py ``merge_inactive``).
     """
     from repro.nn.attention import KVChunk
 
@@ -188,13 +198,16 @@ def make_mixed_step(model, *, mesh=None, axis_rules=None,
                               with_health=with_health)
 
     def mixed(params, tok, cache, rng, chunk_tok, slot, start, length,
-              enc=None, poison=None):
+              enc=None, poison=None, active=None):
+        old = cache
         rng_d, rng_c = jax.random.split(rng)
         if with_health:
             nxt, dec_ok, cache = decode(params, tok, cache, rng_d, enc,
                                         poison)
         else:
             nxt, cache = decode(params, tok, cache, rng_d, enc)
+        if merge is not None and active is not None:
+            cache = merge(old, cache, active)
         ctx = Context(policy=policy or QuantPolicy.float32(), train=False,
                       mesh=mesh, axis_rules=axis_rules)
         kw = {}
@@ -314,6 +327,13 @@ class ServeEngine:
     paged_kv: bool = False
     page_size: Optional[int] = None
     kv_pool_pages: Optional[int] = None
+    # -- EncDec cross-attention cache (serving only) -------------------------
+    # True (default): per-slot caches carry projected cross-attention K/V
+    # rows ("xkv" nodes), written once at admission (EncDecLM.write_cross_kv)
+    # instead of re-projecting the encoder output every decode step.  False
+    # drops the nodes and recomputes from ``enc`` each tick — the bench
+    # baseline the cached path is gated against (benchmarks/serve_bench.py).
+    cross_attn_cache: bool = True
 
     def __post_init__(self):
         from repro.kernels import ops as _kops
@@ -367,6 +387,8 @@ class ServeEngine:
         kw = {}
         if self.paged_kv and per_slot:
             kw = dict(page_size=self.page_size, num_pages=self.kv_num_pages)
+        if hasattr(self.model, "encode"):
+            kw["cross_attn_cache"] = self.cross_attn_cache
         return self.model.init_cache(batch or self.batch_slots, self.max_len,
                                      quantized_kv=self.quantized_kv,
                                      kv_dtype=dt, per_slot_len=per_slot, **kw)

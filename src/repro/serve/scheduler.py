@@ -1,4 +1,5 @@
-"""Continuous-batching scheduler: per-slot KV lifecycle over jitted steps.
+"""Continuous-batching scheduler: per-slot decode-state lifecycle over
+jitted steps.
 
 The lockstep ``ServeEngine.generate()`` runs every slot for a fixed horizon —
 fine for tests, hopeless under traffic: a slot that finishes early idles until
@@ -58,7 +59,17 @@ the same jitted prefill/decode steps:
 * **EncDec serving** (chunked only): each request carries its encoder
   output (``Request.enc``); the scheduler keeps a per-slot encoder buffer
   and threads it through the jitted decode/mixed steps, so every slot
-  cross-attends its own context;
+  cross-attends its own context.  With ``engine.cross_attn_cache`` (the
+  default) admission additionally projects the request's cross-attention
+  K/V once into the slot's ``xkv`` rows (``EncDecLM.write_cross_kv``), so
+  decode steps skip the per-tick re-projection entirely;
+* **recurrent-state serving** (SSM/RWKV, chunked or one-shot): models whose
+  layers carry fixed-size recurrence rows instead of (or alongside) KV
+  serve through the same loop — the slot lifecycle is dispatched per state
+  *kind* by the slot-state walkers (serve/slot_state.py), and batched steps
+  run under an inactive-merge barrier so masked slots never advance their
+  recurrence (a junk token through a dead KV row is masked by ``len``; a
+  junk token through a recurrence corrupts it);
 * **termination**: per-slot EOS/length checks; finished slots are evicted
   with an O(1) ``reset_kv_slot`` and emit pad tokens under a sampling mask
   until readmission;
@@ -85,18 +96,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn.attention import (copy_kv_page, gather_pool_pages,
-                                reset_kv_slot, scatter_pool_pages,
-                                set_kv_slot_len, set_page_entry, set_page_row,
-                                write_kv_slot)
-from repro.serve.audit import (check_allocator, check_page_tables,
+from repro.core.policy import QuantPolicy
+from repro.nn.module import Context
+from repro.serve.admission import (AdmissionPlanner, Preempted, PrefillLane,
+                                   pick_preemption_victim)
+from repro.serve.audit import (check_allocator, check_cross_lens,
+                               check_page_tables, check_recurrent_rows,
                                check_swap)
 from repro.serve.engine import (make_decode_step, make_mixed_step,
                                 make_prefill_step, make_ragged_step,
                                 sample_tokens)
 from repro.serve.faults import FaultPlan
+from repro.serve.lanes import assemble_ragged_tick
 from repro.serve.paging import (PageAllocator, PrefixIndex, SwapArea,
                                 _tree_bytes)
+from repro.serve.slot_state import (  # noqa: F401  (re-exported compat names)
+    _find_paged_kv, _is_kv, _map_slot_op, _map_slot_op2, admit_cache_slot,
+    copy_cache_page, evict_cache_slot, gather_cache_pages, merge_inactive,
+    scatter_cache_pages, set_cache_page_entry, set_cache_page_row,
+    set_cache_slot_len, state_kinds)
+
+# Back-compat aliases: these used to be defined in this module.
+_Prefill = PrefillLane
+_Preempted = Preempted
 
 
 # --------------------------------------------------------------------------
@@ -226,6 +248,9 @@ class ServeStats:
     #                             an injected fault) -> recompute fallback
     fault_events: int = 0       # injected FaultPlan denials/poisons fired
     audited_ticks: int = 0      # ticks the invariant auditor ran clean
+    state_kinds: str = ""       # the served model's slot-state kinds, "+"-
+    #                             joined ("kv", "recurrent", "kv+recurrent",
+    #                             "kv+cross", ...) — serve/slot_state.py
 
     @property
     def completion_rate(self) -> float:
@@ -308,6 +333,7 @@ class ServeStats:
             "swap_refusals": self.swap_refusals,
             "fault_events": self.fault_events,
             "audited_ticks": self.audited_ticks,
+            "state_kinds": self.state_kinds,
         }
 
 
@@ -326,205 +352,10 @@ class _Slot:
     # request may land in a different slot index
 
 
-@dataclasses.dataclass
-class _Prefill:
-    """Chunked-admission state: the one request currently being prefilled,
-    chunk by chunk, into its reserved (not yet live) slot."""
-
-    req: Request
-    slot: int
-    prompt: np.ndarray           # (P,) int32
-    next_start: int = 0          # first row of the next chunk
-
-
-@dataclasses.dataclass
-class _Preempted:
-    """Swap-policy parking state for one preempted request: everything the
-    scheduler needs to resume it bit-exactly once a slot and pages free up."""
-
-    slot: _Slot                  # the live-slot state, carried across
-    kept: List[int]              # shared prefix pages still resident (the
-    #                              refcount this request keeps holding)
-    n_priv: int                  # private pages swapped out (to re-alloc)
-    data: Any                    # host tree of the private pages' contents
-    #                              (None when n_priv == 0)
-    pad: int                     # padded page-vector length of ``data``
-    live_len: int                # cache len at preemption (rows written)
-    last_tok: Any                # (1, 1) device token feeding the next step
-
-
-def pick_preemption_victim(candidates: Sequence[Tuple[int, int, int, int]],
-                           counts: Dict[int, int], bound: int,
-                           ) -> Optional[int]:
-    """Choose which live slot to preempt; None when there are no candidates.
-
-    ``candidates``: (slot_index, rid, emitted, admitted_at) per live slot.
-    Starvation-free by an aging bound: a request already preempted
-    ``bound`` or more times is only chosen when *every* candidate is (so
-    re-admission is bounded — the victim eventually runs to completion).
-    Among eligible candidates the least decode progress goes first (least
-    recomputation/swap traffic wasted), most recent admission breaking ties
-    (FIFO fairness: the oldest admissions finish first).
-    """
-    if not candidates:
-        return None
-
-    def key(c):
-        j, rid, emitted, admitted_at = c
-        return (counts.get(rid, 0) >= bound, emitted, -admitted_at, j)
-
-    return min(candidates, key=key)[0]
-
-
 # --------------------------------------------------------------------------
-# Whole-cache-tree slot ops (per-layer primitives live in nn/attention.py)
-# --------------------------------------------------------------------------
-
-def _is_kv(node) -> bool:
-    return isinstance(node, dict) and "k" in node and "len" in node
-
-
-def _find_paged_kv(cache):
-    """First per-layer KV dict carrying a page table, or None (dense cache).
-
-    Every layer shares one logical page assignment (the allocator hands out
-    pool indices per request, not per layer), so auditing a single layer's
-    table/lens audits them all."""
-    found: List[Any] = []
-
-    def rec(node):
-        if found:
-            return
-        if _is_kv(node):
-            if "page_table" in node:
-                found.append(node)
-            return
-        if isinstance(node, dict):
-            for v in node.values():
-                rec(v)
-        elif isinstance(node, (list, tuple)):
-            for v in node:
-                rec(v)
-
-    rec(cache)
-    return found[0] if found else None
-
-
-def _map_slot_op(cache, fn):
-    """Apply ``fn(kv_dict, layer_axis)`` to every per-layer KV dict in a
-    Stack cache tree ({'prelude': [...], 'body': [...]}, scan-stacked leaves
-    carry a leading layer dim)."""
-    def rec(node):
-        if _is_kv(node):
-            return fn(node, jnp.ndim(node["len"]) == 2)
-        if isinstance(node, dict):
-            return {k: rec(v) for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(rec(v) for v in node)
-        return node
-    return rec(cache)
-
-
-def _map_slot_op2(big, small, fn):
-    """Same walk over two structurally identical cache trees."""
-    def rec(b, s):
-        if _is_kv(b):
-            return fn(b, s, jnp.ndim(b["len"]) == 2)
-        if isinstance(b, dict):
-            return {k: rec(v, s[k]) for k, v in b.items()}
-        if isinstance(b, (list, tuple)):
-            return type(b)(rec(bb, ss) for bb, ss in zip(b, s))
-        return b
-    return rec(big, small)
-
-
-def admit_cache_slot(big_cache, small_cache, slot, length):
-    """Write a batch-1 prefilled cache into ``slot`` of the per-slot cache."""
-    return _map_slot_op2(
-        big_cache, small_cache,
-        lambda b, s, la: write_kv_slot(b, s, slot, length, layer_axis=la))
-
-
-def evict_cache_slot(cache, slot):
-    """O(1) per-slot eviction: live length to zero, rows left for overwrite.
-
-    Paged caches additionally unmap the slot's page-table row; the host-side
-    allocator reclaims the pages (Scheduler.run's ``finish``).
-    """
-    return _map_slot_op(
-        cache, lambda kv, la: reset_kv_slot(kv, slot, layer_axis=la))
-
-
-def set_cache_page_row(cache, slot, row):
-    """Install a page-table row for ``slot`` in every layer of a paged cache
-    tree (all layers share one logical page assignment — the allocator hands
-    out pool indices once per request, not per layer)."""
-    return _map_slot_op(
-        cache, lambda kv, la: set_page_row(kv, slot, row, layer_axis=la))
-
-
-def copy_cache_page(cache, src, dst):
-    """Copy pool page ``src`` onto ``dst`` in every layer of a paged cache
-    tree — the device half of copy-on-write (the host half is the refcount
-    bookkeeping in serve/paging.py)."""
-    return _map_slot_op(
-        cache, lambda kv, la: copy_kv_page(kv, src, dst, layer_axis=la))
-
-
-def set_cache_page_entry(cache, slot, idx, page):
-    """``page_table[slot, idx] = page`` in every layer of a paged cache tree
-    — the lazy decode-growth append (oversubscription)."""
-    return _map_slot_op(
-        cache, lambda kv, la: set_page_entry(kv, slot, idx, page,
-                                             layer_axis=la))
-
-
-def gather_cache_pages(cache, pages):
-    """Swap-out gather: read pool pages ``pages`` out of every layer's K/V
-    pools.  Returns a list of ``{"k", "v"}`` page stacks in the cache tree's
-    deterministic traversal order (``scatter_cache_pages`` consumes the same
-    order) — the cache itself is not modified."""
-    out = []
-
-    def op(kv, la):
-        out.append(gather_pool_pages(kv, pages, layer_axis=la))
-        return kv
-
-    _map_slot_op(cache, op)
-    return out
-
-
-def scatter_cache_pages(cache, pages, data):
-    """Swap-in restore: write ``gather_cache_pages`` data back into pool
-    pages ``pages`` of every layer (same traversal order)."""
-    it = iter(data)
-    return _map_slot_op(
-        cache, lambda kv, la: scatter_pool_pages(kv, pages, next(it),
-                                                 layer_axis=la))
-
-
-def set_cache_slot_len(cache, slot, length):
-    """Set ``len[slot] = length`` in every layer of a per-slot cache tree.
-
-    Prefix-sharing admission starts a slot at its shared-prefix length so
-    the decode half's per-tick junk append for the still-prefilling slot
-    lands in the slot's private divergence region — at len 0 it would write
-    through the shared prefix mapping (see Scheduler admission).
-    """
-    def op(kv, la):
-        ln = kv["len"]
-        if la:
-            upd = jnp.full((ln.shape[0], 1), length, jnp.int32)
-            ln = jax.lax.dynamic_update_slice_in_dim(ln, upd, slot, axis=1)
-        else:
-            ln = set_kv_slot_len(ln, slot, length)
-        return dict(kv, len=ln)
-
-    return _map_slot_op(cache, op)
-
-
-# --------------------------------------------------------------------------
-# The scheduler
+# The scheduler.  Slot-state walkers live in serve/slot_state.py; admission
+# planning and the preemption policy in serve/admission.py; ragged lane
+# assembly in serve/lanes.py.
 # --------------------------------------------------------------------------
 
 class Scheduler:
@@ -637,6 +468,16 @@ class Scheduler:
         self.audit = bool(audit)
         self._cancel_box: set = set()
         self.encdec = hasattr(engine.model, "encode")
+        # Which per-slot state kinds this model serves with — the slot-state
+        # walkers dispatch per cache node, so the loop below never branches
+        # on architecture; these flags only gate policy validation, the
+        # inactive-merge barrier, and the per-kind audit hooks.
+        kinds = list(state_kinds(engine.model))
+        if "cross" in kinds and not getattr(engine, "cross_attn_cache", True):
+            kinds.remove("cross")   # engine recomputes from enc every step
+        self.state_kinds: Tuple[str, ...] = tuple(kinds)
+        self._has_recurrent = "recurrent" in kinds
+        self._cross_cached = "cross" in kinds
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if reject_policy not in ("reject", "shed_oldest"):
@@ -668,11 +509,41 @@ class Scheduler:
                 "pass chunk_size=... (one-shot admission block-copies a "
                 "dense scratch cache, which has no paged analog)")
         if self.encdec and chunk_size is None:
-            raise NotImplementedError(
-                "EncDec serving requires chunked admission (chunk_size=...): "
-                "the one-shot slot prefill does not thread the request's "
-                "encoder output through its jitted step, so it would decode "
-                "without encoder context")
+            raise ValueError(
+                "EncDec serving requires chunked admission: pass "
+                "chunk_size=... (e.g. Scheduler(engine, chunk_size=32)) — "
+                "the one-shot slot prefill block-copies a scratch cache "
+                "without the request's encoder output or its cross-attention "
+                "K/V, so the slot would decode without encoder context")
+        if self._has_recurrent:
+            if self.ragged:
+                raise ValueError(
+                    "ragged=True cannot serve recurrent-state (SSM/RWKV) "
+                    "layers: the ragged forward interleaves many slots' "
+                    "tokens in one flattened batch, and a recurrence must "
+                    "consume its slot's tokens in order — use the mixed "
+                    "step (chunk_size=... without ragged)")
+            if self.paged and "kv" not in kinds:
+                raise ValueError(
+                    "paged KV (engine.paged_kv) on a pure recurrent-state "
+                    "model: there is no KV cache to page — recurrent state "
+                    "is a fixed-size per-slot row (drop paged_kv; its bytes "
+                    "do not grow with sequence length)")
+            if self.oversubscribe and preempt_policy == "swap":
+                raise ValueError(
+                    "preempt_policy='swap' cannot serve recurrent-state "
+                    "layers: swap parks only KV pool pages, the victim's "
+                    "recurrence rows would be zeroed by eviction and "
+                    "resume would continue from corrupt state — use "
+                    "preempt_policy='recompute' (re-prefill rebuilds the "
+                    "recurrence exactly)")
+            if prompt_bucket is not None and chunk_size is None:
+                raise ValueError(
+                    "prompt_bucket cannot serve recurrent-state layers "
+                    "under one-shot admission: bucket padding would run "
+                    "pad tokens through the recurrence and corrupt the "
+                    "admitted state (KV slots mask on len; a recurrence "
+                    "cannot) — drop prompt_bucket or use chunk_size=...")
         if token_budget is not None:
             if chunk_size is None:
                 raise ValueError("token_budget requires chunked admission "
@@ -703,13 +574,24 @@ class Scheduler:
             temperature=temperature, with_health=health)
         pad = jnp.int32(self.pad_id)
 
+        # Recurrent-state models: restore every inactive slot's recurrence
+        # rows after the batched step (serve/slot_state.py merge_inactive) —
+        # reading the donated input after the step is trace-safe (donation
+        # is an aliasing hint, XLA copies where the value is still needed).
+        merge = merge_inactive if self._has_recurrent else None
+
         def masked_decode(params, tok, cache, rng, active, enc=None,
                           poison=None):
+            old = cache
             if health:
                 nxt, ok, cache = decode(params, tok, cache, rng, enc,
                                         poison)
+                if merge is not None:
+                    cache = merge(old, cache, active)
                 return jnp.where(active[:, None], nxt, pad), ok, cache
             nxt, cache = decode(params, tok, cache, rng, enc)
+            if merge is not None:
+                cache = merge(old, cache, active)
             return jnp.where(active[:, None], nxt, pad), cache
 
         def set_tok(tok, first, slot):
@@ -776,6 +658,22 @@ class Scheduler:
 
             self._set_enc = jax.jit(set_enc, donate_argnums=(0,))
             self._jits.append(self._set_enc)
+        if self._cross_cached:
+            # project + install one request's cross-attention K/V rows into
+            # its slot, once, at admission/resume (EncDecLM.write_cross_kv)
+            def write_xkv(params, cache, row, slot):
+                ctx = Context(policy=QuantPolicy.float32(), train=False,
+                              mesh=engine.mesh, axis_rules=engine.axis_rules)
+                return model.write_cross_kv(params, cache, row, slot, ctx)
+
+            self._write_xkv = jax.jit(write_xkv, donate_argnums=(1,))
+            self._jits.append(self._write_xkv)
+        # Host-side admission planning (paged sizing, prefix plans, COW) —
+        # serve/admission.py; only chunked admission pages/plans anything.
+        self._admission = AdmissionPlanner(
+            page_size=engine.page_size, max_pages=engine.kv_max_pages,
+            chunk_size=chunk_size, oversubscribe=self.oversubscribe) \
+            if chunk_size is not None else None
 
         if chunk_size is None:
             # one-shot admission: batch-1 prefill + write_kv_slot copy
@@ -830,21 +728,24 @@ class Scheduler:
                                           else (2,))
             self._jits.append(self._masked_ragged)
         else:
-            # chunked admission: one fused mixed step, one compile shape
+            # chunked admission: one fused mixed step, one compile shape.
+            # merge runs between the decode and chunk halves so the lane
+            # slot's recurrence enters its chunk un-corrupted.
             mixed = make_mixed_step(
                 model, mesh=engine.mesh, axis_rules=engine.axis_rules,
-                temperature=temperature, with_health=health)
+                temperature=temperature, with_health=health, merge=merge)
 
             def masked_mixed(params, tok, cache, rng, active, chunk_tok,
                              slot, start, length, enc=None, poison=None):
                 if health:
                     nxt, first, dec_ok, first_ok, cache = mixed(
                         params, tok, cache, rng, chunk_tok, slot, start,
-                        length, enc, poison)
+                        length, enc, poison, active)
                     return (jnp.where(active[:, None], nxt, pad), first,
                             dec_ok, first_ok, cache)
                 nxt, first, cache = mixed(params, tok, cache, rng, chunk_tok,
-                                          slot, start, length, enc)
+                                          slot, start, length, enc, None,
+                                          active)
                 return jnp.where(active[:, None], nxt, pad), first, cache
 
             self._masked_mixed = jax.jit(masked_mixed,
@@ -868,116 +769,26 @@ class Scheduler:
         unknown or already-finished rid is a no-op."""
         self._cancel_box.add(int(rid))
 
-    # ---- paged admission sizing -------------------------------------------
+    # ---- paged admission sizing (delegates to serve/admission.py) ---------
     def _pages_needed(self, plen: int, max_new: int) -> int:
-        """Pages covering a request's full extent: the chunk-padded prompt
-        rows (the last chunk writes C rows even when partially valid) or
-        prompt+decode tokens, whichever is larger — what up-front admission
-        reserves so decode can never hit page exhaustion mid-request.
-        Under oversubscription this is still the request's *worst-case*
-        footprint (the pool-size feasibility floor), just no longer what
-        admission takes up front."""
-        c = self.chunk_size
-        extent = max(-(-plen // c) * c, plen + max_new)
-        return -(-extent // self.engine.page_size)
+        """A request's worst-case page footprint (AdmissionPlanner)."""
+        return self._admission.pages_needed(plen, max_new)
 
     def _page_row(self, pages: List[int]) -> jax.Array:
         """A (max_pages,) device row: allocated pool indices then -1s."""
-        row = np.full((self.engine.kv_max_pages,), -1, np.int32)
-        row[:len(pages)] = pages
-        return jnp.asarray(row)
+        return self._admission.page_row(pages)
 
     def _plan_admission(self, r: Request, plen: int, alloc: PageAllocator,
                         index: Optional[PrefixIndex],
                         keys: Optional[List[bytes]] = None):
-        """Page plan for admitting ``r``: match, share, allocate, COW — or
-        None when the pool cannot serve the fresh-page balance (page stall).
-
-        With sharing, the request maps the longest resident prefix chain
-        (full prompt pages only) and prefills from the divergence point
-        ``next_start``.  ``keys`` are the request's precomputed prompt
-        digests (``PrefixIndex.digests``) — the scheduler caches them per
-        request so a page-stalled admission retried every tick does not
-        re-hash its whole prompt every time.  A matched page the request
-        must still write — only the final prompt page, when the *whole*
-        prompt is resident and the last token is re-run for its first-token
-        logits — is privatized up front: a fresh page is allocated, the
-        shared page's rows are copied, and the table row points at the copy
-        (copy-on-write; eager because the write is certain).
-
-        Up-front mode reserves the full ``max(chunk_end, plen+max_new)``
-        extent so decode can never exhaust the pool; oversubscription
-        reserves only through ``chunk_end`` (the prompt's padded chunk
-        writes) and leaves decode pages to the lazy growth loop.  The page
-        count is clamped to the table width only when the overflow rows are
-        *droppable chunk padding* (the device scatter's OOB sentinel); a
-        plan that cannot cover the request's real rows raises — the silent
-        clamp that used to drop live KV here is the bug this replaces.
-
-        Returns ``(row_pages, copies, n_share, next_start)``: the table row
-        in logical order, the (src, dst) device copies to enqueue, how many
-        row entries are shared mappings, and the first prompt row to prefill.
-        """
-        ps = self.engine.page_size
-        C = self.chunk_size
-        if index is None:
-            matched = []
-        elif keys is not None:
-            matched = index.match_keys(keys)
-        else:
-            matched = index.match(r.prompt)
-        s0 = len(matched) * ps
-        # always prefill >= 1 token: the last chunk's logits sample the
-        # request's first generated token
-        next_start = min(s0, plen - 1)
-        # pages covering the padded chunk writes (chunks write C rows from
-        # next_start, so the write extent shifts with the shared prefix)
-        # and, in up-front mode, the decode horizon
-        chunk_end = next_start + -(-(plen - next_start) // C) * C
-        if self.oversubscribe:
-            extent, required = chunk_end, plen
-        else:
-            extent, required = max(chunk_end, plen + r.max_new), \
-                plen + r.max_new
-        total = -(-extent // ps)
-        if total > self.engine.kv_max_pages:
-            # rows past the table edge are sentinel-dropped by the device
-            # scatter — benign for padded chunk tails, fatal for real rows
-            total = self.engine.kv_max_pages
-        if total * ps < required:
-            raise ValueError(
-                f"request {r.rid}: the page plan covers {total * ps} rows "
-                f"(page-table width {self.engine.kv_max_pages} pages x "
-                f"{ps}) but the request needs {required} "
-                f"(prompt {plen}{'' if self.oversubscribe else f' + max_new {r.max_new}'}) "
-                f"— the overflow rows would be silently dropped by the "
-                f"out-of-bounds sentinel and the request would decode "
-                f"garbage attention; raise max_len or shrink the request")
-        first_write_page = next_start // ps
-        n_share = min(len(matched), first_write_page)
-        copies_src = matched[n_share:]          # divergence page(s) to COW
-        fresh_n = total - n_share               # COW targets + fresh tail
-        got = alloc.alloc(fresh_n)
-        if got is None:
-            return None
-        alloc.share(matched[:n_share])
-        row_pages = matched[:n_share] + got
-        copies = list(zip(copies_src, got[:len(copies_src)]))
-        return row_pages, copies, n_share, next_start
+        """Page plan for admitting ``r`` (AdmissionPlanner.plan), or None
+        on a page stall."""
+        return self._admission.plan(r, plen, alloc, index, keys=keys)
 
     def _assert_private_write(self, pages: List[int], lo: int, hi: int,
                               alloc: PageAllocator) -> None:
-        """The chunk-write invariant: rows [lo, hi) of a slot mapping
-        ``pages`` must touch only privately mapped (refcount <= 1) pages —
-        a write through a shared mapping would corrupt every other slot
-        reading that page.  COW at admission makes this structurally true;
-        this is the loud regression net in front of the device scatter."""
-        ps = self.engine.page_size
-        for pi in range(lo // ps, min(-(-hi // ps), len(pages))):
-            rc = alloc.refcount(pages[pi])
-            assert rc <= 1, (
-                f"chunk write into shared page {pages[pi]} (refcount {rc}) "
-                f"— copy-on-write must privatize it first")
+        """Shared-mapping write invariant (AdmissionPlanner)."""
+        self._admission.assert_private_write(pages, lo, hi, alloc)
 
     # ---- prompt bucketing --------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -1017,6 +828,8 @@ class Scheduler:
             if self.audit else None
         if enc is not None:
             enc = self._set_enc(jnp.zeros_like(enc), enc[:1], slot0)
+            if self._cross_cached:
+                cache = self._write_xkv(eng.params, cache, enc[:1], slot0)
         if self.chunk_size is not None:
             if self.paged:
                 # throwaway page assignment for slot 0 (no allocator: warmup
@@ -1084,6 +897,7 @@ class Scheduler:
     def run(self, requests: Sequence[Request], *, seed: int = 0,
             warmup: bool = True, time_ticks: bool = False,
             cancels: Optional[Dict[int, int]] = None,
+            preempts: Optional[Dict[int, int]] = None,
             fault_plan: Optional[FaultPlan] = None,
             on_tick=None,
             ) -> Tuple[Dict[int, RequestResult], ServeStats]:
@@ -1114,6 +928,17 @@ class Scheduler:
         called at the top of every tick (the cancellation tests drive
         :meth:`cancel` from it).
 
+        ``preempts={rid: tick}`` forces a preemption of ``rid`` at the
+        first tick >= ``tick`` where it holds a live slot (the entry stays
+        pending until then, and is dropped if the request reaches a
+        terminal status first).  The configured ``preempt_policy`` applies;
+        on non-paged engines (dense KV, recurrent state) the preemption is
+        always recompute — tokens so far are banked and the request
+        re-queues as a continuation, so greedy token streams are unchanged.
+        This is the preemption drill's deterministic trigger: it exercises
+        the evict → carry → re-prefill lifecycle without needing a pool to
+        exhaust.
+
         Without an ``eos_id`` termination is length-only, so scheduling never
         needs token *values* mid-flight: the loop runs fully async (device
         tokens harvested once at the end), keeping the dispatch pipeline as
@@ -1129,6 +954,8 @@ class Scheduler:
         nslots = eng.batch_slots
         C = self.chunk_size
         stats = ServeStats()
+        stats.state_kinds = "+".join(self.state_kinds)
+        preempts = {int(k): int(v) for k, v in (preempts or {}).items()}
         if fault_plan is not None:
             if fault_plan.nan and not self.audit:
                 raise ValueError(
@@ -1224,6 +1051,15 @@ class Scheduler:
                     f"all requests must share one encoder shape per run "
                     f"(one jitted step signature), got {sorted(shapes)}")
             (one,) = shapes
+            if self._cross_cached:
+                el = int(getattr(eng.model, "enc_len"))
+                if one[1] > el:
+                    raise ValueError(
+                        f"encoder output length {one[1]} exceeds the "
+                        f"model's cross-attention cache capacity "
+                        f"enc_len={el}: the cached xk/xv rows would "
+                        f"truncate the encoder context — raise enc_len or "
+                        f"shorten the encoder output")
             # keep the encoder's own dtype: an f32 buffer would silently
             # promote a bf16 model's cross-attention (and its residual
             # stream) and diverge from the generate() baseline
@@ -1460,7 +1296,9 @@ class Scheduler:
             rid = slot.req.rid
             stats.preemptions += 1
             stats.preempted_rids[rid] = stats.preempted_rids.get(rid, 0) + 1
-            pages = slot_pages.pop(j)
+            # non-paged engines (dense KV, recurrent state) have no pages to
+            # park or free — eviction + recompute covers every state kind
+            pages = slot_pages.pop(j) if alloc is not None else None
             park = swap is not None
             if park and fault is not None and fault.deny_swap(t):
                 # injected host-memory refusal: degrade to recompute
@@ -1514,9 +1352,10 @@ class Scheduler:
                 plen_of[rid] = int(cont_prompt.shape[0])
                 prompt_keys.pop(rid, None)     # digests are stale now
                 cache = self._evict(cache, jnp.int32(j))
-                released = alloc.free(pages)
-                if index is not None:
-                    index.drop_pages(released)
+                if alloc is not None:
+                    released = alloc.free(pages)
+                    if index is not None:
+                        index.drop_pages(released)
                 requeue(dataclasses.replace(slot.req, prompt=cont_prompt,
                                             max_new=remaining))
             slots[j] = None
@@ -1555,6 +1394,9 @@ class Scheduler:
                 if enc_buf is not None:
                     enc_buf = self._set_enc(enc_buf, enc_of[rid],
                                             jnp.int32(j))
+                    if self._cross_cached:
+                        cache = self._write_xkv(eng.params, cache,
+                                                enc_of[rid], jnp.int32(j))
                 if index is not None and rid in prompt_keys:
                     index.insert_keys(prompt_keys[rid],
                                       row[:p.slot.plen // eng.page_size])
@@ -1663,6 +1505,23 @@ class Scheduler:
                             cancel_pending.discard(slots[j].req.rid)
                             finish(j, slots[j], False, status=st)
 
+            # -- forced preemption drills (``preempts={rid: tick}``) --------
+            # fire on the first tick >= the requested tick where the rid is
+            # live; entries for already-finished rids are dropped
+            if preempts:
+                for rid_, tk_ in list(preempts.items()):
+                    if tk_ > t:
+                        continue
+                    if rid_ in results:
+                        preempts.pop(rid_)
+                        continue
+                    for j in range(nslots):
+                        if slots[j] is not None \
+                                and slots[j].req.rid == rid_:
+                            preempt(j)
+                            preempts.pop(rid_)
+                            break
+
             # Oversubscription housekeeping runs before admission: parked
             # requests get first claim on freed pages (no starvation behind
             # a stream of fresh admissions), then live slots grow into
@@ -1758,6 +1617,13 @@ class Scheduler:
                     if enc_buf is not None:
                         enc_buf = self._set_enc(
                             enc_buf, enc_of[r.rid], jnp.int32(j))
+                        if self._cross_cached:
+                            # project + cache the encoder K/V once, at
+                            # admission — decode steps read the cached rows
+                            # instead of re-projecting ``enc`` every tick
+                            cache = self._write_xkv(
+                                eng.params, cache, enc_of[r.rid],
+                                jnp.int32(j))
                     lanes.append(_Prefill(
                         req=r, slot=j,
                         prompt=np.asarray(r.prompt, np.int32).reshape(-1),
@@ -1837,46 +1703,17 @@ class Scheduler:
                 # rows flatten into a single token batch; idle slots and
                 # lane tails are inert pad rows (position -1), so every
                 # tick — pure decode included — is the same compiled step.
-                L = self.prefill_lanes
-                sids = np.zeros((nslots + L * C,), np.int32)
-                poss = np.full((nslots + L * C,), -1, np.int32)
-                ctok = np.full((L, C), self.pad_id, np.int32)
-                lrows = np.full((nslots + L,), 0, np.int32)
-                lrows[:nslots] = np.arange(nslots)
-                for j, s in enumerate(slots):
-                    if s is not None:
-                        sids[j] = j
-                        # this tick consumes tok[j] (the slot's last sampled
-                        # token) and writes its K/V at the next free row
-                        poss[j] = s.plen + s.emitted - 1
-                # split the token budget over the lanes in admission order:
-                # older lanes drain first, younger lanes take the remainder
-                avail = None if self.token_budget is None \
-                    else max(0, self.token_budget - sum(active))
-                ran: List[Tuple[int, int]] = []     # (lane index, clen)
-                for li, p in enumerate(lanes):
-                    base = nslots + li * C
-                    lrows[nslots + li] = base
-                    room = int(p.prompt.shape[0]) - p.next_start
-                    clen = min(C, room) if avail is None \
-                        else min(C, room, avail)
-                    if clen <= 0:
-                        stats.stalled_chunks += 1   # decode never waits
-                        continue
-                    if avail is not None:
-                        avail -= clen
-                    start = p.next_start
-                    ctok[li, :clen] = p.prompt[start:start + clen]
-                    sids[base:base + clen] = p.slot
-                    poss[base:base + clen] = np.arange(start, start + clen)
-                    lrows[nslots + li] = base + clen - 1
-                    if alloc is not None:
-                        # ragged lanes write exactly their clen valid rows
-                        # (pads are inert): none may go through a shared
-                        # mapping (COW ran at admission)
-                        self._assert_private_write(
-                            slot_pages[p.slot], start, start + clen, alloc)
-                    ran.append((li, clen))
+                rt = assemble_ragged_tick(
+                    slots, lanes, nslots=nslots, n_lanes=self.prefill_lanes,
+                    chunk=C, pad_id=self.pad_id,
+                    token_budget=self.token_budget, n_active=sum(active),
+                    assert_private=(
+                        (lambda sj, lo, hi: self._assert_private_write(
+                            slot_pages[sj], lo, hi, alloc))
+                        if alloc is not None else None))
+                stats.stalled_chunks += rt.stalled  # decode never waits
+                ctok, sids, poss, lrows = rt.ctok, rt.sids, rt.poss, rt.lrows
+                ran = rt.ran
                 if self.audit:
                     tok, firsts, ok, cache = self._masked_ragged(
                         eng.params, tok, cache, sub, active_dev,
@@ -2050,6 +1887,22 @@ class Scheduler:
                             page_size=eng.page_size)
                 check_swap(swap, [(p_.slot.req.rid, p_.data)
                                   for p_ in preempted])
+                if self._has_recurrent:
+                    # dead slots must hold exactly-zero recurrent rows —
+                    # any leak through merge_inactive decodes garbage for
+                    # the NEXT occupant, so catch it the tick it happens
+                    live_rec = {j_ for j_, s_ in enumerate(slots)
+                                if s_ is not None}
+                    live_rec |= {p_.slot for p_ in lanes}
+                    check_recurrent_rows(cache, live_rec)
+                if self._cross_cached:
+                    want_xl = {j_: int(enc_of[s_.req.rid].shape[1])
+                               for j_, s_ in enumerate(slots)
+                               if s_ is not None}
+                    for p_ in lanes:
+                        want_xl[p_.slot] = int(
+                            enc_of[p_.req.rid].shape[1])
+                    check_cross_lens(cache, want_xl)
                 stats.audited_ticks += 1
         stats.steady_s = time.perf_counter() - t0
         stats.num_jit_compiles = self._count_jit_compiles()

@@ -97,9 +97,12 @@ def test_encdec_decode_positions_advance(whisper):
 
 
 def test_encdec_one_shot_admission_raises(whisper):
+    """One-shot admission prefills in a scratch cache without the request's
+    encoder output or cross-attention K/V — the construction-time error must
+    say so and name the chunked remedy."""
     cfg, model, params = whisper
     eng = ServeEngine(model=model, params=params, max_len=16, batch_slots=1)
-    with pytest.raises(NotImplementedError, match="EncDec"):
+    with pytest.raises(ValueError, match="chunked admission.*chunk_size"):
         eng.scheduler()                  # no chunk_size = one-shot admission
 
 

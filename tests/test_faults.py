@@ -26,6 +26,14 @@ def smoke_lm():
     return cfg, model, params
 
 
+@pytest.fixture(scope="module")
+def ssm_lm():
+    cfg = get_config("mamba-130m-smoke")
+    model = cfg.build(dtype=jnp.float32, remat="off")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
 def _engine(model, params, **kw):
     kw.setdefault("max_len", 48)
     kw.setdefault("batch_slots", 4)
@@ -289,6 +297,29 @@ def test_nan_sentinel_evicts_exactly_the_poisoned_slot(smoke_lm):
     assert len(failed) == 1 and st.nan_evictions == 1
     v = failed[0]
     # the poisoned step's garbage token is never recorded
+    assert got[v].tokens == base[v].tokens[:len(got[v].tokens)]
+    assert len(got[v].tokens) < len(base[v].tokens)
+    for r in reqs:
+        if r.rid != v:
+            assert got[r.rid].tokens == base[r.rid].tokens
+    assert st.audited_ticks > 0 and st.failed == 1
+
+
+def test_nan_sentinel_on_ssm_state(ssm_lm):
+    """NaN injection against a recurrent (mamba) slot: the sentinel evicts
+    exactly the poisoned slot, its zeroed recurrent rows pass the per-tick
+    ``check_recurrent_rows`` audit, and the survivors stay token-identical."""
+    cfg, model, params = ssm_lm
+    reqs = _workload(cfg.vocab, n_requests=3, plen=8, max_new=10, spacing=0)
+    eng = _engine(model, params, max_len=24, batch_slots=3)
+    sched = lambda: eng.scheduler(chunk_size=4, audit=True)  # noqa: E731
+    base, base_st = sched().run(reqs)
+    assert base_st.state_kinds == "recurrent"
+    assert base_st.audited_ticks > 0
+    got, st = sched().run(reqs, fault_plan=FaultPlan(nan={5: 1}))
+    failed = [r for r in got if got[r].status == "failed"]
+    assert len(failed) == 1 and st.nan_evictions == 1
+    v = failed[0]
     assert got[v].tokens == base[v].tokens[:len(got[v].tokens)]
     assert len(got[v].tokens) < len(base[v].tokens)
     for r in reqs:
